@@ -1,0 +1,204 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Scale honesty (DESIGN.md §8): the paper runs 1M x 128-768d on NVMe with
+16 vCPUs; this container is one CPU core, so defaults are 20k x 32d.
+Relative claims (UBIS vs SPFresh on recall/TPS, distribution shapes,
+parameter trade-offs) are the reproduction target.  ``--full`` scales up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (UBISConfig, UBISDriver, brute_force, metrics,
+                        state_memory_bytes)
+from repro.data import DriftingVectorStream, StaticVectorSet
+
+
+@dataclasses.dataclass
+class BenchScale:
+    n: int = 20000
+    dim: int = 32
+    batches: int = 10
+    queries: int = 128
+    k: int = 10
+    max_postings: int = 2048
+    seed: int = 0
+
+
+QUICK = BenchScale(n=8000, batches=8, queries=96, max_postings=1024)
+FULL = BenchScale(n=100000, dim=64, batches=20, queries=256,
+                  max_postings=8192)
+
+
+def make_cfg(scale: BenchScale, mode: str, balance_factor: float = 0.15):
+    return UBISConfig(dim=scale.dim, max_postings=scale.max_postings,
+                      capacity=96, l_min=10, l_max=80,
+                      balance_factor=balance_factor,
+                      cache_capacity=4096, max_ids=1 << 21,
+                      use_pallas="off", mode=mode)
+
+
+def make_driver(scale: BenchScale, mode: str, seed_vectors,
+                balance_factor: float = 0.15, round_size: int = 512,
+                bg_ops: int = 8, fg_threads: int = 1):
+    """fg_threads models the paper's foreground thread count: the
+    foreground round budget per tick is fg_threads * round_size.
+
+    mode "freshdiskann" builds the graph-based comparison baseline."""
+    if mode == "freshdiskann":
+        from repro.core.freshdiskann import FreshDiskANN, GraphConfig
+        gcfg = GraphConfig(dim=scale.dim,
+                           max_nodes=max(2 * scale.n, 4096),
+                           degree=24, beam=40)
+        seed_ids = np.arange(10 ** 7, 10 ** 7 + len(seed_vectors))
+        return FreshDiskANN(gcfg, seed_vectors, seed_ids)
+    cfg = make_cfg(scale, mode, balance_factor)
+    return UBISDriver(cfg, seed_vectors, round_size=round_size,
+                      bg_ops_per_round=bg_ops, seed=scale.seed)
+
+
+def eval_recall(drv, queries: np.ndarray, k: int,
+                stream_vecs=None, stream_ids=None) -> float:
+    """Recall vs. ground truth.
+
+    With (stream_vecs, stream_ids): truth = exact k-NN over EVERYTHING
+    streamed so far (paper semantics — an index that rejected/blocked
+    fresh vectors pays for them in recall).  Otherwise truth = the
+    index's own live contents."""
+    found, _ = drv.search(queries, k)
+    if stream_vecs is not None:
+        d2 = ((queries[:, None, :].astype(np.float32)
+               - stream_vecs[None]) ** 2).sum(-1)
+        order = np.argsort(d2, axis=1)[:, :k]
+        true = np.asarray(stream_ids)[order]
+        return metrics.recall_at_k(found, true)
+    if isinstance(drv, UBISDriver):
+        true, _ = brute_force(drv.state, drv.cfg, jnp.asarray(queries), k)
+        return metrics.recall_at_k(found, np.asarray(true))
+    valid = np.asarray(drv.state.valid)
+    ids = np.asarray(drv.state.ids)
+    vecs = np.asarray(drv.state.vectors)
+    live = np.flatnonzero(valid)
+    d2 = ((queries[:, None, :] - vecs[live][None]) ** 2).sum(-1)
+    order = np.argsort(d2, axis=1)[:, :k]
+    true = ids[live][order]
+    return metrics.recall_at_k(found, true)
+
+
+def streaming_run(scale: BenchScale, mode: str,
+                  dataset: str = "drift",
+                  balance_factor: float = 0.15,
+                  bg_ops: int = 8,
+                  per_batch_eval: bool = True) -> List[Dict]:
+    """The paper's *streaming update* workload: feed batches, evaluate
+    after each (recall, TPS, QPS, memory, posting CDF stats)."""
+    if dataset == "drift":
+        stream = DriftingVectorStream(dim=scale.dim, seed=scale.seed)
+        batches = [stream.next_batch(scale.n // scale.batches)
+                   for _ in range(scale.batches)]
+        queries = stream.queries(scale.queries)
+    else:
+        sset = StaticVectorSet(n=scale.n, dim=scale.dim, seed=scale.seed)
+        batches = [v for _, v in sset.batches(scale.batches)]
+        queries = sset.queries(scale.queries)
+
+    seed_vecs = batches[0]
+    drv = make_driver(scale, mode, seed_vecs, balance_factor,
+                      bg_ops=bg_ops)
+    is_ubis_driver = isinstance(drv, UBISDriver)
+    # warm up compile paths outside timed regions
+    drv.search(queries[:8], scale.k)
+    records = []
+    next_id = 0
+    seen_v, seen_i = [], []
+    for bi, batch in enumerate(batches):
+        ids = np.arange(next_id, next_id + len(batch))
+        next_id += len(batch)
+        seen_v.append(batch)
+        seen_i.append(ids)
+        t0 = time.perf_counter()
+        r = drv.insert(batch, ids)
+        # background phases run continuously in the paper (4 threads);
+        # give both modes the same bounded budget per batch
+        drv.flush(max_ticks=6)
+        t_upd = time.perf_counter() - t0
+        rec = {}
+        if per_batch_eval:
+            t0 = time.perf_counter()
+            recall = eval_recall(drv, queries, scale.k,
+                                 np.concatenate(seen_v),
+                                 np.concatenate(seen_i))
+            # timed pure-search pass for QPS / P99
+            lat = []
+            for off in range(0, len(queries), 32):
+                t1 = time.perf_counter()
+                drv.search(queries[off:off + 32], scale.k)
+                lat.append((time.perf_counter() - t1) / 32)
+            qps = 1.0 / np.mean(lat)
+            p99 = float(np.percentile(np.repeat(lat, 32), 99) * 1e3)
+            rec.update(recall=recall, qps=qps, p99_ms=p99)
+        lens = _posting_lengths(drv) if is_ubis_driver else np.array([])
+        mem = (state_memory_bytes(drv.state) if is_ubis_driver
+               else drv.memory_bytes())
+        rec.update(
+            batch=bi,
+            tps=(r["accepted"] + r["cached"]) / t_upd,
+            accepted=r["accepted"], cached=r["cached"],
+            rejected=r["rejected"],
+            memory_mb=mem / 2 ** 20,
+            n_postings=len(lens),
+            small_frac=float((lens < drv.cfg.l_min).mean()) if len(lens)
+            else 0.0,
+            median_len=int(np.median(lens)) if len(lens) else 0,
+        )
+        records.append(rec)
+    drv.flush(max_ticks=40)
+    records[-1]["final_recall"] = eval_recall(
+        drv, queries, scale.k, np.concatenate(seen_v),
+        np.concatenate(seen_i))
+    return records
+
+
+def _posting_lengths(drv: UBISDriver) -> np.ndarray:
+    from repro.core import version_manager as vm
+    status = np.asarray(vm.unpack_status(drv.state.rec_meta))
+    alive = np.asarray(drv.state.allocated) & (status != 3)
+    lens = np.asarray(drv.state.lengths)[alive]
+    return lens[lens > 0]
+
+
+def full_update_run(scale: BenchScale, mode: str,
+                    dataset: str = "static") -> Dict:
+    """The paper's *full update* workload (Table IV): append everything,
+    then measure the final index."""
+    sset = StaticVectorSet(n=scale.n, dim=scale.dim, seed=scale.seed)
+    queries = sset.queries(scale.queries)
+    drv = make_driver(scale, mode, sset.vectors[:2000])
+    drv.search(queries[:8], scale.k)  # warm up
+    t0 = time.perf_counter()
+    r = drv.insert(sset.vectors, np.arange(scale.n))
+    drv.flush(max_ticks=100)
+    t_upd = time.perf_counter() - t0
+    recall = eval_recall(drv, queries, scale.k, sset.vectors,
+                         np.arange(scale.n))
+    lat = []
+    for off in range(0, len(queries), 32):
+        t1 = time.perf_counter()
+        drv.search(queries[off:off + 32], scale.k)
+        lat.append((time.perf_counter() - t1) / 32)
+    mem = (state_memory_bytes(drv.state) if isinstance(drv, UBISDriver)
+           else drv.memory_bytes())
+    return {
+        "mode": mode,
+        "recall": recall,
+        "tps": (r["accepted"] + r["cached"]) / t_upd,
+        "rejected": r["rejected"],
+        "memory_mb": mem / 2 ** 20,
+        "qps": 1.0 / np.mean(lat),
+        "p99_ms": float(np.percentile(np.repeat(lat, 32), 99) * 1e3),
+    }

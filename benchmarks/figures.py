@@ -1,0 +1,120 @@
+"""One function per paper table/figure (deliverable d).
+
+Each returns a list of CSV-able dict rows and is exposed through
+``benchmarks.run``.  Scale flags: quick (default) / full.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from .common import (QUICK, BenchScale, full_update_run, make_driver,
+                     streaming_run, eval_recall, _posting_lengths)
+
+
+def fig5_posting_cdf(scale: BenchScale = QUICK) -> List[Dict]:
+    """Paper Fig. 5: posting-length distribution across update batches —
+    SPFresh's small-posting accumulation vs UBIS."""
+    rows = []
+    for mode in ("spfresh", "ubis"):
+        recs = streaming_run(scale, mode, dataset="drift",
+                             per_batch_eval=False)
+        for r in recs:
+            rows.append({"figure": "fig5", "mode": mode,
+                         "batch": r["batch"],
+                         "small_frac": round(r["small_frac"], 4),
+                         "median_len": r["median_len"],
+                         "n_postings": r["n_postings"]})
+    return rows
+
+
+def fig6_streaming_recall(scale: BenchScale = QUICK) -> List[Dict]:
+    """Paper Fig. 6: per-batch search accuracy + memory, streaming."""
+    rows = []
+    for dataset in ("drift", "static"):
+        for mode in ("freshdiskann", "spfresh", "ubis"):
+            recs = streaming_run(scale, mode, dataset=dataset)
+            for r in recs:
+                rows.append({"figure": "fig6", "dataset": dataset,
+                             "mode": mode, "batch": r["batch"],
+                             "recall": round(r.get("recall", -1), 4),
+                             "memory_mb": round(r["memory_mb"], 1)})
+    return rows
+
+
+def fig7_streaming_throughput(scale: BenchScale = QUICK) -> List[Dict]:
+    """Paper Fig. 7: per-batch update TPS + search QPS, streaming."""
+    rows = []
+    for mode in ("freshdiskann", "spfresh", "ubis"):
+        recs = streaming_run(scale, mode, dataset="drift")
+        for r in recs:
+            rows.append({"figure": "fig7", "mode": mode,
+                         "batch": r["batch"],
+                         "tps": round(r["tps"], 1),
+                         "qps": round(r.get("qps", -1), 1),
+                         "p99_ms": round(r.get("p99_ms", -1), 2),
+                         "rejected": r["rejected"]})
+    return rows
+
+
+def table4_full_update(scale: BenchScale = QUICK) -> List[Dict]:
+    """Paper Table IV: full-update workload, final metrics."""
+    rows = []
+    for mode in ("freshdiskann", "spfresh", "ubis"):
+        r = full_update_run(scale, mode)
+        r["figure"] = "table4"
+        r = {k: (round(v, 3) if isinstance(v, float) else v)
+             for k, v in r.items()}
+        rows.append(r)
+    return rows
+
+
+def fig8_fg_bg_ratio(scale: BenchScale = QUICK) -> List[Dict]:
+    """Paper Fig. 8: foreground/background resource ratio.
+
+    Threads -> phase budgets (DESIGN.md §2): foreground budget is the
+    jobs/round; background budget is bg ops/tick.  Sweep the ratio."""
+    import time
+    from repro.data import DriftingVectorStream
+    rows = []
+    for fg, bg in [(1, 1), (1, 2), (1, 4), (1, 8), (2, 8), (4, 8)]:
+        stream = DriftingVectorStream(dim=scale.dim, seed=scale.seed)
+        batches = [stream.next_batch(scale.n // scale.batches)
+                   for _ in range(scale.batches)]
+        queries = stream.queries(scale.queries)
+        drv = make_driver(scale, "ubis", batches[0],
+                          round_size=256 * fg, bg_ops=bg)
+        drv.search(queries[:8], scale.k)
+        nid = 0
+        t0 = time.perf_counter()
+        n_ins = 0
+        for b in batches:
+            r = drv.insert(b, np.arange(nid, nid + len(b)))
+            nid += len(b)
+            n_ins += r["accepted"] + r["cached"]
+            drv.tick()
+        tps = n_ins / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        drv.search(queries, scale.k)
+        qps = scale.queries / (time.perf_counter() - t0)
+        rec = eval_recall(drv, queries, scale.k)
+        rows.append({"figure": "fig8", "fg": fg, "bg": bg,
+                     "tps": round(tps, 1), "qps": round(qps, 1),
+                     "recall": round(rec, 4)})
+    return rows
+
+
+def fig9_balance_factor(scale: BenchScale = QUICK) -> List[Dict]:
+    """Paper Fig. 9: balance-factor sweep (recall up, QPS down)."""
+    import time
+    rows = []
+    for f in (0.0, 0.05, 0.1, 0.15, 0.25, 0.4):
+        recs = streaming_run(scale, "ubis", dataset="drift",
+                             balance_factor=f)
+        last = recs[-1]
+        rows.append({"figure": "fig9", "balance_factor": f,
+                     "recall": round(last.get("recall", -1), 4),
+                     "qps": round(last.get("qps", -1), 1),
+                     "small_frac": round(last["small_frac"], 4)})
+    return rows

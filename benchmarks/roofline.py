@@ -1,0 +1,161 @@
+"""Roofline analysis (deliverable g).
+
+For every (arch x shape) cell on the single-pod production mesh, derive
+the three roofline terms from compiled dry-run artifacts:
+
+    compute    = HLO_FLOPs   / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes   / (chips * 819e9   B/s HBM)
+    collective = coll_bytes  / (chips * 50e9    B/s per ICI link)
+
+Method note (EXPERIMENTS.md §Roofline): XLA's cost analysis counts a
+``while``-loop (lax.scan) body ONCE, so scan-based full-depth compiles
+under-report per-layer work.  We therefore compile two small-depth
+variants with the layer scans **unrolled** (exact counts) and linearly
+extrapolate to full depth:
+
+    cost(L) = cost(d1) + (cost(d2) - cost(d1)) * (L - d1) / (d2 - d1)
+
+which is exact because every segment's per-layer cost is
+depth-independent.  cost_analysis numbers are per-device (the compiled
+module is the SPMD per-device program); collective bytes are summed
+output sizes of collective ops in the compiled per-device HLO.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip (v5e)
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link (conservative single-link)
+
+# depth variants that preserve segment structure (see docstring)
+DEPTH_VARIANTS = {
+    "seamless-m4t-medium": (1, 2),   # scales encoder+decoder together
+    "tinyllama-1.1b": (1, 2),
+    "qwen3-4b": (1, 2),
+    "gemma3-4b": (6, 12),            # one/two 5L:1G periods
+    "deepseek-67b": (1, 2),
+    "rwkv6-3b": (1, 2),
+    "granite-moe-3b-a800m": (1, 2),
+    "moonshot-v1-16b-a3b": (1, 2),
+    "llava-next-34b": (1, 2),
+    "jamba-1.5-large-398b": (8, 16),  # one/two hybrid periods
+}
+
+
+def _overrides_for(arch: str, depth: int) -> Dict:
+    ov: Dict = {"n_layers": depth}
+    if arch == "seamless-m4t-medium":
+        ov["encoder_layers"] = depth
+    return ov
+
+
+def _extrapolate(r1: Dict, r2: Dict, d1: int, d2: int, L: int) -> Dict:
+    out = {}
+    for key in ("hlo_flops", "hlo_bytes"):
+        a, b = r1.get(key, 0.0), r2.get(key, 0.0)
+        out[key] = a + (b - a) * (L - d1) / (d2 - d1)
+    coll = {}
+    ops = set(r1.get("collective_bytes", {})) | set(
+        r2.get("collective_bytes", {}))
+    for op in ops:
+        a = r1.get("collective_bytes", {}).get(op, 0)
+        b = r2.get("collective_bytes", {}).get(op, 0)
+        coll[op] = max(0.0, a + (b - a) * (L - d1) / (d2 - d1))
+    out["collective_bytes"] = coll
+    return out
+
+
+def model_flops(arch: str, cell_name: str) -> float:
+    """MODEL_FLOPS: the classic useful-work estimate.
+
+    6*N*D (train) / 2*N*D (inference) per token over *active, matmul*
+    params — i.e. embedding gathers excluded, MoE experts counted top_k
+    of num_experts, the unembedding head charged only for positions that
+    actually produce logits (1 per sequence in prefill/decode), and
+    encoder params (enc-dec) charged for encoder tokens only."""
+    from repro.models import SHAPE_CELLS, get_model
+    from repro.models.registry import ENC_SRC_LEN
+    import jax
+    import jax.tree_util as jtu
+    model = get_model(arch)
+    cfg = model.cfg
+    pv, _ = model.param_shapes(None)
+    n_emb = cfg.vocab_padded * cfg.d_model
+    n_head = 0 if cfg.tie_embeddings else n_emb
+    n_body = n_enc = 0
+    for path, leaf in jtu.tree_flatten_with_path(pv)[0]:
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if keys in ("emb", "head"):
+            continue
+        size = int(leaf.size)
+        if cfg.moe is not None and "moe" in keys and (
+                "w_gate" in keys or "w_up" in keys or "w_down" in keys):
+            size = size * cfg.moe.top_k // cfg.moe.num_experts
+        if keys.startswith("enc/"):
+            n_enc += size
+        else:
+            n_body += size
+    if cfg.tie_embeddings:
+        n_head = n_emb  # tied head still does the logits matmul
+    cell = SHAPE_CELLS[cell_name]
+    B = cell.global_batch
+    if cell.kind == "train":
+        tok = cell.seq_len * B
+        f = 6.0 * n_body * tok + 6.0 * n_head * tok
+        f += 6.0 * n_enc * ENC_SRC_LEN * B
+        return f
+    if cell.kind == "prefill":
+        tok = cell.seq_len * B
+        f = 2.0 * n_body * tok + 2.0 * n_head * B  # logits: last pos only
+        f += 2.0 * n_enc * ENC_SRC_LEN * B
+        return f
+    # decode: one token per sequence; the cache-attention flops are NOT
+    # "model flops" — a low ratio here correctly flags decode as
+    # cache-bound, not wasteful.
+    return 2.0 * (n_body + n_head) * B
+
+
+def roofline_terms(rec: Dict, n_devices: int) -> Dict:
+    flops = rec.get("hlo_flops", 0.0)
+    bytes_ = rec.get("hlo_bytes", 0.0)
+    coll = sum(rec.get("collective_bytes", {}).values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / LINK_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom[1],
+        "roofline_frac": (max(t_compute, 1e-30)
+                          / max(t_compute, t_memory, t_coll, 1e-30)),
+    }
+
+
+def analyze_cell(arch: str, cell: str, mesh, remat: str = "full",
+                 rules_override: Optional[dict] = None) -> Dict:
+    """Two unrolled small-depth compiles -> extrapolated full-depth
+    roofline record (per-device costs)."""
+    from repro.launch.dryrun import lower_cell
+    from repro.models import get_config
+    d1, d2 = DEPTH_VARIANTS[arch]
+    r1 = lower_cell(arch, cell, mesh, remat=remat, unroll=True,
+                    rules_override=rules_override,
+                    **_overrides_for(arch, d1))
+    r2 = lower_cell(arch, cell, mesh, remat=remat, unroll=True,
+                    rules_override=rules_override,
+                    **_overrides_for(arch, d2))
+    L = get_config(arch).n_layers
+    rec = _extrapolate(r1, r2, d1, d2, L)
+    rec.update(arch=arch, cell=cell,
+               mesh="x".join(str(s) for s in mesh.devices.shape),
+               n_devices=int(mesh.devices.size))
+    rec.update(roofline_terms(rec, rec["n_devices"]))
+    mf = model_flops(arch, cell)
+    rec["model_flops_global"] = mf
+    hlo_global = rec["hlo_flops"] * rec["n_devices"]
+    rec["useful_ratio"] = mf / hlo_global if hlo_global else 0.0
+    return rec

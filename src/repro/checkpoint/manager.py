@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Properties required at fleet scale (DESIGN.md §7):
+  * atomic   — write to ``step_XXXX.tmp`` then rename; a crash mid-write
+               never corrupts the latest checkpoint;
+  * async    — serialization runs on a background thread so the train
+               loop keeps stepping (one outstanding save at a time);
+  * keep-N   — bounded disk usage;
+  * elastic  — checkpoints store *global* (host-assembled) arrays keyed
+               by tree path, so a restore may target a different mesh /
+               device count / sharding than the save (reshard-on-load);
+  * resumable data — the data-pipeline cursor and python RNG state ride
+               along, so a replacement host resumes mid-epoch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(tree, path: str, extra: Optional[dict] = None):
+    """Atomic single-file save (npz + pickled treedef + extras)."""
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    with open(tmp + ".meta", "wb") as f:
+        pickle.dump({"treedef_repr": str(treedef),
+                     "keys": sorted(flat.keys()),
+                     "extra": extra or {}}, f)
+    os.replace(tmp + ".meta", path + ".meta")
+    os.replace(tmp, path)
+
+
+def restore_pytree(template, path: str, *, shardings=None):
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional tree of NamedShardings — arrays are placed
+    (and thereby resharded) onto the *current* mesh, which may differ
+    from the mesh at save time (elastic restore).
+    """
+    data = np.load(path)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = ["/".join(_path_str(q) for q in p) for p, _ in leaves_p]
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(keys))
+    out = []
+    for key, (path_, tmpl), sh in zip(keys, leaves_p, shard_leaves):
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"checkpoint/template shape mismatch at {key}: "
+                f"{arr.shape} vs {tmpl.shape}")
+        arr = arr.astype(tmpl.dtype)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    with open(path + ".meta", "rb") as f:
+        meta = pickle.load(f)
+    return jax.tree_util.tree_unflatten(treedef, out), meta.get("extra", {})
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and not name.endswith(".tmp"):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, extra: Optional[dict] = None):
+        """Async (default) atomic save; blocks only if a save is already
+        in flight (bounded staleness of one)."""
+        self.wait()
+        # device_get on the caller thread (cheap on CPU; on TPU this is
+        # the D2H copy) so the background thread only does file IO.
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_pytree(host_tree, self._path(step), extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore_latest(self, template, *, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None, {}
+        tree, extra = restore_pytree(template, self._path(step),
+                                     shardings=shardings)
+        return step, tree, extra
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            for suffix in ("", ".meta"):
+                try:
+                    os.remove(self._path(s) + suffix)
+                except OSError:
+                    pass

@@ -1,0 +1,13 @@
+"""gemma3-4b [dense]: 5:1 local:global interleave, 128k context
+[hf:google/gemma-3-1b-pt].  Sliding window 1024 on local layers; tied
+embeddings; head_dim 256.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b", family="dense",
+    n_layers=34, d_model=2560, n_heads=8, n_kv=4,
+    d_ff=10240, vocab=262144, head_dim=256,
+    sliding_window=1024, local_global_pattern="LLLLLG",
+    tie_embeddings=True, rope_theta=1e6,
+)

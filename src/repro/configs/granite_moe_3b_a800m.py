@@ -1,0 +1,11 @@
+"""granite-moe-3b-a800m [moe]: 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base].  d_ff=512 per expert.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv=8,
+    d_ff=512, vocab=49155,
+    moe=MoEConfig(num_experts=40, top_k=8, d_ff_expert=512),
+)

@@ -1,0 +1,15 @@
+"""jamba-1.5-large-398b [hybrid]: Mamba+attention 1:7 interleave, MoE
+16 experts top-2 [arXiv:2403.19887].  72 layers = 9 periods of 8
+(attention at period position 4, MoE every 2nd layer).
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv=8,
+    d_ff=24576, vocab=65536, head_dim=128,
+    attn_every_k=8,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=24576,
+                  every_k_layers=2),
+    mamba_d_state=16, mamba_expand=2, mamba_conv=4,
+)

@@ -1,0 +1,12 @@
+"""llava-next-34b [vlm]: anyres tiling [hf:llava-hf/llava-v1.6].
+
+Backbone only; the vision frontend is a STUB — input_specs provides
+precomputed patch embeddings (prefix_len tokens).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv=8,
+    d_ff=20480, vocab=64000, head_dim=128, prefix_len=1152,
+)

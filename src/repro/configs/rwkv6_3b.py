@@ -1,0 +1,8 @@
+"""rwkv6-3b [ssm]: Finch — data-dependent decay [arXiv:2404.05892]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=0, n_kv=0,
+    d_ff=8960, vocab=65536, rwkv_head_dim=64,
+)

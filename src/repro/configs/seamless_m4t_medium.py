@@ -1,0 +1,12 @@
+"""seamless-m4t-medium [audio]: enc-dec multimodal [arXiv:2308.11596].
+
+12L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=256206.  The audio
+frontend is a STUB: input_specs provides precomputed frame embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=12, d_model=1024, n_heads=16, n_kv=16,
+    d_ff=4096, vocab=256206, encoder_layers=12,
+)

@@ -1,0 +1,16 @@
+"""UBIS core: updatable balanced cluster index (the paper's contribution)."""
+from .types import (IndexState, RoundResult, UBISConfig, empty_state,
+                    state_memory_bytes, STATUS_NORMAL, STATUS_SPLITTING,
+                    STATUS_MERGING, STATUS_DELETED)
+from .driver import UBISDriver
+from .search import search, brute_force
+from .build import initial_state, kmeans
+from . import balance, update, version_manager, metrics
+
+__all__ = [
+    "IndexState", "RoundResult", "UBISConfig", "empty_state",
+    "state_memory_bytes", "UBISDriver", "search", "brute_force",
+    "initial_state", "kmeans", "balance", "update", "version_manager",
+    "metrics", "STATUS_NORMAL", "STATUS_SPLITTING", "STATUS_MERGING",
+    "STATUS_DELETED",
+]

@@ -1,0 +1,406 @@
+"""Balance Detector + structural background operations (paper IV-C).
+
+Key contribution of the paper: SPFresh's strict split/merge triggers
+leave small postings stranded (Fig. 5); UBIS (a) *relaxes restrictions*
+by keeping posting lengths in memory and scanning them periodically,
+and (b) *identifies the root* — splits that produce an extremely small
+side — via the balance factor ``f`` (Alg. 1 BalanceSplit).
+
+All ops here are single-posting jitted transforms (the background
+'thread pool'); the driver sequences them, two-phase:
+  round t   : mark SPLITTING/MERGING  (foreground traffic diverts to cache)
+  round t+1 : execute; old posting -> DELETED with successor pointers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..kernels.posting_scan import BIG
+from . import version_manager as vm
+from .types import (NO_ID, STATUS_DELETED, STATUS_NORMAL, IndexState,
+                    UBISConfig)
+from .update import (alloc_postings, batched_append, cache_append,
+                     dataclasses_replace, free_postings, oob, _flat_set)
+
+
+# ---------------------------------------------------------------------------
+# detection (the in-memory length table scan)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def detect(state: IndexState, cfg: UBISConfig):
+    """Vectorized scan of the posting-length table.
+
+    Returns (split_due, merge_due, compact_due) boolean masks over M.
+    """
+    status = vm.unpack_status(state.rec_meta)
+    normal = state.allocated & (status == STATUS_NORMAL)
+    split_due = normal & (state.lengths > cfg.l_max)
+    merge_due = normal & (state.lengths < cfg.l_min)
+    compact_due = (normal & (state.used >= cfg.capacity)
+                   & (state.lengths <= cfg.l_max))
+    return split_due, merge_due, compact_due
+
+
+# ---------------------------------------------------------------------------
+# masked 2-means (the split clustering step)
+# ---------------------------------------------------------------------------
+
+def _median_bisect(tile, mask):
+    """Deterministic balanced bisection: split the valid rows at the
+    median of the maximum-variance axis (ties broken by rank, so the two
+    sides differ by at most one point).  Used (a) to initialise 2-means
+    and (b) as the termination guard when Lloyd collapses to an
+    outlier-vs-rest split — a failure mode the paper's Alg. 1 does not
+    handle (it would re-split the oversized survivor forever).
+    """
+    C = tile.shape[0]
+    x = tile.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(mask), 1)
+    mean = jnp.sum(jnp.where(mask[:, None], x, 0), 0) / n
+    var = jnp.sum(jnp.where(mask[:, None], (x - mean) ** 2, 0), 0)
+    axis = jnp.argmax(var)
+    vals = jnp.where(mask, x[:, axis], BIG)
+    order = jnp.argsort(vals)            # valid rows first, ascending
+    rank = jnp.zeros((C,), jnp.int32).at[order].set(
+        jnp.arange(C, dtype=jnp.int32))
+    assign = jnp.where(mask, (rank >= (n + 1) // 2).astype(jnp.int32), -1)
+    return assign
+
+
+def _two_means(tile, mask, iters: int, init: str = "median"):
+    """2-means over the valid rows of one posting tile.
+
+    init="median": deterministic median-split init (balanced starting
+    point that avoids outlier-capture optima) — the UBIS path.
+    init="farthest": classic farthest-point init — the SPFresh-faithful
+    path, which DOES collapse to outlier-vs-rest splits on real data;
+    that is precisely the small-posting generator behind the paper's
+    Fig. 5, so the baseline must keep it.
+    Returns (assign (C,) int32 in {0,1}, c0, c1)."""
+    x = tile.astype(jnp.float32)
+    if init == "median":
+        ini = _median_bisect(tile, mask)
+        c0 = _masked_mean(tile, (ini == 0) & mask, x[jnp.argmax(mask)])
+        c1 = _masked_mean(tile, (ini == 1) & mask, x[jnp.argmax(mask)])
+    else:
+        first = jnp.argmax(mask)
+        c0 = x[first]
+        d0 = jnp.where(mask, jnp.sum((x - c0) ** 2, -1), -BIG)
+        c1 = x[jnp.argmax(d0)]
+
+    def body(_, carry):
+        c0, c1 = carry
+        d0 = jnp.sum((x - c0) ** 2, -1)
+        d1 = jnp.sum((x - c1) ** 2, -1)
+        a = (d1 < d0).astype(jnp.int32)        # 1 -> cluster 1
+        w1 = (a == 1) & mask
+        w0 = (a == 0) & mask
+        n0 = jnp.maximum(jnp.sum(w0), 1)
+        n1 = jnp.maximum(jnp.sum(w1), 1)
+        m0 = jnp.sum(jnp.where(w0[:, None], x, 0), 0) / n0
+        m1 = jnp.sum(jnp.where(w1[:, None], x, 0), 0) / n1
+        c0 = jnp.where(jnp.any(w0), m0, c0)
+        c1 = jnp.where(jnp.any(w1), m1, c1)
+        return c0, c1
+
+    c0, c1 = jax.lax.fori_loop(0, iters, body, (c0, c1))
+    d0 = jnp.sum((x - c0) ** 2, -1)
+    d1 = jnp.sum((x - c1) ** 2, -1)
+    assign = jnp.where(mask, (d1 < d0).astype(jnp.int32), -1)
+    return assign, c0, c1
+
+
+def _masked_mean(tile, mask, fallback):
+    n = jnp.maximum(jnp.sum(mask), 1)
+    m = jnp.sum(jnp.where(mask[:, None], tile.astype(jnp.float32), 0), 0) / n
+    return jnp.where(jnp.any(mask), m, fallback)
+
+
+def _write_members(state, cfg, pid, tile, tids, member_mask):
+    """Compact ``member_mask`` rows of a source tile into posting ``pid``
+    (freshly allocated, empty).  Returns state with id_loc repointed."""
+    C = cfg.capacity
+    order = jnp.argsort(~member_mask, stable=True)   # members first
+    n = jnp.sum(member_mask)
+    in_rows = order
+    rows = tile[in_rows]
+    rids = tids[in_rows]
+    keep = jnp.arange(C) < n
+    rids = jnp.where(keep, rids, NO_ID)
+    vectors = state.vectors.at[pid].set(
+        jnp.where(keep[:, None], rows, 0).astype(state.vectors.dtype))
+    ids = state.ids.at[pid].set(rids)
+    slot_valid = state.slot_valid.at[pid].set(keep)
+    used = state.used.at[pid].set(n.astype(jnp.int32))
+    lengths = state.lengths.at[pid].set(n.astype(jnp.int32))
+    flat = pid * C + jnp.arange(C, dtype=jnp.int32)
+    id_loc = state.id_loc.at[oob(rids, keep, cfg.max_ids)].set(flat,
+                                                               mode="drop")
+    return dataclasses_replace(state, vectors=vectors, ids=ids,
+                               slot_valid=slot_valid, used=used,
+                               lengths=lengths, id_loc=id_loc)
+
+
+# ---------------------------------------------------------------------------
+# BalanceSplit — paper Algorithm 1
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def balance_split(state: IndexState, cfg: UBISConfig, pid):
+    """Split posting ``pid`` (status SPLITTING, marked a round earlier).
+
+    Follows Alg. 1: filter deleted vectors; if the filtered posting no
+    longer exceeds l_max, just compact it in place (lines 1-4).  Else run
+    2-means; in UBIS mode, if the small side is under ``f * total``,
+    reassign its points to nearer existing postings and fold the rest
+    into the big side (lines 7-15) so no small posting is ever persisted.
+    SPFresh mode keeps both sides unconditionally (the Fig. 5 failure).
+
+    Two posting slots are consumed in the worst case; the driver checks
+    ``free_top >= 2`` before scheduling.
+    """
+    C = cfg.capacity
+    tile = state.vectors[pid]
+    tids = state.ids[pid]
+    mask = state.slot_valid[pid]
+    n = state.lengths[pid]
+    ver = state.global_version + jnp.uint32(1)
+
+    assign, c0, c1 = _two_means(
+        tile, mask, cfg.kmeans_iters,
+        init="median" if cfg.is_ubis else "farthest")
+    n0 = jnp.sum((assign == 0) & mask)
+    n1 = jnp.sum((assign == 1) & mask)
+    small_is_0 = n0 <= n1
+    nmin = jnp.minimum(n0, n1)
+    ntot = jnp.maximum(n0 + n1, 1)
+
+    imbalanced = cfg.is_ubis & (
+        nmin.astype(jnp.float32) < cfg.balance_factor *
+        ntot.astype(jnp.float32))
+
+    small_side = jnp.where(small_is_0, 0, 1)
+    big_side = 1 - small_side
+    small_mask = (assign == small_side) & mask
+    big_mask = (assign == big_side) & mask
+    c_big = jnp.where(small_is_0, c1, c0)
+    c_small = jnp.where(small_is_0, c0, c1)
+
+    # --- Alg.1 lines 10-13: nearer-posting search for the small side ----
+    status = vm.unpack_status(state.rec_meta)
+    other = state.allocated & (status == STATUS_NORMAL)
+    other = other.at[pid].set(False)
+    sc = ops.centroid_score(tile.astype(jnp.float32), state.centroids, other,
+                            backend=cfg.use_pallas)           # (C, M)
+    best_other = jnp.argmin(sc, -1).astype(jnp.int32)
+    best_d = jnp.min(sc, -1)
+    d_big = (jnp.sum(tile.astype(jnp.float32) ** 2, -1)
+             - 2 * tile.astype(jnp.float32) @ c_big
+             + jnp.sum(c_big ** 2))
+    # score convention: sc already excludes ||p||^2, so compare apples:
+    d_big_score = d_big - jnp.sum(tile.astype(jnp.float32) ** 2, -1)
+    move_out = imbalanced & small_mask & (best_d < d_big_score)
+    fold_in = imbalanced & small_mask & ~(best_d < d_big_score)
+
+    # membership of the surviving side(s)
+    members_a = jnp.where(imbalanced, big_mask | fold_in, big_mask)
+    members_b = jnp.where(imbalanced, jnp.zeros_like(small_mask), small_mask)
+
+    # --- termination guard (beyond-paper robustness, DESIGN.md §1) ------
+    # If either surviving side still exceeds l_max (Lloyd collapsed to an
+    # outlier-vs-rest split and the fold-in restored the oversize), the
+    # paper's Alg. 1 would re-split that survivor forever.  Fall back to
+    # the deterministic median bisection: both halves <= capacity/2 <=
+    # l_max, so every split strictly reduces posting size.
+    oversized = cfg.is_ubis & (
+        (jnp.sum(members_a) > cfg.l_max)
+        | (jnp.sum(members_b) > cfg.l_max))
+    med = _median_bisect(tile, mask)
+    med_a = (med == 0) & mask
+    med_b = (med == 1) & mask
+    members_a = jnp.where(oversized, med_a, members_a)
+    members_b = jnp.where(oversized, med_b, members_b)
+    move_out = move_out & ~oversized
+    c_big = jnp.where(oversized, _masked_mean(tile, med_a, c_big), c_big)
+    c_small = jnp.where(oversized, _masked_mean(tile, med_b, c_small),
+                        c_small)
+
+    cent_a = _masked_mean(tile, members_a, c_big)
+    cent_b = _masked_mean(tile, members_b, c_small)
+
+    # allocate both slots unconditionally (fixed shape); slot b is
+    # returned to the free list when the imbalanced branch leaves it empty.
+    state, pids_new = alloc_postings(
+        state, cfg, 2, jnp.stack([cent_a, cent_b]), ver)
+    pa, pb = pids_new[0], pids_new[1]
+    state = _write_members(state, cfg, pa, tile, tids, members_a)
+    state = _write_members(state, cfg, pb, tile, tids, members_b)
+
+    b_empty = ~jnp.any(members_b)
+    state = free_postings(state,
+                          jnp.stack([pb, jnp.asarray(-1, jnp.int32)]),
+                          jnp.array([True, False]) & b_empty)
+
+    # move-out appends (may divert to cache when targets are full)
+    state, ok, _ = batched_append(state, cfg, tile, tids,
+                                  jnp.where(move_out, best_other, -1),
+                                  move_out)
+    spill = move_out & ~ok
+    state, _ = cache_append(state, cfg, tile, tids,
+                            jnp.where(spill, best_other, -1), spill)
+
+    # retire the parent: DELETED with successor pointers
+    succ_b = jnp.where(b_empty, -1, pb)
+    rec_meta = vm.transition(state.rec_meta, pid[None], STATUS_DELETED,
+                             ver[None])
+    rec_succ = vm.set_successors(state.rec_succ, pid[None], pa[None],
+                                 succ_b[None])
+    # neighbourhood graph: children point at each other + parent's nbrs
+    pn = state.nbrs[pid]
+    nbrs = state.nbrs.at[pa].set(
+        jnp.concatenate([jnp.where(b_empty, pa, pb)[None], pn[:-1]]))
+    nbrs = nbrs.at[pb].set(jnp.concatenate([pa[None], pn[:-1]]))
+    state = dataclasses_replace(state, rec_meta=rec_meta, rec_succ=rec_succ,
+                                nbrs=nbrs, global_version=ver)
+    return state, pids_new
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def compact_posting(state: IndexState, cfg: UBISConfig, pid):
+    """Alg. 1 lines 1-4: drop tombstones, rewrite in place."""
+    tile = state.vectors[pid]
+    tids = state.ids[pid]
+    mask = state.slot_valid[pid]
+    state = _write_members(state, cfg, pid, tile, tids, mask)
+    return dataclasses_replace(
+        state, global_version=state.global_version + jnp.uint32(1))
+
+
+# ---------------------------------------------------------------------------
+# merge (paper III-B2) — small posting folds into its nearest neighbour
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def merge_postings(state: IndexState, cfg: UBISConfig, pid):
+    """Merge posting ``pid`` with the nearest posting whose combined size
+    stays under l_max.  Produces ONE new posting; both parents retire
+    with successor pointers to it.  Consumes one slot."""
+    C = cfg.capacity
+    status = vm.unpack_status(state.rec_meta)
+    n_me = state.lengths[pid]
+    eligible = (state.allocated & (status == STATUS_NORMAL)
+                & (state.lengths + n_me < cfg.l_max))
+    eligible = eligible.at[pid].set(False)
+    sc = ops.centroid_score(state.centroids[pid][None], state.centroids,
+                            eligible, backend=cfg.use_pallas)[0]
+    partner = jnp.argmin(sc).astype(jnp.int32)
+    has_partner = sc[partner] < BIG / 2
+    ver = state.global_version + jnp.uint32(1)
+
+    t1, i1, m1 = state.vectors[pid], state.ids[pid], state.slot_valid[pid]
+    t2 = state.vectors[partner]
+    i2 = state.ids[partner]
+    m2 = state.slot_valid[partner] & has_partner
+    n1 = jnp.sum(m1)
+    n2 = jnp.sum(m2)
+    cent = (_masked_mean(t1, m1, state.centroids[pid].astype(jnp.float32))
+            * n1 + _masked_mean(t2, m2, 0.0) * n2) / jnp.maximum(n1 + n2, 1)
+
+    state, pids_new = alloc_postings(state, cfg, 1, cent[None], ver)
+    pnew = pids_new[0]
+    # write both parents' members (total < l_max <= C by eligibility)
+    order1 = jnp.argsort(~m1, stable=True)
+    order2 = jnp.argsort(~m2, stable=True)
+    rows = jnp.concatenate([t1[order1], t2[order2]])
+    rids = jnp.concatenate([i1[order1], i2[order2]])
+    keepm = jnp.concatenate([m1[order1], m2[order2]])
+    # stable-compact the concatenated members into the first n slots
+    order = jnp.argsort(~keepm, stable=True)[:C]
+    rows, rids, keepm = rows[order], rids[order], keepm[order]
+    rids = jnp.where(keepm, rids, NO_ID)
+    vectors = state.vectors.at[pnew].set(
+        jnp.where(keepm[:, None], rows, 0).astype(state.vectors.dtype))
+    ids = state.ids.at[pnew].set(rids)
+    slot_valid = state.slot_valid.at[pnew].set(keepm)
+    n = jnp.sum(keepm).astype(jnp.int32)
+    used = state.used.at[pnew].set(n)
+    lengths = state.lengths.at[pnew].set(n)
+    flat = pnew * C + jnp.arange(C, dtype=jnp.int32)
+    id_loc = state.id_loc.at[oob(rids, keepm, cfg.max_ids)].set(flat,
+                                                                mode="drop")
+    state = dataclasses_replace(state, vectors=vectors, ids=ids,
+                                slot_valid=slot_valid, used=used,
+                                lengths=lengths, id_loc=id_loc)
+
+    parents = jnp.stack([pid, jnp.where(has_partner, partner, -1)])
+    rec_meta = vm.transition(state.rec_meta, parents, STATUS_DELETED,
+                             jnp.stack([ver, ver]))
+    rec_succ = vm.set_successors(state.rec_succ, parents,
+                                 jnp.stack([pnew, pnew]),
+                                 jnp.array([-1, -1]))
+    nbrs = state.nbrs.at[pnew].set(state.nbrs[pid])
+    state = dataclasses_replace(state, rec_meta=rec_meta, rec_succ=rec_succ,
+                                nbrs=nbrs, global_version=ver)
+    return state, pnew, has_partner
+
+
+# ---------------------------------------------------------------------------
+# LIRE reassign (paper III-B2) — post split/merge closure maintenance
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def reassign_check(state: IndexState, cfg: UBISConfig, pid):
+    """For each vector of ``pid``: if a strictly nearer NORMAL posting
+    exists, move it there (append + tombstone here)."""
+    C = cfg.capacity
+    tile = state.vectors[pid].astype(jnp.float32)
+    tids = state.ids[pid]
+    mask = state.slot_valid[pid]
+    status = vm.unpack_status(state.rec_meta)
+    other = state.allocated & (status == STATUS_NORMAL)
+    other = other.at[pid].set(False)
+    sc = ops.centroid_score(tile, state.centroids, other,
+                            backend=cfg.use_pallas)
+    best_other = jnp.argmin(sc, -1).astype(jnp.int32)
+    best_d = jnp.min(sc, -1)
+    own = state.centroids[pid].astype(jnp.float32)
+    d_own = jnp.sum(own * own) - 2 * tile @ own
+    move = mask & (best_d < d_own)
+
+    state, ok, _ = batched_append(state, cfg, tile, tids,
+                                  jnp.where(move, best_other, -1), move)
+    moved = move & ok
+    # tombstone moved rows here
+    slot_valid = state.slot_valid.at[pid].set(
+        state.slot_valid[pid] & ~moved)
+    lengths = state.lengths.at[pid].add(
+        -jnp.sum(moved).astype(jnp.int32))
+    state = dataclasses_replace(
+        state, slot_valid=slot_valid, lengths=lengths,
+        global_version=state.global_version + jnp.uint32(1))
+    return state, jnp.sum(moved)
+
+
+# ---------------------------------------------------------------------------
+# epoch GC — reclaim retired postings (TPU-native RCU analogue)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def gc_round(state: IndexState, cfg: UBISConfig, min_live_version, k: int):
+    """Reclaim up to ``k`` DELETED postings whose retirement version is
+    older than the oldest live snapshot; their ids return to the free
+    list and successor words are cleared (chasers then re-locate)."""
+    status = vm.unpack_status(state.rec_meta)
+    weight = vm.unpack_weight(state.rec_meta)
+    dead = (state.allocated & (status == STATUS_DELETED)
+            & (weight < jnp.asarray(min_live_version, jnp.uint32)))
+    # pick up to k by argsort (dead first)
+    order = jnp.argsort(~dead, stable=True)[:k]
+    valid = dead[order]
+    state = free_postings(state, order.astype(jnp.int32), valid)
+    return state, jnp.sum(valid)

@@ -1,0 +1,15 @@
+"""High-Concurrency Controller (paper IV-B2) — entry-point shim.
+
+The controller is split across two layers:
+  * data plane (jitted rounds; the three status branches, conflict-free
+    scatters, the vector cache):     ``core/update.py``
+  * control plane (job queues, the two-phase SPLITTING/MERGING window,
+    cache drains, GC scheduling):    ``core/driver.py``
+This module re-exports the public pieces under the paper's name.
+"""
+from .update import (batched_append, cache_append, cache_take,
+                     delete_round, insert_round, mark_status)
+from .driver import UBISDriver
+
+__all__ = ["batched_append", "cache_append", "cache_take", "delete_round",
+           "insert_round", "mark_status", "UBISDriver"]

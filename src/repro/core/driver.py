@@ -1,0 +1,344 @@
+"""Host-side orchestration: job queues + the background scheduler.
+
+The paper's runtime is a foreground thread feeding a job queue and
+background threads executing split/merge/reassign.  Here the *data
+plane* is entirely jitted device code (update.py / balance.py /
+search.py); this module is the *control plane*: it sequences rounds,
+implements the two-phase SPLITTING/MERGING window, drains the vector
+cache, garbage-collects retired postings, and carries the accounting
+(TPS/QPS/recall inputs) the benchmarks read.
+
+Mode differences (cfg.mode):
+  * ``ubis``     — periodic balance-detector scan (relaxed restrictions),
+                   vector cache for blocked jobs, balanced splits.
+  * ``spfresh``  — strict triggers only (split on insert overflow, merge
+                   on search touching a small posting), posting-lock
+                   rejection of blocked jobs, unconditional 2-means splits.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import balance, search as search_mod, update
+from .build import initial_state
+from .types import IndexState, UBISConfig
+
+
+class UBISDriver:
+    """Streaming driver for one index instance."""
+
+    def __init__(self, cfg: UBISConfig, seed_vectors=None, *,
+                 seed: int = 0, round_size: int = 1024,
+                 bg_ops_per_round: int = 4, drain_per_tick: int = 256,
+                 insert_retries: int = 2, gc_lag: int = 16,
+                 reassign_after_split: bool = True):
+        self.cfg = cfg
+        self.round_size = int(round_size)
+        self.bg_ops = int(bg_ops_per_round)
+        self.drain_n = int(drain_per_tick)
+        self.retries = int(insert_retries)
+        self.gc_lag = int(gc_lag)
+        self.reassign_after_split = reassign_after_split
+
+        if seed_vectors is None:
+            raise ValueError("seed_vectors required (used for k-means seeds)")
+        self.state: IndexState = initial_state(
+            cfg, jnp.asarray(seed_vectors), key=jax.random.key(seed))
+        # ops marked SPLITTING/MERGING last tick, executed this tick
+        self._marked: list[tuple[str, int]] = []
+        self._marked_set: set[int] = set()
+        # SPFresh strict-trigger candidate sets
+        self._sp_split: set[int] = set()
+        self._sp_merge: set[int] = set()
+        self.stats = defaultdict(float)
+
+    # ------------------------------------------------------------------
+    # foreground
+    # ------------------------------------------------------------------
+
+    def insert(self, vecs, ids, *, tick_between: bool = True) -> dict:
+        """Stream (vecs, ids) through padded insert rounds.
+
+        Rejected jobs (SPFresh lock model / full cache) are retried up to
+        ``insert_retries`` times with a background tick in between —
+        mirroring the paper's blocked-then-retried updates; every retry
+        costs wall time, which is how contention degrades TPS.
+        """
+        vecs = np.asarray(vecs, np.float32)
+        ids = np.asarray(ids, np.int64).astype(np.int32)
+        if len(vecs) != len(ids):
+            raise ValueError(f"vecs/ids length mismatch: {len(vecs)} vs "
+                             f"{len(ids)}")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.cfg.max_ids):
+            raise ValueError("ids out of range for cfg.max_ids")
+        t0 = time.perf_counter()
+        n_acc = n_cache = n_rej = 0
+        J = self.round_size
+        pending = (vecs, ids, np.full(ids.shape, -1, np.int32))
+        for attempt in range(self.retries + 1):
+            pv, pi, ph = pending
+            rej_v, rej_i, rej_h = [], [], []
+            for off in range(0, len(pi), J):
+                cv, ci, ch = pv[off:off + J], pi[off:off + J], ph[off:off + J]
+                pad = J - len(ci)
+                valid = np.concatenate([np.ones(len(ci), bool),
+                                        np.zeros(pad, bool)])
+                cv = np.concatenate([cv, np.zeros((pad, self.cfg.dim),
+                                                  np.float32)])
+                ci = np.concatenate([ci, np.zeros(pad, np.int32)])
+                ch = np.concatenate([ch, np.full(pad, -1, np.int32)])
+                self.state, res, _touched = update.insert_round(
+                    self.state, self.cfg, jnp.asarray(cv), jnp.asarray(ci),
+                    jnp.asarray(valid), jnp.asarray(ch))
+                acc, cac, rej = (np.asarray(res.accepted),
+                                 np.asarray(res.cached),
+                                 np.asarray(res.rejected))
+                n_acc += int(acc.sum())
+                n_cache += int(cac.sum())
+                if rej.any():
+                    rej_v.append(cv[rej])
+                    rej_i.append(ci[rej])
+                    rej_h.append(np.full(int(rej.sum()), -1, np.int32))
+                if not self.cfg.is_ubis:
+                    self._note_spfresh_overflow(np.asarray(res.target)[acc])
+            if not rej_v:
+                pending = None
+                break
+            pending = (np.concatenate(rej_v), np.concatenate(rej_i),
+                       np.concatenate(rej_h))
+            if tick_between:
+                self.tick()
+        if pending is not None:
+            n_rej = len(pending[1])
+        jax.block_until_ready(self.state.lengths)
+        dt = time.perf_counter() - t0
+        self.stats["insert_time"] += dt
+        self.stats["inserted"] += n_acc + n_cache
+        self.stats["rejected"] += n_rej
+        return {"accepted": n_acc, "cached": n_cache, "rejected": n_rej,
+                "seconds": dt}
+
+    def delete(self, ids) -> dict:
+        ids = np.asarray(ids, np.int64).astype(np.int32)
+        t0 = time.perf_counter()
+        J = self.round_size
+        n_done = n_blocked = 0
+        for off in range(0, len(ids), J):
+            ci = ids[off:off + J]
+            pad = J - len(ci)
+            valid = np.concatenate([np.ones(len(ci), bool),
+                                    np.zeros(pad, bool)])
+            ci = np.concatenate([ci, np.zeros(pad, np.int32)])
+            self.state, done, blocked = update.delete_round(
+                self.state, self.cfg, jnp.asarray(ci), jnp.asarray(valid))
+            n_done += int(np.asarray(done).sum())
+            n_blocked += int(np.asarray(blocked).sum())
+        jax.block_until_ready(self.state.lengths)
+        dt = time.perf_counter() - t0
+        self.stats["delete_time"] += dt
+        self.stats["deleted"] += n_done
+        return {"deleted": n_done, "blocked": n_blocked, "seconds": dt}
+
+    def search(self, queries, k: int, nprobe: Optional[int] = None):
+        queries = jnp.asarray(np.asarray(queries, np.float32))
+        t0 = time.perf_counter()
+        found, scores, probe = search_mod.search(
+            self.state, self.cfg, queries, k, nprobe)
+        found = np.asarray(found)
+        dt = time.perf_counter() - t0
+        self.stats["search_time"] += dt
+        self.stats["queries"] += queries.shape[0]
+        if not self.cfg.is_ubis:
+            self._note_spfresh_small(np.asarray(probe))
+        return found, np.asarray(scores)
+
+    # ------------------------------------------------------------------
+    # background
+    # ------------------------------------------------------------------
+
+    def tick(self) -> dict:
+        """One background round: execute marked ops, drain the cache,
+        detect + mark new candidates, GC."""
+        t0 = time.perf_counter()
+        executed = self._execute_marked()
+        drained = self._drain_cache() if self.cfg.is_ubis else 0
+        marked = self._mark_candidates()
+        reclaimed = self._gc()
+        dt = time.perf_counter() - t0
+        self.stats["bg_time"] += dt
+        self.stats["bg_ops"] += executed
+        return {"executed": executed, "drained": drained,
+                "marked": marked, "gc": reclaimed, "seconds": dt}
+
+    def flush(self, max_ticks: int = 200) -> int:
+        """Tick until quiescent (no marked ops, no due candidates, cache
+        empty).  Returns number of ticks."""
+        for i in range(max_ticks):
+            r = self.tick()
+            cache_n = int(jnp.sum(self.state.cache_valid))
+            if (r["executed"] == 0 and r["marked"] == 0
+                    and (cache_n == 0 or not self.cfg.is_ubis)):
+                return i + 1
+        return max_ticks
+
+    # ------------------------------------------------------------------
+
+    def _execute_marked(self) -> int:
+        from . import version_manager as vm_
+        from .types import STATUS_MERGING, STATUS_SPLITTING
+        n = 0
+        marked, self._marked = self._marked, []
+        self._marked_set.clear()
+        for kind, pid in marked:
+            # guard: only execute if the posting still carries the mark
+            # (an earlier op in this batch may have retired it)
+            st_now = int(vm_.unpack_status(self.state.rec_meta[pid]))
+            want = STATUS_MERGING if kind == "merge" else STATUS_SPLITTING
+            if st_now != want or not bool(self.state.allocated[pid]):
+                continue
+            free_top = int(self.state.free_top)
+            pid_j = jnp.asarray(pid, jnp.int32)
+            if kind == "split":
+                if free_top < 2:
+                    self.state = update.mark_status(
+                        self.state, pid_j[None], 0)  # back to NORMAL
+                    continue
+                length = int(self.state.lengths[pid])
+                if length <= self.cfg.l_max:
+                    self.state = balance.compact_posting(
+                        self.state, self.cfg, pid_j)
+                    self.state = update.mark_status(
+                        self.state, pid_j[None], 0)
+                else:
+                    self.state, new_pids = balance.balance_split(
+                        self.state, self.cfg, pid_j)
+                    if self.reassign_after_split:
+                        for np_ in np.asarray(new_pids):
+                            if int(np_) >= 0 and bool(
+                                    self.state.allocated[int(np_)]):
+                                self.state, _ = balance.reassign_check(
+                                    self.state, self.cfg,
+                                    jnp.asarray(int(np_), jnp.int32))
+            elif kind == "merge":
+                if free_top < 1:
+                    self.state = update.mark_status(
+                        self.state, pid_j[None], 0)
+                    continue
+                self.state, pnew, _ = balance.merge_postings(
+                    self.state, self.cfg, pid_j)
+                if self.reassign_after_split:
+                    self.state, _ = balance.reassign_check(
+                        self.state, self.cfg, pnew)
+            elif kind == "compact":
+                self.state = balance.compact_posting(
+                    self.state, self.cfg, pid_j)
+                self.state = update.mark_status(self.state, pid_j[None], 0)
+            n += 1
+        return n
+
+    def _drain_cache(self) -> int:
+        cache_n = int(jnp.sum(self.state.cache_valid))
+        if cache_n == 0:
+            return 0
+        n = min(self.drain_n, self.round_size)
+        self.state, vecs, ids, targets, taken = update.cache_take(
+            self.state, self.cfg, n)
+        pad = self.round_size - n
+        vecs = jnp.pad(vecs, ((0, pad), (0, 0)))
+        ids = jnp.pad(ids, (0, pad))
+        targets = jnp.pad(targets, (0, pad), constant_values=-1)
+        taken = jnp.pad(taken, (0, pad))
+        self.state, res, _ = update.insert_round(
+            self.state, self.cfg, vecs, ids, taken, targets)
+        return int(jnp.sum(res.accepted))
+
+    def _mark_candidates(self) -> int:
+        from .types import STATUS_MERGING, STATUS_SPLITTING
+        if self.cfg.is_ubis:
+            split_due, merge_due, compact_due = jax.device_get(
+                balance.detect(self.state, self.cfg))
+            lengths = np.asarray(self.state.lengths)
+            split_pids = np.flatnonzero(split_due)
+            split_pids = split_pids[np.argsort(-lengths[split_pids])]
+            merge_pids = np.flatnonzero(merge_due)
+            merge_pids = merge_pids[np.argsort(lengths[merge_pids])]
+            compact_pids = np.flatnonzero(compact_due)
+        else:
+            from . import version_manager as vm_
+            lengths = np.asarray(self.state.lengths)
+            alloc = np.asarray(self.state.allocated)
+            # candidates were noted at search/insert time; a posting may
+            # have been retired since — marking a DELETED posting would
+            # RESURRECT its stale tile (duplicate vectors), so require
+            # NORMAL status now (found by the invariant property test)
+            status = np.asarray(vm_.unpack_status(self.state.rec_meta))
+            normal = alloc & (status == 0)
+            split_pids = np.array(
+                [p for p in self._sp_split
+                 if normal[p] and lengths[p] > self.cfg.l_max], int)
+            merge_pids = np.array(
+                [p for p in self._sp_merge
+                 if normal[p] and lengths[p] < self.cfg.l_min], int)
+            compact_pids = np.array(
+                [p for p in self._sp_split
+                 if normal[p] and lengths[p] <= self.cfg.l_max], int)
+            self._sp_split.clear()
+            self._sp_merge.clear()
+
+        jobs = ([("split", int(p)) for p in split_pids]
+                + [("compact", int(p)) for p in compact_pids]
+                + [("merge", int(p)) for p in merge_pids])
+        jobs = [j for j in jobs if j[1] not in self._marked_set][:self.bg_ops]
+        if not jobs:
+            return 0
+        split_like = [p for k_, p in jobs if k_ in ("split", "compact")]
+        merge_like = [p for k_, p in jobs if k_ == "merge"]
+        if split_like:
+            self.state = update.mark_status(
+                self.state, jnp.asarray(split_like, jnp.int32),
+                STATUS_SPLITTING)
+        if merge_like:
+            self.state = update.mark_status(
+                self.state, jnp.asarray(merge_like, jnp.int32),
+                STATUS_MERGING)
+        self._marked.extend(jobs)
+        self._marked_set.update(p for _, p in jobs)
+        return len(jobs)
+
+    def _gc(self) -> int:
+        ver = int(self.state.global_version)
+        if ver <= self.gc_lag:
+            return 0
+        self.state, n = balance.gc_round(
+            self.state, self.cfg, jnp.uint32(ver - self.gc_lag), 64)
+        return int(n)
+
+    # ---- SPFresh strict-trigger bookkeeping ---------------------------
+
+    def _note_spfresh_overflow(self, pids: np.ndarray):
+        lengths = np.asarray(self.state.lengths)
+        for p in np.unique(pids):
+            if p >= 0 and lengths[p] > self.cfg.l_max:
+                self._sp_split.add(int(p))
+
+    def _note_spfresh_small(self, probe: np.ndarray):
+        lengths = np.asarray(self.state.lengths)
+        small = np.unique(probe[lengths[probe] < self.cfg.l_min])
+        for p in small:
+            if p >= 0:
+                self._sp_merge.add(int(p))
+
+    # ------------------------------------------------------------------
+
+    def throughput(self) -> dict:
+        s = self.stats
+        upd_time = s["insert_time"] + s["delete_time"] + s["bg_time"]
+        tps = (s["inserted"] + s["deleted"]) / upd_time if upd_time else 0.0
+        qps = s["queries"] / s["search_time"] if s["search_time"] else 0.0
+        return {"tps": tps, "qps": qps, **dict(s)}

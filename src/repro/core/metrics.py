@@ -1,0 +1,33 @@
+"""Evaluation metrics (paper Section V-A)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Mean |found ∩ truth| / |truth| over the query batch (recall k@k).
+
+    -1 entries (padding / missing) never count as hits.
+    """
+    found_ids = np.asarray(found_ids)
+    true_ids = np.asarray(true_ids)
+    hits = 0
+    total = 0
+    for f, t in zip(found_ids, true_ids):
+        t = set(int(x) for x in t if x >= 0)
+        if not t:
+            continue
+        f = set(int(x) for x in f if x >= 0)
+        hits += len(f & t)
+        total += len(t)
+    return hits / total if total else 1.0
+
+
+def posting_length_cdf(lengths: np.ndarray, alive: np.ndarray,
+                       edges=None) -> tuple:
+    """CDF of live posting lengths (paper Fig. 5)."""
+    ls = np.sort(np.asarray(lengths)[np.asarray(alive)])
+    if edges is None:
+        edges = np.arange(0, ls.max() + 2) if len(ls) else np.array([0, 1])
+    cdf = np.searchsorted(ls, edges, side="right") / max(len(ls), 1)
+    return edges, cdf

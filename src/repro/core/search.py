@@ -1,0 +1,83 @@
+"""Two-phase k-NN search over the UBIS index (paper II-A, IV-B2).
+
+Phase 1 scores every *visible* centroid (Posting Recorder visibility:
+allocated, not DELETED, weight <= snapshot version) and keeps the top
+``nprobe``.  Phase 2 scans the probed posting tiles (masked by slot
+validity) *and the vector cache* — vectors parked during splits/merges
+are searchable exactly as the paper requires — then merges a global
+top-k.  One jitted program; query batches pad to a fixed size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..kernels.posting_scan import BIG
+from . import version_manager as vm
+from .types import IndexState, UBISConfig
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "nprobe"))
+def search(state: IndexState, cfg: UBISConfig, queries: jax.Array,
+           k: int, nprobe: int | None = None):
+    """Returns (ids (Q,k) int32, scores (Q,k) f32, probe (Q,P) int32).
+
+    Scores follow the kernel convention ``||v||^2 - 2 q.v``; add
+    ``||q||^2`` for true squared distances.  ``probe`` feeds SPFresh's
+    search-triggered merge rule.
+    """
+    if nprobe is None:
+        nprobe = cfg.nprobe
+    Q = queries.shape[0]
+    queries = queries.astype(jnp.float32)
+
+    vis = vm.visible(state.rec_meta, state.allocated, state.global_version)
+    csc = ops.centroid_score(queries, state.centroids, vis,
+                             backend=cfg.use_pallas)          # (Q, M)
+    _, probe = jax.lax.top_k(-csc, nprobe)
+    probe = probe.astype(jnp.int32)
+
+    pscores = ops.posting_scan_gather(
+        queries, state.vectors, state.slot_valid, vis, probe,
+        backend=cfg.use_pallas)                               # (Q, P, C)
+    pids = state.ids[probe]                                   # (Q, P, C)
+
+    cscores = ops.centroid_score(queries, state.cache_vecs,
+                                 state.cache_valid,
+                                 backend=cfg.use_pallas)      # (Q, K)
+    cids = jnp.broadcast_to(state.cache_ids[None, :],
+                            (Q, cfg.cache_capacity))
+
+    all_scores = jnp.concatenate(
+        [pscores.reshape(Q, -1), cscores], axis=1)
+    all_ids = jnp.concatenate([pids.reshape(Q, -1), cids], axis=1)
+    neg, idx = jax.lax.top_k(-all_scores, k)
+    found = jnp.take_along_axis(all_ids, idx, axis=1)
+    scores = -neg
+    found = jnp.where(scores < BIG / 2, found, -1)  # fewer than k hits
+    return found, scores, probe
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def brute_force(state: IndexState, cfg: UBISConfig, queries: jax.Array,
+                k: int):
+    """Exact top-k over the index's live contents (ground truth for
+    recall).  Scans every posting slot + the cache with full masking."""
+    M, C, d = state.vectors.shape
+    queries = queries.astype(jnp.float32)
+    vis = vm.visible(state.rec_meta, state.allocated, state.global_version)
+    valid = state.slot_valid & vis[:, None]
+    s = ops.posting_scan(queries, state.vectors, valid,
+                         backend=cfg.use_pallas)              # (Q, M*C)
+    cs = ops.centroid_score(queries, state.cache_vecs, state.cache_valid,
+                            backend=cfg.use_pallas)
+    all_scores = jnp.concatenate([s, cs], axis=1)
+    flat_ids = jnp.concatenate(
+        [state.ids.reshape(-1),
+         state.cache_ids])[None, :].repeat(queries.shape[0], 0)
+    neg, idx = jax.lax.top_k(-all_scores, k)
+    found = jnp.take_along_axis(flat_ids, idx, axis=1)
+    return jnp.where(-neg < BIG / 2, found, -1), -neg

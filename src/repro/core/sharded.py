@@ -1,0 +1,218 @@
+"""Distributed UBIS: the index sharded over a TPU pod (beyond-paper).
+
+The paper's conclusion lists distributed update as future work; here it
+is a first-class feature.  Layout: the posting pool (M postings) shards
+over the ``model`` mesh axis; query/job batches shard over ``data``
+(× ``pod``).  One shard owns each posting, so *structural* updates
+(split/merge/compact/GC) stay shard-local and embarrassingly parallel —
+the Posting Recorder's one-winner-per-word rule needs no cross-shard
+coordination.  Only two operations communicate:
+
+  * search  — per-shard phase-1 top-nprobe, all-gather the (score, id)
+              candidates, global re-rank, per-shard phase-2 scan of the
+              postings it owns, all-gather per-shard top-k, final merge;
+  * insert  — per-shard locate (scores vs. local centroids), global
+              argmin over the gathered per-shard bests routes each job
+              to its owner shard, which applies the conflict-free append.
+
+Collective cost per search batch: 2 all-gathers of O(Q·(nprobe + k))
+scalars over the model axis — independent of M and dim, which is what
+makes the index scale to thousands of chips (§Roofline has the terms).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ref
+from ..kernels.posting_scan import BIG
+from . import version_manager as vm
+from .types import IndexState, UBISConfig
+
+
+def index_specs(cfg: UBISConfig):
+    """PartitionSpecs for every IndexState field (postings over 'model').
+
+    The id->location map and the vector cache are replicated: the cache
+    is small and hot (every search scans it); id_loc updates are
+    broadcast with the round's results.
+    """
+    return IndexState(
+        vectors=P("model"), ids=P("model"), slot_valid=P("model"),
+        used=P("model"), lengths=P("model"), centroids=P("model"),
+        rec_meta=P("model"), rec_succ=P("model"), allocated=P("model"),
+        nbrs=P("model"),
+        cache_vecs=P(), cache_ids=P(), cache_target=P(), cache_valid=P(),
+        free_list=P("model"), free_top=P(), global_version=P(),
+        id_loc=P(),
+    )
+
+
+def _local_topk(scores, ids, k):
+    neg, idx = jax.lax.top_k(-scores, k)
+    return -neg, jnp.take_along_axis(ids, idx, axis=-1)
+
+
+def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
+                        nprobe: int | None = None,
+                        shard_cache_scan: bool = True):
+    """Builds a jitted sharded search: (state, queries) -> (ids, scores).
+
+    queries shard over the data axes; the index shards over 'model'.
+    ``shard_cache_scan``: each model shard scans only its 1/S slice of
+    the (replicated) vector cache and the merge all-gather already in
+    flight combines the partial top-ks — S-fold less cache compute for
+    zero extra collective traffic (EXPERIMENTS.md §Perf, ubis-index).
+    """
+    if nprobe is None:
+        nprobe = cfg.nprobe
+    axes = mesh.axis_names
+    qspec = P(("pod", "data") if "pod" in axes else "data")
+    st_specs = index_specs(cfg)
+    probe_cap = getattr(cfg, "shard_probe_cap", 0)
+
+    def local(state: IndexState, queries):
+        n_shard = jax.lax.axis_size("model")
+        my = jax.lax.axis_index("model")
+        M_local = state.centroids.shape[0]
+        Q = queries.shape[0]
+        queries = queries.astype(jnp.float32)
+
+        vis = vm.visible(state.rec_meta, state.allocated,
+                         state.global_version)
+        sc = ref.centroid_score(queries, state.centroids)
+        sc = jnp.where(vis[None, :], sc, BIG)
+        # phase 1 local: per-shard top-nprobe candidates
+        p_local = min(nprobe, M_local)
+        s1, local_pid = _local_topk(
+            sc, jnp.broadcast_to(jnp.arange(M_local), sc.shape), p_local)
+        # global re-rank of gathered candidates
+        s1_all = jax.lax.all_gather(s1, "model", axis=1, tiled=True)
+        pid_all = jax.lax.all_gather(
+            local_pid + my * 0, "model", axis=1, tiled=True)
+        owner = jnp.repeat(jnp.arange(n_shard), p_local)[None, :]
+        owner = jnp.broadcast_to(owner, s1_all.shape)
+        s_sel, sel_idx = jax.lax.top_k(-s1_all, nprobe)
+        probe_owner = jnp.take_along_axis(owner, sel_idx, axis=1)
+        probe_pid = jnp.take_along_axis(pid_all, sel_idx, axis=1)
+        # phase 2: scan the selected postings THIS shard owns.  A query's
+        # nprobe probes spread ~uniformly over S shards (~nprobe/S each),
+        # so the scan is COMPACTED to the first `probe_cap` owned probes
+        # (phase-1 order = best-first): the gather and distance scan
+        # shrink by nprobe/probe_cap with negligible recall impact
+        # (only hurts when > probe_cap probes land on one shard).
+        mine = probe_owner == my
+        cap = probe_cap if probe_cap else nprobe
+        if cap < nprobe:
+            order = jnp.argsort(~mine, axis=1, stable=True)[:, :cap]
+            pid_cap = jnp.take_along_axis(probe_pid, order, axis=1)
+            mine_cap = jnp.take_along_axis(mine, order, axis=1)
+        else:
+            pid_cap, mine_cap = probe_pid, mine
+        safe_pid = jnp.where(mine_cap, pid_cap, 0)
+        scores2 = ref.posting_scan_gather(
+            queries, state.vectors, state.slot_valid, vis, safe_pid)
+        scores2 = jnp.where(mine_cap[..., None], scores2, BIG)
+        ids2 = state.ids[safe_pid]
+        k_local = min(k, scores2.shape[1] * scores2.shape[2])
+        s2, i2 = _local_topk(scores2.reshape(Q, -1),
+                             ids2.reshape(Q, -1), k_local)
+        # cache scan: each shard takes a 1/S slice of the replicated
+        # cache (or shard 0 scans everything when disabled)
+        if shard_cache_scan:
+            K_all = state.cache_vecs.shape[0]
+            Ks = -(-K_all // n_shard)
+            start = jnp.minimum(my * Ks, K_all - Ks)
+            cvs = jax.lax.dynamic_slice_in_dim(state.cache_vecs, start,
+                                               Ks, axis=0)
+            cval = jax.lax.dynamic_slice_in_dim(state.cache_valid, start,
+                                                Ks, axis=0)
+            cid = jax.lax.dynamic_slice_in_dim(state.cache_ids, start,
+                                               Ks, axis=0)
+            # overlap rows (from the clamp) deduplicate in the final
+            # top-k merge only if scores tie; mask non-owned overlap:
+            own = (jnp.arange(Ks) + start) >= my * Ks
+            csc = ref.centroid_score(queries, cvs)
+            csc = jnp.where((cval & own)[None, :], csc, BIG)
+            ck = min(k, csc.shape[1])
+            s3, i3 = _local_topk(csc, jnp.broadcast_to(
+                cid[None, :], csc.shape), ck)
+        else:
+            csc = ref.centroid_score(queries, state.cache_vecs)
+            csc = jnp.where(state.cache_valid[None, :] & (my == 0), csc,
+                            BIG)
+            ck = min(k, csc.shape[1])
+            s3, i3 = _local_topk(csc, jnp.broadcast_to(
+                state.cache_ids[None, :], csc.shape), ck)
+        s2 = jnp.concatenate([s2, s3], axis=1)
+        i2 = jnp.concatenate([i2, i3], axis=1)
+        # global merge
+        s2_all = jax.lax.all_gather(s2, "model", axis=1, tiled=True)
+        i2_all = jax.lax.all_gather(i2, "model", axis=1, tiled=True)
+        sf, idf = _local_topk(s2_all, i2_all, k)
+        found = jnp.where(sf < BIG / 2, idf, -1)
+        return found, sf
+
+    in_specs = (st_specs, qspec)
+    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=(qspec, qspec), check_vma=False)
+    return jax.jit(fn)
+
+
+def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
+    """Builds a jitted sharded insert round.
+
+    Each shard locates jobs against its local centroids; a global argmin
+    routes each job to its owner shard, which runs the conflict-free
+    batched append on its local state.  Blocked jobs (non-NORMAL status)
+    are *rejected* here — the vector cache is host-mediated in the
+    distributed driver (replicated cache writes would race).
+    """
+    axes = mesh.axis_names
+    jspec = P()     # jobs replicated: every shard sees all jobs
+    st_specs = index_specs(cfg)
+
+    def local(state: IndexState, vecs, ids, valid):
+        import dataclasses as _dc
+        from .update import batched_append
+        my = jax.lax.axis_index("model")
+        M_local = state.centroids.shape[0]
+        status = vm.unpack_status(state.rec_meta)
+        insertable = state.allocated & (status == 0)
+        sc = ref.centroid_score(vecs.astype(jnp.float32), state.centroids)
+        sc = jnp.where(insertable[None, :], sc, BIG)
+        best_local = jnp.min(sc, axis=1)
+        best_pid = jnp.argmin(sc, axis=1).astype(jnp.int32)
+        # global owner = argmin over shards
+        all_best = jax.lax.all_gather(best_local, "model", axis=0)  # (S, J)
+        owner = jnp.argmin(all_best, axis=0).astype(jnp.int32)
+        mine = valid & (owner == my) & (best_local < BIG / 2)
+        state, ok, flat_local = batched_append(
+            state, cfg, vecs, ids, jnp.where(mine, best_pid, -1), mine,
+            update_id_loc=False)
+        # id_loc is REPLICATED across model shards: merge the per-job
+        # global flat locations (exactly one shard wins each job, so a
+        # psum of one-hot contributions keeps the replicas identical).
+        won = mine & ok
+        flat_global = jnp.where(won, my * (M_local * cfg.capacity)
+                                + flat_local, 0)
+        flat_global = jax.lax.psum(flat_global, "model")
+        any_won = jax.lax.psum(won.astype(jnp.int32), "model") > 0
+        safe_ids = jnp.where(valid & any_won, ids, cfg.max_ids)
+        id_loc = state.id_loc.at[safe_ids].set(
+            flat_global.astype(jnp.int32), mode="drop")
+        accepted = jax.lax.psum(won.astype(jnp.int32), "model").sum()
+        rejected = jnp.sum(valid.astype(jnp.int32)) - accepted
+        state = _dc.replace(
+            state, id_loc=id_loc,
+            global_version=state.global_version + jnp.uint32(1))
+        return state, accepted, rejected
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(st_specs, jspec, jspec, jspec),
+                       out_specs=(st_specs, P(), P()), check_vma=False)
+    return jax.jit(fn, donate_argnums=(0,))

@@ -1,0 +1,34 @@
+"""SPANN static baseline (paper III-B1): build once, search only.
+
+Table I: SPANN supports neither incremental nor streaming update — this
+wrapper simply refuses updates, which is exactly its role in the
+comparison (a quality ceiling for a freshly-built index).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .driver import UBISDriver
+from .types import UBISConfig
+
+
+class SPANNStatic:
+    """Build-once cluster index (k-means seed + one bulk load)."""
+
+    def __init__(self, cfg: UBISConfig, vectors: np.ndarray,
+                 ids: np.ndarray):
+        # bulk-load through the same machinery, then freeze
+        self._drv = UBISDriver(cfg, vectors)
+        self._drv.insert(vectors, ids)
+        self._drv.flush()
+        self.state = self._drv.state
+        self.cfg = cfg
+
+    def search(self, queries, k: int):
+        return self._drv.search(queries, k)
+
+    def insert(self, *a, **k):
+        raise NotImplementedError("SPANN is static (paper Table I); "
+                                  "use UBISDriver for updates")
+
+    delete = insert

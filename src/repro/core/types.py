@@ -1,0 +1,156 @@
+"""Core datatypes for the UBIS updatable cluster-based index.
+
+The index is a fixed-shape JAX pytree so that every operation (search,
+insert round, split, merge, reassign) is a jit-compiled SPMD program.
+Postings are fixed-capacity tiles of a pooled ``(max_postings, capacity,
+dim)`` array; a free-list provides allocation; the paper's 8-byte
+*Posting Recorder* word is packed into two ``uint32`` lanes per posting
+(see ``version_manager.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Posting status codes (paper Section IV-B1: 2 bits, four states).
+# ---------------------------------------------------------------------------
+STATUS_NORMAL = 0
+STATUS_SPLITTING = 1
+STATUS_MERGING = 2
+STATUS_DELETED = 3
+
+# Sentinel for "no successor" in the recorder's new-postings region.
+NO_SUCC = 0xFFFF
+# Sentinel for empty id slots.
+NO_ID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class UBISConfig:
+    """Static configuration (hashable; safe as a jit static argument)."""
+
+    dim: int = 64
+    max_postings: int = 4096          # posting pool size (must be < 0xFFFF)
+    capacity: int = 96                # physical tile size (>= l_max slack)
+    l_min: int = 10                   # merge threshold  (paper Section V-A)
+    l_max: int = 80                   # split threshold  (paper Section V-A)
+    balance_factor: float = 0.15      # paper Fig. 9 default
+    nprobe: int = 32                  # postings probed per query (paper: 32)
+    cache_capacity: int = 2048        # vector cache (Section IV-B2)
+    graph_degree: int = 8             # centroid neighbourhood graph degree
+    kmeans_iters: int = 6             # Lloyd iterations for (2-)means
+    max_ids: int = 1 << 20            # id -> location map size
+    succ_chase_depth: int = 4         # bounded DELETED pointer chasing
+    dtype: Any = jnp.float32          # vector storage dtype
+    mode: str = "ubis"                # "ubis" | "spfresh" (baseline semantics)
+    use_pallas: str = "auto"          # "auto" | "on" | "off"  (kernel backend)
+    # distributed search: cap owned probes scanned per shard (0 = nprobe);
+    # ~4x phase-2 work reduction on a 16-way pod (EXPERIMENTS.md §Perf)
+    shard_probe_cap: int = 0
+
+    def __post_init__(self):
+        assert self.max_postings < NO_SUCC, "successor ids are 16-bit"
+        assert self.capacity >= self.l_max, "tile must hold an over-full posting"
+        assert self.capacity <= 2 * self.l_max, \
+            "median-bisection split guard needs capacity/2 <= l_max"
+        assert self.mode in ("ubis", "spfresh")
+
+    @property
+    def is_ubis(self) -> bool:
+        return self.mode == "ubis"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IndexState:
+    """The full index as a pytree of device arrays (all fixed shape).
+
+    Shapes use ``M = max_postings``, ``C = capacity``, ``d = dim``,
+    ``K = cache_capacity``, ``N = max_ids``.
+    """
+
+    # --- posting tiles -----------------------------------------------------
+    vectors: jax.Array        # (M, C, d) vector payloads
+    ids: jax.Array            # (M, C) int32 external ids, NO_ID = empty slot
+    slot_valid: jax.Array     # (M, C) bool, live (non-tombstoned) slots
+    used: jax.Array           # (M,) int32 append high-water mark per tile
+    lengths: jax.Array        # (M,) int32 live vector count per posting
+    centroids: jax.Array      # (M, d)
+    # --- posting recorder (version manager) -------------------------------
+    rec_meta: jax.Array       # (M,) uint32: status(2) | weight(30)
+    rec_succ: jax.Array       # (M,) uint32: succ1(16) | succ2(16)
+    allocated: jax.Array      # (M,) bool, slot is in use (not on free list)
+    # --- centroid neighbourhood graph --------------------------------------
+    nbrs: jax.Array           # (M, G) int32 neighbour posting ids, -1 pad
+    # --- vector cache (Section IV-B2, splitting/merging branch) -----------
+    cache_vecs: jax.Array     # (K, d)
+    cache_ids: jax.Array      # (K,) int32
+    cache_target: jax.Array   # (K,) int32 posting the vector was bound for
+    cache_valid: jax.Array    # (K,) bool
+    # --- allocation + versions ---------------------------------------------
+    free_list: jax.Array      # (M,) int32 stack of free posting ids
+    free_top: jax.Array       # () int32 number of entries on the free stack
+    global_version: jax.Array  # () uint32 monotone version counter
+    # --- id -> flat location (pid * C + slot), -1 if absent ---------------
+    id_loc: jax.Array         # (N,) int32
+
+    def num_alive(self) -> jax.Array:
+        from .version_manager import unpack_status
+        status = unpack_status(self.rec_meta)
+        return jnp.sum((status != STATUS_DELETED) & self.allocated)
+
+    def live_vector_count(self) -> jax.Array:
+        """Vectors in *visible* postings (retired postings keep their tile
+        data until GC but no longer own any live vectors)."""
+        from .version_manager import unpack_status
+        status = unpack_status(self.rec_meta)
+        vis = self.allocated & (status != STATUS_DELETED)
+        return jnp.sum(self.lengths * vis)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundResult:
+    """Outcome of one foreground update round (fixed shape, padded)."""
+
+    accepted: jax.Array   # (J,) bool appended directly to a posting
+    cached: jax.Array     # (J,) bool parked in the vector cache
+    rejected: jax.Array   # (J,) bool dropped (SPFresh lock model / cache full)
+    target: jax.Array     # (J,) int32 resolved posting id (-1 if rejected)
+
+
+def empty_state(cfg: UBISConfig) -> IndexState:
+    """A fully-deallocated index (build() populates it)."""
+    M, C, d = cfg.max_postings, cfg.capacity, cfg.dim
+    K, G, N = cfg.cache_capacity, cfg.graph_degree, cfg.max_ids
+    return IndexState(
+        vectors=jnp.zeros((M, C, d), cfg.dtype),
+        ids=jnp.full((M, C), NO_ID, jnp.int32),
+        slot_valid=jnp.zeros((M, C), jnp.bool_),
+        used=jnp.zeros((M,), jnp.int32),
+        lengths=jnp.zeros((M,), jnp.int32),
+        centroids=jnp.zeros((M, d), cfg.dtype),
+        rec_meta=jnp.full((M,), 3, jnp.uint32),  # STATUS_DELETED, weight 0
+        rec_succ=jnp.full((M,), (NO_SUCC << 16) | NO_SUCC, jnp.uint32),
+        allocated=jnp.zeros((M,), jnp.bool_),
+        nbrs=jnp.full((M, G), -1, jnp.int32),
+        cache_vecs=jnp.zeros((K, d), cfg.dtype),
+        cache_ids=jnp.full((K,), NO_ID, jnp.int32),
+        cache_target=jnp.full((K,), -1, jnp.int32),
+        cache_valid=jnp.zeros((K,), jnp.bool_),
+        free_list=jnp.arange(M - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.array(M, jnp.int32),
+        global_version=jnp.array(0, jnp.uint32),
+        id_loc=jnp.full((N,), -1, jnp.int32),
+    )
+
+
+def state_memory_bytes(state: IndexState) -> int:
+    """Host-side accounting of device bytes held by the index."""
+    return int(
+        sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(state))
+    )

@@ -1,0 +1,161 @@
+"""Fine-grained version manager — the *Posting Recorder* (paper IV-B1).
+
+The paper stores one 8-byte word per posting, mutated with CAS:
+
+    status (2 bits) | weight/version (16 bits) | new-posting ids (rest)
+
+We keep the same 8-byte budget as two ``uint32`` lanes per posting:
+
+    rec_meta = status(2 bits) | weight(30 bits)
+    rec_succ = succ1(16 bits) | succ2(16 bits)
+
+and replace CAS with *deterministic batched transitions*: every round
+computes, for each posting word, at most one winning write (first writer
+in job order), applied with a single functional scatter.  This preserves
+the CAS guarantee — exactly one successful mutation per word per round —
+without retry loops, which is the TPU-native form of lock-freedom
+(DESIGN.md Section 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import NO_SUCC, STATUS_DELETED, STATUS_NORMAL
+
+_STATUS_BITS = 2
+_STATUS_MASK = jnp.uint32((1 << _STATUS_BITS) - 1)
+_WEIGHT_MASK = jnp.uint32((1 << 30) - 1)
+
+
+# --- packing ---------------------------------------------------------------
+
+def pack_meta(status, weight):
+    status = jnp.asarray(status, jnp.uint32)
+    weight = jnp.asarray(weight, jnp.uint32)
+    return (status & _STATUS_MASK) | ((weight & _WEIGHT_MASK) << _STATUS_BITS)
+
+
+def unpack_status(meta):
+    return (meta & _STATUS_MASK).astype(jnp.int32)
+
+
+def unpack_weight(meta):
+    return ((meta >> _STATUS_BITS) & _WEIGHT_MASK).astype(jnp.uint32)
+
+
+def pack_succ(succ1, succ2):
+    s1 = jnp.asarray(succ1, jnp.uint32) & jnp.uint32(0xFFFF)
+    s2 = jnp.asarray(succ2, jnp.uint32) & jnp.uint32(0xFFFF)
+    return (s1 << 16) | s2
+
+
+def unpack_succ(succ):
+    s1 = ((succ >> 16) & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    s2 = (succ & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    return s1, s2
+
+
+def succ_ids(succ):
+    """Successor ids as int32, -1 where absent."""
+    s1, s2 = unpack_succ(succ)
+    s1 = jnp.where(s1 == NO_SUCC, -1, s1)
+    s2 = jnp.where(s2 == NO_SUCC, -1, s2)
+    return s1, s2
+
+
+# --- snapshot visibility (paper: weight vs. global version) ---------------
+
+def visible(meta, allocated, global_version):
+    """A posting is visible to a snapshot iff it is allocated, not
+    deleted, and its weight (creation version) <= the snapshot version."""
+    status = unpack_status(meta)
+    weight = unpack_weight(meta)
+    return (
+        allocated
+        & (status != STATUS_DELETED)
+        & (weight <= jnp.asarray(global_version, jnp.uint32))
+    )
+
+
+# --- batched transitions ---------------------------------------------------
+
+def transition(rec_meta, pids, new_status, new_weight=None):
+    """Set status (and optionally weight) for a batch of posting ids.
+
+    ``pids`` may contain -1 entries (padding); those are dropped.  When the
+    same pid appears twice, the *first* occurrence wins (CAS semantics:
+    one winner per word per round).
+    """
+    pids = jnp.asarray(pids, jnp.int32)
+    valid = pids >= 0
+    # first-writer-wins: keep only the first occurrence of each pid
+    order = jnp.arange(pids.shape[0])
+    first = first_occurrence_mask(pids) & valid
+    safe = jnp.where(first, pids, 0)
+    cur = rec_meta[safe]
+    weight = unpack_weight(cur) if new_weight is None else jnp.asarray(
+        jnp.broadcast_to(new_weight, pids.shape), jnp.uint32)
+    status = jnp.broadcast_to(jnp.asarray(new_status, jnp.uint32), pids.shape)
+    packed = pack_meta(status, weight)
+    return rec_meta.at[safe].set(jnp.where(first, packed, cur), mode="drop")
+
+
+def set_successors(rec_succ, pids, succ1, succ2):
+    pids = jnp.asarray(pids, jnp.int32)
+    valid = pids >= 0
+    first = first_occurrence_mask(pids) & valid
+    safe = jnp.where(first, pids, 0)
+    cur = rec_succ[safe]
+    packed = pack_succ(
+        jnp.where(jnp.asarray(succ1) < 0, NO_SUCC, jnp.asarray(succ1)),
+        jnp.where(jnp.asarray(succ2) < 0, NO_SUCC, jnp.asarray(succ2)),
+    )
+    return rec_succ.at[safe].set(jnp.where(first, packed, cur), mode="drop")
+
+
+def first_occurrence_mask(x):
+    """Boolean mask marking the first occurrence of each value in ``x``.
+
+    O(J log J); used for the deterministic one-winner-per-word rule.
+    """
+    x = jnp.asarray(x)
+    n = x.shape[0]
+    order = jnp.argsort(x, stable=True)
+    xs = x[order]
+    firsts = jnp.concatenate([jnp.ones((1,), bool), xs[1:] != xs[:-1]])
+    out = jnp.zeros((n,), bool).at[order].set(firsts)
+    return out
+
+
+def chase_successors(rec_meta, rec_succ, allocated, centroids, pids, points,
+                     depth: int):
+    """Resolve DELETED postings to a live successor (paper IV-B2, branch 2).
+
+    For each (pid, point): while the target posting is DELETED and has
+    successors, move to the successor whose centroid is nearer to the
+    point.  Bounded by ``depth``; returns (resolved_pid, still_deleted).
+    ``still_deleted`` marks jobs whose chain ended in a dead end -> the
+    controller turns them into reassign jobs.
+    """
+
+    def body(_, pid):
+        status = unpack_status(rec_meta[pid])
+        s1, s2 = succ_ids(rec_succ[pid])
+        dead = (status == STATUS_DELETED)
+        has1 = s1 >= 0
+        has2 = s2 >= 0
+        c1 = centroids[jnp.maximum(s1, 0)]
+        c2 = centroids[jnp.maximum(s2, 0)]
+        d1 = jnp.where(has1, jnp.sum((points - c1) ** 2, -1), jnp.inf)
+        d2 = jnp.where(has2, jnp.sum((points - c2) ** 2, -1), jnp.inf)
+        nxt = jnp.where(d1 <= d2, s1, s2)
+        take = dead & (has1 | has2)
+        return jnp.where(take, nxt, pid)
+
+    pid = jnp.asarray(pids, jnp.int32)
+    for i in range(depth):
+        pid = body(i, pid)
+    status = unpack_status(rec_meta[jnp.maximum(pid, 0)])
+    dead_end = (pid < 0) | ((status == STATUS_DELETED))
+    return pid, dead_end

@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic, cursor-resumable synthetic streams."""
+from .tokens import TokenStream
+from .vectors import DriftingVectorStream, StaticVectorSet, make_queries
+
+__all__ = ["TokenStream", "DriftingVectorStream", "StaticVectorSet",
+           "make_queries"]

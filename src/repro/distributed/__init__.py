@@ -1,0 +1,7 @@
+"""Distribution: sharding rules, mesh helpers, fault-tolerance utilities."""
+from .sharding import (make_rules, to_named_sharding, logical_to_spec,
+                       batch_sharding)
+from .straggler import StragglerMonitor
+
+__all__ = ["make_rules", "to_named_sharding", "logical_to_spec",
+           "batch_sharding", "StragglerMonitor"]

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused flash attention (training / prefill).
+
+The LM substrate's compute hot-spot.  Classic online-softmax blocking:
+a (BQ, D) query tile stays VMEM-resident; (BK, D) key/value tiles stream
+through the last grid axis (sequential on TPU), carrying running
+(max, denom, accumulator) in VMEM scratch.  Supports GQA (kv-head block
+index = q-head // rep via the BlockSpec index map), causal masking with
+end-alignment (decode-friendly), sliding windows (gemma3-style local
+layers), and block-level skipping of fully-masked tiles (``pl.when``),
+which is what makes the local-attention layers sub-quadratic in compute,
+not just in memory.
+
+Shapes: q (B, Hq, Lq, D); k, v (B, Hkv, Lk, D) -> out (B, Hq, Lq, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, causal, window, q_offset, kv_len, bq, bk, nk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # ---- block-level skip predicate (compute saving, not just masking) ----
+    q_start = iq * bq + q_offset          # global position of first q row
+    q_end = q_start + bq - 1
+    k_start = ik * bk
+    k_end = k_start + bk - 1
+    live = k_start < kv_len
+    if causal:
+        live &= k_start <= q_end
+    if window is not None:
+        live &= k_end > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                # (BQ, BK)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]                              # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "kv_len",
+                     "interpret"),
+)
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    kv_len=None, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+                    interpret=False):
+    """Padded entry: Lq % bq == 0 and Lk % bk == 0 (ops.py pads + slices).
+
+    ``kv_len``: true (unpadded) key count; defaults to padded Lk.
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if kv_len is None:
+        kv_len = Lk
+    nq, nk = Lq // bq, Lk // bk
+    grid = (B, Hq, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=kv_len - Lq, kv_len=kv_len, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

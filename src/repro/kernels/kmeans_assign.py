@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: k-means assignment step.
+
+BalanceSplit (paper Alg. 1) runs 2-means on every split, and the initial
+build runs full k-means; the assignment step (argmin over centroids) is
+its compute hot-spot.  The kernel streams centroid tiles while a point
+tile stays VMEM-resident, carrying a running (best score, best index)
+pair across the centroid grid dimension in the *output* refs — the TPU
+grid is executed sequentially over the last axis, so out-ref carry is
+the idiomatic accumulator pattern.
+
+    points    : (N, d)
+    centroids : (K, d)
+    ->  assign (N, 1) int32, best (N, 1) f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .posting_scan import BIG
+
+DEFAULT_BN = 256
+DEFAULT_BK = 128
+
+
+def _kernel(p_ref, c_ref, assign_ref, best_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        assign_ref[...] = jnp.full_like(assign_ref, -1)
+        best_ref[...] = jnp.full_like(best_ref, BIG)
+
+    p = p_ref[...].astype(jnp.float32)          # (BN, d)
+    c = c_ref[...].astype(jnp.float32)          # (BK, d)
+    cn = jnp.sum(c * c, axis=-1)
+    dots = jax.lax.dot_general(
+        p, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    score = cn[None, :] - 2.0 * dots            # (BN, BK)
+    blk_best = jnp.min(score, axis=-1)
+    blk_arg = jnp.argmin(score, axis=-1).astype(jnp.int32)
+    blk_arg = blk_arg + j * score.shape[1]
+    prev_best = best_ref[...][:, 0]
+    prev_arg = assign_ref[...][:, 0]
+    take = blk_best < prev_best
+    best_ref[...] = jnp.where(take, blk_best, prev_best)[:, None]
+    assign_ref[...] = jnp.where(take, blk_arg, prev_arg)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def kmeans_assign(points: jax.Array, centroids: jax.Array,
+                  *, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                  interpret: bool = False):
+    N, d = points.shape
+    K = centroids.shape[0]
+    grid = (N // bn, K // bk)
+    assign, best = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, 1), jnp.int32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(points, centroids)
+    return assign[:, 0], best[:, 0]

@@ -1,0 +1,159 @@
+"""Public kernel entry points: padding, backend dispatch, jit wrappers.
+
+Every op has three backends:
+  * ``ref``     — pure-jnp oracle (``ref.py``), always correct, XLA-fused;
+  * ``pallas``  — the TPU kernel (compiled on TPU, interpret=True on CPU);
+  * ``auto``    — pallas on TPU backends, ref elsewhere (the multi-pod
+                  dry-run therefore lowers the XLA path, per DESIGN.md §5).
+
+Callers pass logical shapes; wrappers pad to hardware-aligned tiles
+(lane dim 128, sublane 8) and slice results back.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .posting_scan import BIG, posting_scan as _ps_pallas
+from .centroid_score import centroid_score as _cs_pallas
+from .kmeans_assign import kmeans_assign as _ka_pallas
+from .flash_attention import flash_attention as _fa_pallas
+
+_PAD_CENTROID = 1e6  # padded rows score ~1e14 >> any real score
+
+
+def _use_pallas(backend: str) -> bool:
+    if backend == "auto":
+        return jax.default_backend() == "tpu"
+    return backend == "pallas"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ceil(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad2(x, rows: int, cols: int, value=0.0):
+    """Pad columns (feature dim) with zeros, then extra rows with ``value``
+    — so sentinel row-padding never corrupts real rows' norms."""
+    r, c = x.shape
+    x = jnp.pad(x, ((0, 0), (0, cols - c)))
+    return jnp.pad(x, ((0, rows - r), (0, 0)), constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+
+
+def centroid_score(q: jax.Array, c: jax.Array,
+                   vis: Optional[jax.Array] = None,
+                   *, backend: str = "auto") -> jax.Array:
+    """(Q, d), (M, d)[, (M,) bool] -> (Q, M) scores; masked -> BIG."""
+    Q, d = q.shape
+    M = c.shape[0]
+    if vis is None:
+        vis = jnp.ones((M,), bool)
+    if not _use_pallas(backend):
+        s = ref.centroid_score(q, c)
+        return jnp.where(vis[None, :], s, BIG)
+    bq = 128 if Q >= 128 else _ceil(Q, 8)
+    bm = 512 if M >= 512 else _ceil(M, 128)
+    Qp, Mp, dp = _ceil(Q, bq), _ceil(M, bm), _ceil(d, 128)
+    qp = _pad2(q, Qp, dp)
+    cp = _pad2(c, Mp, dp, value=_PAD_CENTROID)
+    vp = jnp.pad(vis, (0, Mp - M))[None, :]
+    out = _cs_pallas(qp, cp, vp, bq=bq, bm=bm, interpret=_interpret())
+    return out[:Q, :M]
+
+
+def posting_scan(q: jax.Array, tiles: jax.Array, valid: jax.Array,
+                 *, backend: str = "auto") -> jax.Array:
+    """(Q, d), (G, C, d), (G, C) -> (Q, G*C) scores; invalid -> BIG."""
+    Q, d = q.shape
+    G, C, _ = tiles.shape
+    if not _use_pallas(backend):
+        s = ref.posting_scan(q, tiles, valid)
+        return jnp.where(jnp.isfinite(s), s, BIG)
+    V = G * C
+    bq = 128 if Q >= 128 else _ceil(Q, 8)
+    bv = 512 if V >= 512 else _ceil(V, 128)
+    Qp, Vp, dp = _ceil(Q, bq), _ceil(V, bv), _ceil(d, 128)
+    qp = _pad2(q, Qp, dp)
+    vp = _pad2(tiles.reshape(V, d), Vp, dp)
+    mp = jnp.pad(valid.reshape(V), (0, Vp - V))[None, :]
+    out = _ps_pallas(qp, vp, mp, bq=bq, bv=bv, interpret=_interpret())
+    return out[:Q, :V]
+
+
+def kmeans_assign(points: jax.Array, centroids: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  *, backend: str = "auto"):
+    """(N, d), (K, d)[, (N,) bool] -> (assign (N,) int32, best (N,) f32)."""
+    N, d = points.shape
+    K = centroids.shape[0]
+    if not _use_pallas(backend):
+        a, b = ref.kmeans_assign(points, centroids, mask)
+        return a, jnp.where(jnp.isfinite(b), b, BIG)
+    bn = 256 if N >= 256 else _ceil(N, 8)
+    bk = 128 if K >= 128 else _ceil(K, 128)
+    Np, Kp, dp = _ceil(N, bn), _ceil(K, bk), _ceil(d, 128)
+    pp = _pad2(points, Np, dp)
+    cp = _pad2(centroids, Kp, dp, value=_PAD_CENTROID)
+    a, b = _ka_pallas(pp, cp, bn=bn, bk=bk, interpret=_interpret())
+    a, b = a[:N], b[:N]
+    if mask is not None:
+        a = jnp.where(mask, a, -1)
+        b = jnp.where(mask, b, BIG)
+    return a, b
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    backend: str = "auto"):
+    """(B,Hq,Lq,D), (B,Hkv,Lk,D) x2 -> (B,Hq,Lq,D)."""
+    B, Hq, Lq, D = q.shape
+    Lk = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if not _use_pallas(backend):
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    bq = 128 if Lq >= 128 else _ceil(Lq, 8)
+    bk = 128 if Lk >= 128 else _ceil(Lk, 8)
+    Lqp, Lkp, Dp = _ceil(Lq, bq), _ceil(Lk, bk), _ceil(D, 128)
+    # q is padded at the FRONT so that the last real row keeps its
+    # end-aligned position (kv_len - Lq + i); k/v pad at the back and are
+    # masked by kv_len inside the kernel.
+    qp = jnp.pad(q, ((0, 0), (0, 0), (Lqp - Lq, 0), (0, Dp - D)))
+    pad_kv = lambda x: jnp.pad(
+        x, ((0, 0), (0, 0), (0, Lkp - x.shape[2]), (0, Dp - x.shape[3])))
+    out = _fa_pallas(qp, pad_kv(k), pad_kv(v),
+                     causal=causal, window=window, scale=scale, kv_len=Lk,
+                     bq=bq, bk=bk, interpret=_interpret())
+    return out[:, :, Lqp - Lq:, :D]
+
+
+def posting_scan_gather(q: jax.Array, vectors: jax.Array,
+                        slot_valid: jax.Array, vis: jax.Array,
+                        probe: jax.Array, *, backend: str = "auto"):
+    """Search phase 2 with in-kernel HBM gather (DESIGN.md §5).
+
+    Kernel path requires d % 128 == 0 and C % 128 == 0 (storage is laid
+    out that way on TPU deployments); otherwise falls back to ref.
+    """
+    from .posting_scan import posting_scan_gather as _psg_pallas
+    Q, d = q.shape
+    M, C, _ = vectors.shape
+    if not _use_pallas(backend) or d % 128 or C % 128:
+        return ref.posting_scan_gather(q, vectors, slot_valid, vis, probe)
+    raw = _psg_pallas(q, vectors, probe.astype(jnp.int32),
+                      interpret=_interpret())
+    ok = slot_valid[probe] & vis[probe][..., None]
+    return jnp.where(ok, raw, BIG)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: phase-2 masked distance scan over gathered postings.
+
+This is the search hot-spot of a cluster-based index (paper Section V:
+search efficiency): for a batch of queries and the posting tiles chosen
+by phase-1, compute masked L2 scores for every (query, slot) pair.
+
+TPU mapping (DESIGN.md Section 5): the query tile (BQ x d) stays resident
+in VMEM while posting-vector tiles (BV x d) stream through; the
+``-2 q.v`` term runs on the MXU (block shapes are 128-aligned), the
+``||v||^2`` epilogue and the tombstone masking run on the VPU.  Scores
+accumulate in fp32 regardless of storage dtype.
+
+Inputs are pre-flattened by ``ops.posting_scan``:
+    q     : (Q, d)      queries
+    v     : (V, d)      V = G * C gathered posting slots
+    valid : (1, V)      live-slot mask (tombstones + tail padding False)
+Output:
+    score : (Q, V) f32  ``||v||^2 - 2 q.v``; +BIG at invalid slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BIG = 1e30  # stand-in for +inf that survives top-k arithmetic
+
+DEFAULT_BQ = 128
+DEFAULT_BV = 512
+
+
+def _kernel(q_ref, v_ref, valid_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)          # (BQ, d)
+    v = v_ref[...].astype(jnp.float32)          # (BV, d)
+    valid = valid_ref[...]                      # (1, BV)
+    vn = jnp.sum(v * v, axis=-1)                # (BV,)
+    # MXU: (BQ, d) @ (d, BV)
+    dots = jax.lax.dot_general(
+        q, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    score = vn[None, :] - 2.0 * dots
+    out_ref[...] = jnp.where(valid, score, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bv", "interpret"))
+def posting_scan(q: jax.Array, v: jax.Array, valid: jax.Array,
+                 *, bq: int = DEFAULT_BQ, bv: int = DEFAULT_BV,
+                 interpret: bool = False) -> jax.Array:
+    """Padded-shape Pallas entry.  Q % bq == 0, V % bv == 0, d % 128 == 0
+    are guaranteed by the ops.py wrapper."""
+    Q, d = q.shape
+    V = v.shape[0]
+    grid = (Q // bq, V // bv)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bv), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, V), jnp.float32),
+        interpret=interpret,
+    )(q, v, valid)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-prefetch gather variant: postings stream from HBM by probe index.
+#
+# The search phase-2 working set is per-query: each query scans only the
+# ``nprobe`` postings its phase-1 filter chose.  Materialising the gather
+# (Q, P, C, d) in HBM doubles traffic; instead the probe table is scalar-
+# prefetched and each grid step DMAs exactly one posting tile HBM->VMEM
+# (Pallas double-buffers consecutive steps).  Arithmetic intensity of the
+# scan is ~1 FLOP/byte, so this kernel is *bandwidth*-bound by design —
+# the win is eliminating the gather round-trip, not MXU utilisation.
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(probe_ref, q_ref, v_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)            # (1, d)
+    v = v_ref[0].astype(jnp.float32)              # (C, d)
+    vn = jnp.sum(v * v, axis=-1)                  # (C,)
+    dots = jax.lax.dot_general(
+        v, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (C, 1)
+    o_ref[0, 0] = vn - 2.0 * dots[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def posting_scan_gather(q: jax.Array, vectors: jax.Array, probe: jax.Array,
+                        *, interpret: bool = False) -> jax.Array:
+    """q: (Q, d); vectors: (M, C, d); probe: (Q, P) int32 posting ids.
+
+    Returns raw scores (Q, P, C); validity masking is applied by the
+    ops.py wrapper (slot/visibility masks never enter the kernel).
+    d % 128 == 0 and C % 128 == 0 are guaranteed by the wrapper.
+    """
+    Q, d = q.shape
+    M, C, _ = vectors.shape
+    P = probe.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, probe: (i, 0)),
+            pl.BlockSpec((1, C, d), lambda i, j, probe: (probe[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C), lambda i, j, probe: (i, j, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, P, C), jnp.float32),
+        interpret=interpret,
+    )(probe, q, vectors)

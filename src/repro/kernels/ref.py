@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: tests assert the Pallas
+kernels (run with ``interpret=True`` on CPU) match these to tolerance,
+sweeping shapes and dtypes.  ``ops.py`` routes to these implementations
+on non-TPU backends.
+
+Distance convention: all ANN kernels return *scores*
+``s(q, v) = ||v||^2 - 2 q.v`` which order identically to squared L2
+(``||q||^2`` is constant per query).  True squared distance is
+``s + ||q||^2``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30  # masked-score sentinel shared with the Pallas kernels
+
+
+def centroid_score(queries: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Phase-1 scoring.  (Q, d), (M, d) -> (Q, M) float32 scores."""
+    q = queries.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    cn = jnp.sum(c * c, axis=-1)
+    return cn[None, :] - 2.0 * (q @ c.T)
+
+
+def posting_scan(queries: jax.Array, tiles: jax.Array,
+                 valid: jax.Array) -> jax.Array:
+    """Phase-2 masked scan.
+
+    queries: (Q, d); tiles: (G, C, d) gathered posting tiles;
+    valid: (G, C) bool live-slot mask.
+    Returns (Q, G*C) float32 scores with +inf at invalid slots.
+    """
+    q = queries.astype(jnp.float32)
+    G, C, d = tiles.shape
+    v = tiles.reshape(G * C, d).astype(jnp.float32)
+    vn = jnp.sum(v * v, axis=-1)
+    s = vn[None, :] - 2.0 * (q @ v.T)
+    return jnp.where(valid.reshape(1, G * C), s, BIG)
+
+
+def kmeans_assign(points: jax.Array, centroids: jax.Array,
+                  mask: jax.Array | None = None):
+    """Nearest-centroid assignment.
+
+    points: (N, d); centroids: (K, d); mask: (N,) bool or None.
+    Returns (assign (N,) int32, score (N,) f32); masked points get
+    assignment -1 and score +inf.
+    """
+    s = centroid_score(points, centroids)  # (N, K)
+    assign = jnp.argmin(s, axis=-1).astype(jnp.int32)
+    best = jnp.min(s, axis=-1)
+    if mask is not None:
+        assign = jnp.where(mask, assign, -1)
+        best = jnp.where(mask, best, BIG)
+    return assign, best
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None) -> jax.Array:
+    """Reference attention.  q: (B, Hq, Lq, D), k/v: (B, Hkv, Lk, D).
+
+    GQA: Hq must be a multiple of Hkv.  ``window``: sliding-window size
+    (keys attend within [i - window + 1, i]); None = full.
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
+    Lk = k.shape[2]
+    qpos = jnp.arange(Lq)[:, None] + (Lk - Lq)  # align ends (decode-friendly)
+    kpos = jnp.arange(Lk)[None, :]
+    m = jnp.ones((Lq, Lk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    logits = jnp.where(m[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def posting_scan_gather(queries: jax.Array, vectors: jax.Array,
+                        slot_valid: jax.Array, vis: jax.Array,
+                        probe: jax.Array) -> jax.Array:
+    """Per-query probe scan (search phase 2).
+
+    queries: (Q, d); vectors: (M, C, d); slot_valid: (M, C) bool;
+    vis: (M,) bool posting visibility; probe: (Q, P) int32.
+    Returns (Q, P, C) scores; invalid slots / invisible postings -> BIG.
+    """
+    q = queries.astype(jnp.float32)
+    tiles = vectors[probe].astype(jnp.float32)          # (Q, P, C, d)
+    vn = jnp.sum(tiles * tiles, axis=-1)
+    dots = jnp.einsum("qd,qpcd->qpc", q, tiles)
+    s = vn - 2.0 * dots
+    ok = slot_valid[probe] & vis[probe][..., None]
+    return jnp.where(ok, s, BIG)

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers AND compiles under the production sharding — with
+memory and cost analysis recorded for the roofline (EXPERIMENTS.md).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --cell train_4k [--multi-pod] [--out dryrun.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--out ...]
+
+Nothing here allocates device memory: parameters, optimizer state,
+caches and batches are ShapeDtypeStructs end to end.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (batch_sharding, make_rules,
+                                        to_named_sharding)
+from repro.models import SHAPE_CELLS, cells_for, get_model, ARCH_IDS
+from repro.models.layers import sharding_rules
+from repro.optim import AdamW, AdamWConfig, cosine_warmup
+from .mesh import make_production_mesh
+
+# archs whose optimizer state must be sub-fp32 to fit 16 GB/chip
+_INT8_OPT = {"jamba-1.5-large-398b", "deepseek-67b", "llava-next-34b"}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes of every collective op in compiled HLO text.
+
+    Output shapes appear on the LHS of ``%name = <shapes> op(...)``;
+    layouts ``{1,0}`` may follow each shape.  Async pairs are counted at
+    the ``-start`` op only (the ``-done`` output aliases it).
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVE_OPS:
+            tok = f" {op}("
+            tok_start = f" {op}-start("
+            if tok_start in line:
+                lhs = line.split(tok_start)[0]
+            elif tok in line and f"{op}-done" not in line:
+                lhs = line.split(tok)[0]
+            else:
+                continue
+            if "=" in lhs:
+                lhs = lhs.split("=", 1)[1]
+            total = 0
+            for dt, dims in _SHAPE_RE.findall(lhs):
+                nbytes = _DTYPE_BYTES.get(dt)
+                if nbytes is None:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                total += n * nbytes
+            out[op] = out.get(op, 0) + total
+            break
+    return out
+
+
+def _bytes_of(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def lower_cell(arch_id: str, cell_name: str, mesh, *,
+               dtype=jnp.bfloat16, remat: str = "full",
+               compile_: bool = True, unroll: bool = False,
+               rules_override: Optional[dict] = None,
+               **cfg_overrides) -> Dict[str, Any]:
+    """Lower (and compile) one cell on one mesh; return the record.
+
+    ``unroll`` + ``n_layers=...`` overrides drive the roofline's
+    small-depth exact-cost variants (benchmarks/roofline.py)."""
+    t0 = time.perf_counter()
+    cell = SHAPE_CELLS[cell_name]
+    model = get_model(arch_id, remat=remat, unroll=unroll,
+                      **cfg_overrides)
+    kind = "decode" if cell.kind == "decode" else "train"
+    rules = make_rules(mesh, kind, long_context=cell.seq_len > 100_000)
+    model_size = dict(zip(mesh.axis_names,
+                          mesh.devices.shape)).get("model", 1)
+    if (model.cfg.moe is not None
+            and model.cfg.moe.e_pad % model_size != 0):
+        # EP needs experts % model == 0; fall back to TP-within-expert
+        # (or pad the expert count via MoEConfig.padded_experts -> EP)
+        rules["experts"] = None
+        rules["expert_ffn"] = "model"
+    if rules_override:
+        rules.update(rules_override)
+    ctx_rules = dict(rules, __mesh__=mesh)
+
+    pvals, paxes = model.param_shapes(dtype)
+    pshard = to_named_sharding(mesh, paxes, rules)
+    batch_sds, batch_ax = model.input_specs(cell, dtype)
+    bshard = batch_sharding(mesh, batch_ax, rules)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(pvals))
+
+    if cell.kind == "train":
+        opt = AdamW(
+            AdamWConfig(state_dtype="int8" if arch_id in _INT8_OPT
+                        else "f32"),
+            lr=cosine_warmup(3e-4, 2000, 100_000))
+        ostate = jax.eval_shape(opt.init, pvals)
+        oshard = to_named_sharding(
+            mesh, opt.state_axes(paxes), rules)
+
+        def step(params, opt_state, batch):
+            with sharding_rules(ctx_rules):
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.train_loss, has_aux=True)(params, batch)
+                params, opt_state, om = opt.apply(params, grads, opt_state)
+            return params, opt_state, loss, om["grad_norm"]
+
+        jitted = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None, None),
+                         donate_argnums=(0, 1))
+        args = (pvals, ostate, batch_sds)
+    elif cell.kind == "prefill":
+        _, cax = model.cache_shapes(cell.global_batch, cell.seq_len, dtype)
+        cshard = to_named_sharding(mesh, cax, rules)
+
+        def step(params, batch):
+            with sharding_rules(ctx_rules):
+                return model.prefill(params, batch)
+
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=(None, cshard))
+        args = (pvals, batch_sds)
+    else:  # decode
+        cshard = bshard["cache"]
+
+        def step(params, cache, token, pos):
+            with sharding_rules(ctx_rules):
+                return model.decode_step(params, cache, token, pos)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, cshard, bshard["token"], bshard["pos"]),
+            out_shardings=(None, cshard), donate_argnums=(1,))
+        args = (pvals, batch_sds["cache"], batch_sds["token"],
+                batch_sds["pos"])
+
+    lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "cell": cell_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.devices.size,
+        "n_params": int(n_params),
+        "param_bytes": int(_bytes_of(pvals)),
+        "lower_s": round(t_lower, 1),
+    }
+    if not compile_:
+        return rec
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.perf_counter() - t0 - t_lower, 1)
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+    except Exception as e:  # backend may not support it
+        rec["memory_analysis_error"] = str(e)[:100]
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        if cost:
+            rec["hlo_flops"] = float(cost.get("flops", -1))
+            rec["hlo_bytes"] = float(cost.get("bytes accessed", -1))
+            rec["hlo_transcendentals"] = float(
+                cost.get("transcendentals", -1))
+    except Exception as e:
+        rec["cost_analysis_error"] = str(e)[:100]
+    try:
+        txt = compiled.as_text()
+    except Exception:
+        txt = lowered.as_text()
+    rec["collective_bytes"] = collective_bytes(txt)
+    return rec
+
+
+def lower_ubis(mesh, *, queries: int = 4096, dim: int = 768,
+               compile_: bool = True) -> Dict[str, Any]:
+    """Dry-run the paper's technique itself at production scale: the
+    UBIS index sharded over the pod (65534 postings x 128 x dim vectors
+    ~ 8.4M base vectors), sharded search + insert rounds."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.core import UBISConfig, empty_state
+    from repro.core.sharded import (index_specs, make_sharded_insert,
+                                    make_sharded_search)
+    t0 = time.perf_counter()
+    cfg = UBISConfig(dim=dim, max_postings=65024, capacity=128,
+                     l_min=10, l_max=112, cache_capacity=8192,
+                     max_ids=1 << 24, use_pallas="off")
+    state_sds = jax.eval_shape(lambda: empty_state(cfg))
+    sspec = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), index_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    state_sds = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        state_sds, sspec)
+    dax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    qsh = NamedSharding(mesh, PartitionSpec(dax))
+    q_sds = jax.ShapeDtypeStruct((queries, dim), jnp.float32, sharding=qsh)
+    rec: Dict[str, Any] = {
+        "arch": "ubis-index", "cell": f"search_q{queries}_d{dim}",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.devices.size,
+        "param_bytes": int(_bytes_of(state_sds)),
+    }
+    search = make_sharded_search(cfg, mesh, k=10)
+    lowered = search.lower(state_sds, q_sds)
+    rec["lower_s"] = round(time.perf_counter() - t0, 1)
+    if compile_:
+        compiled = lowered.compile()
+        rec["compile_s"] = round(
+            time.perf_counter() - t0 - rec["lower_s"], 1)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        if cost:
+            rec["hlo_flops"] = float(cost.get("flops", -1))
+            rec["hlo_bytes"] = float(cost.get("bytes accessed", -1))
+        rec["collective_bytes"] = collective_bytes(compiled.as_text())
+    # insert round
+    ins = make_sharded_insert(cfg, mesh)
+    jsh = NamedSharding(mesh, PartitionSpec())
+    J = 4096
+    ins_low = ins.lower(
+        state_sds,
+        jax.ShapeDtypeStruct((J, dim), jnp.float32, sharding=jsh),
+        jax.ShapeDtypeStruct((J,), jnp.int32, sharding=jsh),
+        jax.ShapeDtypeStruct((J,), jnp.bool_, sharding=jsh))
+    if compile_:
+        ins_c = ins_low.compile()
+        cost = ins_c.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["insert_hlo_flops"] = float(cost.get("flops", -1)) if cost else -1
+        rec["insert_collective_bytes"] = collective_bytes(ins_c.as_text())
+    return rec
+
+
+def iter_all_cells():
+    for arch in ARCH_IDS:
+        for cell in cells_for(arch):
+            yield arch, cell
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--cell")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ubis", action="store_true",
+                    help="dry-run the sharded UBIS index itself")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False),
+                  make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    cells = (list(iter_all_cells()) if args.all
+             else ([(args.arch, args.cell)] if args.arch else []))
+    records = []
+    for mesh in meshes:
+        if args.all or args.ubis:
+            try:
+                rec = lower_ubis(mesh, compile_=not args.no_compile)
+                rec["status"] = "ok"
+                print(f"[OK] ubis-index @ {mesh.devices.shape}: "
+                      f"flops={rec.get('hlo_flops', 0):.3e}", flush=True)
+            except Exception as e:
+                rec = {"arch": "ubis-index", "status": "fail",
+                       "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                       "error": f"{type(e).__name__}: {str(e)[:500]}"}
+                print(f"[FAIL] ubis-index @ {mesh.devices.shape}: "
+                      f"{rec['error'][:200]}", flush=True)
+            records.append(rec)
+        for arch, cell in cells:
+            tag = f"{arch} x {cell} @ {mesh.devices.shape}"
+            try:
+                rec = lower_cell(arch, cell, mesh, remat=args.remat,
+                                 compile_=not args.no_compile)
+                rec["status"] = "ok"
+                print(f"[OK] {tag}: flops={rec.get('hlo_flops', 0):.3e} "
+                      f"lower={rec['lower_s']}s "
+                      f"compile={rec.get('compile_s', '-')}s", flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "cell": cell,
+                       "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                       "status": "fail", "error": f"{type(e).__name__}: "
+                       f"{str(e)[:500]}"}
+                print(f"[FAIL] {tag}: {rec['error'][:200]}", flush=True)
+            records.append(rec)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    n_fail = sum(r["status"] != "ok" for r in records)
+    print(f"{len(records) - n_fail}/{len(records)} cells OK")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,158 @@
+"""Serving driver: batched generation + streaming UBIS retrieval.
+
+This is the paper-kind end-to-end path: an embedding model produces
+vectors for a *fresh* document stream, UBIS indexes them online
+(insert/delete/split/merge concurrent with search), and queries are
+answered with retrieve(-then-generate).
+
+The server batches requests (fixed batch, padded), embeds with the LM
+backbone (mean-pooled final hidden states), and drives the UBIS driver's
+foreground/background phases exactly like the paper's thread pools
+(DESIGN.md §2: threads -> phases).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import UBISConfig, UBISDriver, metrics as ubis_metrics
+from repro.core.search import brute_force
+from repro.models import get_model
+from repro.models.layers import values
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    arch: str = "tinyllama-1.1b"
+    reduced: bool = True
+    embed_dim: int = 64              # PCA-ish projection of hidden states
+    batch_size: int = 32
+    k: int = 10
+    index_dim: int = 64
+    seed: int = 0
+
+
+class EmbeddingServer:
+    """Embeds token sequences with the LM backbone; random projection to
+    the index dimensionality (frozen, seeded)."""
+
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+        self.model = get_model(cfg.arch, reduced=cfg.reduced)
+        self.params = values(self.model.init(jax.random.key(cfg.seed)))
+        d_model = self.model.cfg.d_model
+        self.proj = jax.random.normal(
+            jax.random.key(cfg.seed + 1),
+            (d_model, cfg.embed_dim)) / (d_model ** 0.5)
+        self._embed = jax.jit(self._embed_fn)
+
+    def _embed_fn(self, params, tokens):
+        # mean-pooled final hidden state -> fixed-dim embedding
+        from repro.models.transformer import run_segments
+        from repro.models.layers import rms_norm
+        x = jnp.take(params["emb"], tokens, axis=0)
+        x, _ = run_segments(params, self.model.cfg, self.model.segments,
+                            x, jnp.arange(tokens.shape[1]),
+                            remat="none")
+        x = rms_norm(x, params["ln_f"], self.model.cfg.norm_eps)
+        return jnp.mean(x, axis=1) @ self.proj
+
+    def embed(self, tokens: np.ndarray) -> np.ndarray:
+        return np.asarray(self._embed(self.params, jnp.asarray(tokens)))
+
+
+class RetrievalServer:
+    """Batched streaming retrieval endpoint over a UBIS index."""
+
+    def __init__(self, cfg: ServeConfig, index_cfg: Optional[UBISConfig]
+                 = None, seed_vectors: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        self.embedder = EmbeddingServer(cfg)
+        if index_cfg is None:
+            index_cfg = UBISConfig(dim=cfg.embed_dim, max_postings=2048,
+                                   capacity=96, max_ids=1 << 20,
+                                   use_pallas="off")
+        if seed_vectors is None:
+            seed_vectors = np.random.default_rng(cfg.seed).normal(
+                size=(1024, index_cfg.dim)).astype(np.float32)
+        self.index = UBISDriver(index_cfg, seed_vectors)
+        self._next_id = 0
+        self.stats = {"ingested": 0, "queries": 0}
+
+    # -- streaming ingestion ------------------------------------------------
+
+    def ingest_tokens(self, token_batch: np.ndarray) -> np.ndarray:
+        """Embed + insert a batch of fresh documents; returns their ids."""
+        vecs = self.embedder.embed(token_batch)
+        return self.ingest_vectors(vecs)
+
+    def ingest_vectors(self, vecs: np.ndarray) -> np.ndarray:
+        ids = np.arange(self._next_id, self._next_id + len(vecs))
+        self._next_id += len(vecs)
+        self.index.insert(vecs, ids)
+        self.index.tick()
+        self.stats["ingested"] += len(vecs)
+        return ids
+
+    def delete(self, ids: np.ndarray):
+        self.index.delete(ids)
+
+    # -- queries -------------------------------------------------------------
+
+    def query_tokens(self, token_batch: np.ndarray, k: Optional[int] = None):
+        return self.query_vectors(self.embedder.embed(token_batch), k)
+
+    def query_vectors(self, vecs: np.ndarray, k: Optional[int] = None):
+        k = k or self.cfg.k
+        found, scores = self.index.search(vecs, k)
+        self.stats["queries"] += len(vecs)
+        return found, scores
+
+    def recall_check(self, vecs: np.ndarray, k: int = 10) -> float:
+        found, _ = self.index.search(vecs, k)
+        true, _ = brute_force(self.index.state, self.index.cfg,
+                              jnp.asarray(vecs), k)
+        return ubis_metrics.recall_at_k(found, np.asarray(true))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--docs", type=int, default=2000)
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    cfg = ServeConfig(arch=args.arch)
+    server = RetrievalServer(cfg)
+    rng = np.random.default_rng(0)
+    vocab = server.embedder.model.cfg.vocab
+    t0 = time.time()
+    for off in range(0, args.docs, args.batch):
+        n = min(args.batch, args.docs - off)
+        toks = rng.integers(0, vocab, (n, args.seq)).astype(np.int32)
+        server.ingest_tokens(toks)
+    server.index.flush()
+    t_ing = time.time() - t0
+    qt = rng.integers(0, vocab, (args.queries, args.seq)).astype(np.int32)
+    t0 = time.time()
+    found, _ = server.query_tokens(qt)
+    t_q = time.time() - t0
+    qv = server.embedder.embed(qt)
+    rec = server.recall_check(qv)
+    print(f"ingested {server.stats['ingested']} docs in {t_ing:.1f}s "
+          f"({server.stats['ingested']/t_ing:.0f} docs/s); "
+          f"{args.queries} queries in {t_q:.2f}s; recall@10 {rec:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""Architecture zoo (pure JAX)."""
+from .config import ModelConfig, MoEConfig, ShapeCell, SHAPE_CELLS, cells_for
+from .registry import LM, ARCH_IDS, get_config, get_model
+
+__all__ = ["ModelConfig", "MoEConfig", "ShapeCell", "SHAPE_CELLS",
+           "cells_for", "LM", "ARCH_IDS", "get_config", "get_model"]

@@ -1,0 +1,179 @@
+"""Attention for the zoo: chunked-causal (train/prefill), blocked-local
+(sliding window), bidirectional (encoder), cross, and cached decode.
+
+Pure-JAX implementations are memory-bounded by construction (online
+softmax over KV chunks — the XLA analogue of flash attention) so the
+32k-prefill cells fit; the Pallas kernel (kernels/flash_attention.py) is
+the TPU fast path, selected by ``backend``.
+
+Decode uses a KV cache whose *sequence* axis carries the logical axis
+"kv_seq"; the production sharding rules map it onto the ``model`` mesh
+axis (sequence-parallel decode: GQA kv-head counts (4-16) do not divide
+the 16-way model axis, so heads stay local and XLA inserts the partial
+softmax reductions across sequence shards — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import shard
+
+NEG = -1e30
+
+
+def _gqa_shape(q, n_kv):
+    B, Hq, L, D = q.shape
+    return q.reshape(B, n_kv, Hq // n_kv, L, D)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None, q_offset: int = 0,
+                      chunk_q: int = 512, chunk_k: int = 512,
+                      backend: str = "auto"):
+    """q (B,Hq,Lq,D); k,v (B,Hkv,Lk,D) -> (B,Hq,Lq,D).
+
+    ``q_offset``: global position of q row 0 (Lk - Lq for end-aligned
+    decode/prefill continuation)."""
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    if backend != "off" and jax.default_backend() == "tpu":
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   backend=backend)
+    cq = min(chunk_q, Lq)
+    ck = min(chunk_k, Lk)
+    # pad to chunk multiples (q at front to keep end alignment, k at back)
+    pq = (-Lq) % cq
+    pk = (-Lk) % ck
+    qp = jnp.pad(q, ((0, 0), (0, 0), (pq, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq, nk = qp.shape[2] // cq, kp.shape[2] // ck
+    G = Hq // Hkv
+    qg = qp.reshape(B, Hkv, G, nq, cq, D).transpose(3, 0, 1, 2, 4, 5)
+    kg = kp.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+    vg = vp.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+    scale = 1.0 / (D ** 0.5)
+    q_off = q_offset - pq
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc
+        # mixed precision (flash-standard): matmul INPUTS stay in the
+        # storage dtype (bf16 on TPU -> half the HBM traffic of an
+        # upcast), accumulation in f32 via preferred_element_type
+        qc = qc * jnp.asarray(scale, qc.dtype)
+        qpos = q_off + qi * cq + jnp.arange(cq)
+
+        def k_step(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            mask = (kpos[None, :] < Lk)
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, -1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(qc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), kg, vg))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, nq * cq, D)
+    return out[:, :, pq:, :]
+
+
+def local_attention(q, k, v, window: int, backend: str = "auto"):
+    """Blocked sliding-window causal attention, O(L * 2w) compute.
+
+    Exact for self-attention (Lq == Lk) when blocks = window size: query
+    block i attends key blocks {i-1, i} with the band mask."""
+    B, Hq, L, D = q.shape
+    Hkv = k.shape[1]
+    if backend != "off" and jax.default_backend() == "tpu":
+        return ops.flash_attention(q, k, v, causal=True, window=window,
+                                   backend=backend)
+    w = window
+    p = (-L) % w
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, p), (0, 0)))
+    # one extra leading key block of zeros stands in for "block -1"
+    kp = jnp.pad(k, ((0, 0), (0, 0), (w, p), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (w, p), (0, 0)))
+    Lp = L + p
+    nb = Lp // w
+    G = Hq // Hkv
+    qb = qp.reshape(B, Hkv, G, nb, w, D).transpose(3, 0, 1, 2, 4, 5)
+    scale = 1.0 / (D ** 0.5)
+    qpos_in = jnp.arange(w)[:, None]
+    kpos_in = jnp.arange(2 * w)[None, :] - w
+    band = (kpos_in <= qpos_in) & (kpos_in > qpos_in - w)
+
+    def step(_, i_qc):
+        i, qc = i_qc                                    # qc (B,Hkv,G,w,D)
+        k2 = jax.lax.dynamic_slice_in_dim(kp, i * w, 2 * w, axis=2)
+        v2 = jax.lax.dynamic_slice_in_dim(vp, i * w, 2 * w, axis=2)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk",
+                       qc * jnp.asarray(scale, qc.dtype), k2,
+                       preferred_element_type=jnp.float32)
+        gq = i * w + qpos_in                            # (w, 1) global
+        gk = i * w + kpos_in                            # (1, 2w) global
+        valid = band & (gk >= 0) & (gk < L) & (gq < L)
+        s = jnp.where(valid[None, None, None], s, NEG)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", pr.astype(q.dtype), v2,
+                       preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(step, None, (jnp.arange(nb), qb))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Lp, D)
+    return out[:, :, :L]
+
+
+def decode_attention(q1, k_cache, v_cache, pos, window: Optional[int] = None):
+    """One-token attention against a cache.
+
+    q1 (B,Hq,D); caches (B,Hkv,S,D); pos (): index of the current token
+    (cache entries 0..pos valid).  The cache seq axis may be sharded
+    ("kv_seq" -> model); XLA inserts the cross-shard softmax reductions.
+    """
+    B, Hq, D = q1.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q1.reshape(B, Hkv, G, D).astype(jnp.float32) / (D ** 0.5)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(S)
+    mask = kpos <= pos
+    if window is not None:
+        mask = mask & (kpos > pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q1.dtype)
+
+
+def cache_update(k_cache, v_cache, k1, v1, pos):
+    """Write the new token's k/v at ``pos`` (dynamic-update-slice; on a
+    seq-sharded cache GSPMD keeps the update local to the owning shard)."""
+    k1 = k1[:, :, None, :].astype(k_cache.dtype)
+    v1 = v1[:, :, None, :].astype(v_cache.dtype)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k1, pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v1, pos, axis=2)
+    return k_cache, v_cache

@@ -1,0 +1,153 @@
+"""Shared building blocks for the architecture zoo (pure JAX, no flax).
+
+Parameters are pytrees whose leaves are ``Param(value, axes)`` — the
+``axes`` tuple names each dimension with a *logical* axis ("embed",
+"heads", "ffn", "vocab", "experts", ...).  ``distributed/sharding.py``
+maps logical axes onto mesh axes, both for parameter shardings (pjit
+in_shardings) and for in-graph activation constraints (``shard()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: Tuple[Optional[str], ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+
+
+def param(key, shape, axes, scale=0.02, dtype=jnp.float32, init="normal"):
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "normal":
+        v = jax.random.normal(key, shape, dtype) * scale
+    elif init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        raise ValueError(init)
+    return Param(v, tuple(axes))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def values(tree):
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_of(tree):
+    """Logical axes as PartitionSpec leaves (PartitionSpec is an atomic
+    pytree leaf, so downstream tree_maps do not descend into the names)."""
+    return jax.tree_util.tree_map(
+        lambda p: jax.sharding.PartitionSpec(*p.axes), tree,
+        is_leaf=is_param)
+
+
+# --- activation sharding annotations ---------------------------------------
+# A context-managed mapping logical-axis -> mesh-axis (or None).  When no
+# context is installed (single-device tests), ``shard`` is a no-op.
+
+_RULES: list = []
+
+
+class sharding_rules:
+    def __init__(self, rules: dict):
+        self.rules = rules
+
+    def __enter__(self):
+        _RULES.append(self.rules)
+        return self
+
+    def __exit__(self, *a):
+        _RULES.pop()
+
+
+def shard(x, *axes):
+    """Constrain activation ``x`` with logical axes (None = replicated).
+
+    No-op unless a rules context with a ``__mesh__`` entry is installed
+    (single-device tests and mesh-less training skip constraints)."""
+    if not _RULES:
+        return x
+    rules = _RULES[-1]
+    mesh = rules.get("__mesh__")
+    if mesh is None:
+        return x
+    spec = jax.sharding.PartitionSpec(
+        *[rules.get(a) if a is not None else None for a in axes])
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+# --- primitive layers -------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, -1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding.  x: (..., L, D) with D even; positions: (..., L)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP.  x: (..., D); w_gate/up: (D, F); w_down: (F, D)."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = shard(h, "batch", *([None] * (h.ndim - 2)), "ffn")
+    return h @ w_down
+
+
+def init_mlp(key, d_model, d_ff, n_layers_scale=1.0, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 0.02
+    return {
+        "w_gate": param(k1, (d_model, d_ff), ("embed", "ffn"), s, dtype),
+        "w_up": param(k2, (d_model, d_ff), ("embed", "ffn"), s, dtype),
+        "w_down": param(k3, (d_ff, d_model), ("ffn", "embed"),
+                        s * n_layers_scale, dtype),
+    }
+
+
+def apply_mlp(p, x):
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def softmax_cross_entropy(logits, targets, mask=None):
+    """logits (..., V) f32; targets (...,) int32.  Mean over masked tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

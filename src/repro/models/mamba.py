@@ -1,0 +1,139 @@
+"""Mamba-1 selective SSM block (the jamba hybrid's workhorse mixer).
+
+The diagonal selective scan ``h_t = a_t ⊙ h_{t-1} + b_t`` is evaluated
+with ``jax.lax.associative_scan`` *within* fixed-size chunks (parallel
+depth log T_M) and a ``lax.scan`` carry *across* chunks, which bounds
+the materialised (B, T_M, d_inner, d_state) tensors — the adaptation of
+the CUDA selective-scan kernel's SRAM blocking to XLA/TPU (DESIGN.md §2).
+Decode is the O(1) single-token recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import param, shard
+
+T_M = 256  # chunk length for the associative scan
+
+
+def init_mamba(key, d_model: int, d_state: int, expand: int, d_conv: int,
+               out_scale=0.02, dtype=jnp.float32):
+    d_inner = expand * d_model
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 7)
+    # A initialised to -[1..N] (S4D-real), stored as log
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, d_state)))
+    return {
+        "in_proj": param(ks[0], (d_model, 2 * d_inner), ("embed", "ffn"),
+                         0.02, dtype),
+        "conv_w": param(ks[1], (d_conv, d_inner), (None, "ffn"), 0.02,
+                        dtype),
+        "conv_b": param(ks[2], (d_inner,), ("ffn",), 0.0, dtype,
+                        init="zeros"),
+        "x_proj": param(ks[3], (d_inner, dt_rank + 2 * d_state),
+                        ("ffn", None), 0.02, dtype),
+        "dt_proj": param(ks[4], (dt_rank, d_inner), (None, "ffn"), 0.02,
+                         dtype),
+        "dt_bias": param(ks[5], (d_inner,), ("ffn",), 0.02, dtype),
+        "a_log": Paramlike(a_init),
+        "d_skip": param(ks[6], (d_inner,), ("ffn",), 1.0, dtype,
+                        init="ones"),
+        "out_proj": param(jax.random.fold_in(key, 7), (d_inner, d_model),
+                          ("ffn", "embed"), out_scale, dtype),
+    }
+
+
+def Paramlike(v):
+    from .layers import Param
+    return Param(v, ("ffn", None))
+
+
+def _ssm_scan(a, b, h0):
+    """a, b: (B, L, E, N); h0: (B, E, N).  Chunked associative scan."""
+    B, L, E, N = a.shape
+    pad = (-L) % T_M
+    a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (L + pad) // T_M
+    a = a.reshape(B, nc, T_M, E, N).transpose(1, 0, 2, 3, 4)
+    b = b.reshape(B, nc, T_M, E, N).transpose(1, 0, 2, 3, 4)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk(h, ab):
+        ac, bc = ab                       # (B, T_M, E, N)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = aa * h[:, None] + bb      # (B, T_M, E, N)
+        return h_all[:, -1], h_all
+
+    h_last, hs = jax.lax.scan(chunk, h0, (a, b))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, nc * T_M, E, N)[:, :L]
+    return h_last, hs
+
+
+def apply_mamba(p, x, d_state: int, conv_state=None, ssm_state=None):
+    """x (B, L, D) -> (out, (conv_state, ssm_state))."""
+    B, L, D = x.shape
+    d_inner = p["in_proj"].shape[1] // 2
+    d_conv = p["conv_w"].shape[0]
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)     # (B, L, E)
+    xs = shard(xs, "batch", None, "ffn")
+
+    # causal depthwise conv1d
+    if conv_state is None:
+        conv_state = jnp.zeros((B, d_conv - 1, d_inner), x.dtype)
+    xc = jnp.concatenate([conv_state, xs], axis=1)
+    new_conv_state = xc[:, -(d_conv - 1):] if d_conv > 1 else conv_state
+    xs = sum(xc[:, i:i + L] * p["conv_w"][i] for i in range(d_conv))
+    xs = jax.nn.silu(xs + p["conv_b"])
+
+    proj = xs @ p["x_proj"]               # (B, L, R + 2N)
+    dt_rank = p["dt_proj"].shape[0]
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (B, L, E)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))            # (E, N)
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)      # (B, L, E, N)
+    b = (dt * xs).astype(jnp.float32)[..., None] * \
+        Bm.astype(jnp.float32)[:, :, None, :]               # (B, L, E, N)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    h_last, hs = _ssm_scan(a, b, ssm_state)
+    y = jnp.einsum("blen,bln->ble", hs, Cm.astype(jnp.float32))
+    y = (y + xs.astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = shard(y, "batch", None, "ffn")
+    out = y @ p["out_proj"]
+    return out, (new_conv_state, h_last)
+
+
+def decode_mamba(p, x1, conv_state, ssm_state, d_state: int):
+    """x1 (B, D); conv_state (B, d_conv-1, E); ssm_state (B, E, N)."""
+    B, D = x1.shape
+    d_inner = p["in_proj"].shape[1] // 2
+    d_conv = p["conv_w"].shape[0]
+    xz = x1 @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)     # (B, E)
+    xc = jnp.concatenate([conv_state, xs[:, None]], axis=1)  # (B, d_conv, E)
+    new_conv_state = xc[:, 1:]
+    xs = jnp.einsum("bke,ke->be", xc, p["conv_w"])
+    xs = jax.nn.silu(xs + p["conv_b"])
+    proj = xs @ p["x_proj"]
+    dt_rank = p["dt_proj"].shape[0]
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])   # (B, E)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)       # (B, E, N)
+    b = (dt * xs).astype(jnp.float32)[..., None] * \
+        Bm.astype(jnp.float32)[:, None, :]
+    h = a * ssm_state + b
+    y = jnp.einsum("ben,bn->be", h, Cm.astype(jnp.float32))
+    y = (y + xs.astype(jnp.float32) * p["d_skip"]).astype(x1.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (new_conv_state, h)

@@ -1,0 +1,178 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch avoids the (T, E, C) one-hot tensor of the Mesh-TF lineage:
+tokens are ranked within their routed expert (stable argsort — the same
+conflict-free grouping primitive the UBIS controller uses), dropped past
+capacity, and gathered into an (E, C, D) buffer.  Logical shardings:
+experts -> model axis (EP); capacity rows -> data axis; so under pjit the
+gather/scatter lower to the expected all-to-alls.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoEConfig
+from .layers import Param, param, shard
+
+
+def _ranks_in_group(keys: jax.Array) -> jax.Array:
+    """Stable rank of each element within its equal-key group."""
+    n = keys.shape[0]
+    order = jnp.argsort(keys, stable=True)
+    ks = keys[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    seg_start = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    seg_first = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(seg_start, idx, 0))
+    return jnp.zeros((n,), jnp.int32).at[order].set(idx - seg_first)
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig, out_scale=0.02,
+             dtype=jnp.float32):
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    E, F = mcfg.e_pad, mcfg.d_ff_expert
+    return {
+        "router": param(kr, (d_model, E), ("embed", "experts"), 0.02, dtype),
+        # per-expert FFN dims carry their own logical axis: when experts
+        # shard over "model" (EP) it stays replicated; when the expert
+        # count doesn't divide the model axis the rules flip to
+        # TP-within-expert (experts->None, expert_ffn->model).
+        "w_gate": param(k1, (E, d_model, F),
+                        ("experts", "embed", "expert_ffn"), 0.02, dtype),
+        "w_up": param(k2, (E, d_model, F),
+                      ("experts", "embed", "expert_ffn"), 0.02, dtype),
+        "w_down": param(k3, (E, F, d_model),
+                        ("experts", "expert_ffn", "embed"),
+                        out_scale, dtype),
+    }
+
+
+def apply_moe(p, x: jax.Array, mcfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x (B, L, D) -> (out (B, L, D), aux_loss ()).
+
+    With ``dispatch_groups == G > 1`` the token axis is pre-split into G
+    groups (aligned with the data shards): routing ranks, the dispatch
+    gather and the combine scatter all stay group-local, so the only
+    cross-shard traffic left is the experts' FSDP parameter movement —
+    the GShard/Switch 2-D dispatch (EXPERIMENTS.md §Perf, granite)."""
+    B, L, D = x.shape
+    if mcfg.dispatch_groups > 1:
+        return _apply_moe_grouped(p, x, mcfg)
+    E, K = mcfg.e_pad, mcfg.top_k
+    T = B * L
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)       # (T, E_pad)
+    if E > mcfg.num_experts:                              # padded EP
+        dead = jnp.arange(E) >= mcfg.num_experts
+        logits = jnp.where(dead[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                  # (T, K)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style; over real experts only)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_prob)
+
+    C = int(math.ceil(T * K * mcfg.capacity_factor
+                      / mcfg.num_experts))
+    C = max(8, -(-C // 8) * 8)                            # pad to sublanes
+
+    flat_e = topi.reshape(T * K).astype(jnp.int32)        # routed expert
+    flat_w = topv.reshape(T * K)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    rank = _ranks_in_group(flat_e)
+    ok = rank < C
+    slot = flat_e * C + rank                              # (T*K,) in [0, E*C)
+    slot = jnp.where(ok, slot, E * C)                     # OOB -> dropped
+
+    # dispatch: which flat (token) row sits in each (e, c) seat
+    seat_tok = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        flat_tok, mode="drop")[:E * C]
+    seat_ok = seat_tok < T
+    xg = jnp.where(seat_ok[:, None],
+                   xf[jnp.minimum(seat_tok, T - 1)], 0.0)
+    xg = xg.reshape(E, C, D)
+    xg = shard(xg, "experts", "expert_cap", None)
+
+    h = jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+    h = jax.nn.silu(h) * u
+    h = shard(h, "experts", "expert_cap", "expert_ffn")
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])        # (E, C, D)
+    y = shard(y, "experts", "expert_cap", None)
+
+    # combine: scatter-add weighted expert outputs back to tokens
+    yf = y.reshape(E * C, D)
+    seat_w = jnp.zeros((E * C + 1,), flat_w.dtype).at[slot].set(
+        flat_w, mode="drop")[:E * C]
+    out = jnp.zeros((T, D), y.dtype).at[
+        jnp.where(seat_ok, seat_tok, T)].add(
+            yf * seat_w[:, None], mode="drop")
+    return out.reshape(B, L, D).astype(x.dtype), aux
+
+
+def _apply_moe_grouped(p, x: jax.Array, mcfg: MoEConfig):
+    B, L, D = x.shape
+    E, K, G = mcfg.e_pad, mcfg.top_k, mcfg.dispatch_groups
+    T = B * L
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    xf = x.reshape(G, Tg, D)
+    xf = shard(xf, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xf, p["router"]).astype(jnp.float32)
+    if E > mcfg.num_experts:
+        dead = jnp.arange(E) >= mcfg.num_experts
+        logits = jnp.where(dead[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                  # (G, Tg, K)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+    frac_tokens = jnp.mean(jax.nn.one_hot(
+        topi[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * jnp.mean(probs, axis=(0, 1)))
+
+    C = int(math.ceil(Tg * K * mcfg.capacity_factor / mcfg.num_experts))
+    C = max(8, -(-C // 8) * 8)
+
+    flat_e = topi.reshape(G, Tg * K).astype(jnp.int32)
+    flat_w = topv.reshape(G, Tg * K)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)[None],
+        (G, Tg * K))
+    rank = jax.vmap(_ranks_in_group)(flat_e)
+    ok = rank < C
+    slot = jnp.where(ok, flat_e * C + rank, E * C)
+
+    seat_tok = jnp.full((G, E * C + 1), Tg, jnp.int32)
+    seat_tok = jax.vmap(lambda st, sl, ft: st.at[sl].set(ft, mode="drop"))(
+        seat_tok, slot, flat_tok)[:, :E * C]
+    seat_ok = seat_tok < Tg
+    xg = jax.vmap(lambda xfg, st, so: jnp.where(
+        so[:, None], xfg[jnp.minimum(st, Tg - 1)], 0.0))(
+            xf, seat_tok, seat_ok)
+    xg = xg.reshape(G, E, C, D)
+    xg = shard(xg, "batch", "experts", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", xg, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xg, p["w_up"])
+    h = jax.nn.silu(h) * u
+    h = shard(h, "batch", "experts", None, "expert_ffn")
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = shard(y, "batch", "experts", None, None)
+
+    yf = y.reshape(G, E * C, D)
+    seat_w = jnp.zeros((G, E * C + 1), flat_w.dtype)
+    seat_w = jax.vmap(lambda sw, sl, fw: sw.at[sl].set(fw, mode="drop"))(
+        seat_w, slot, flat_w)[:, :E * C]
+    out = jax.vmap(lambda yfg, st, so, sw: jnp.zeros(
+        (Tg, D), yfg.dtype).at[jnp.where(so, st, Tg)].add(
+            yfg * sw[:, None], mode="drop"))(yf, seat_tok, seat_ok, seat_w)
+    out = out.reshape(B, L, D).astype(x.dtype)
+    return shard(out, "batch", None, None), aux

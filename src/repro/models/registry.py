@@ -1,0 +1,267 @@
+"""Model registry: config -> LM object (init / train_loss / prefill /
+decode_step / input_specs), plus the architecture catalogue."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ShapeCell, SHAPE_CELLS, cells_for
+from .layers import (Param, axes_of, param, rms_norm, shard,
+                     softmax_cross_entropy, values)
+from .transformer import (SubLayer, init_layer_cache, init_segment,
+                          plan_segments, run_decode, run_segments,
+                          MOE_AUX_COEF)
+
+ENC_SRC_LEN = 1024  # audio-frontend stub length (seamless)
+
+
+def chunked_lm_loss(x, head, targets, mask, chunk: int = 1024,
+                    vocab_real: int | None = None):
+    """Cross-entropy without materialising (B, L, V) logits at once.
+    ``vocab_real``: mask padded-vocab logits out of the softmax."""
+    B, L, D = x.shape
+    pad = (-L) % chunk
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    tp = jnp.pad(targets, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (L + pad) // chunk
+    xc = xp.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    tc = tp.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mc = mp.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, xtm):
+        s, n = carry
+        xch, tch, mch = xtm
+        logits = (xch @ head).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        if vocab_real is not None and vocab_real < logits.shape[-1]:
+            pad_mask = jnp.arange(logits.shape[-1]) < vocab_real
+            logits = jnp.where(pad_mask, logits, -1e30)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tch[..., None], axis=-1)[..., 0]
+        m = mch.astype(jnp.float32)
+        return (s + jnp.sum((lse - ll) * m), n + jnp.sum(m)), None
+
+    (s, n), _ = jax.lax.scan(step, (0.0, 0.0), (xc, tc, mc))
+    return s / jnp.maximum(n, 1.0)
+
+
+class LM:
+    """One architecture, fully assembled."""
+
+    def __init__(self, cfg: ModelConfig, remat: str = "full",
+                 unroll: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        self.unroll = unroll  # unrolled scans (exact HLO cost analysis)
+        self.segments = plan_segments(cfg)
+        if cfg.family == "encdec":
+            self.enc_segments = [
+                ((SubLayer("attn", "mlp", causal=False),),
+                 cfg.encoder_layers)]
+        else:
+            self.enc_segments = []
+
+    # -- parameters ------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        n_total = max(cfg.n_layers + cfg.encoder_layers, 1)
+        out_scale = 1.0 / (2.0 * n_total) ** 0.5
+        ks = iter(jax.random.split(key, 8 + len(self.segments)
+                                   + len(self.enc_segments)))
+        tree: Dict[str, Any] = {
+            "emb": param(next(ks), (cfg.vocab_padded, cfg.d_model),
+                         ("vocab", "embed")),
+            "ln_f": param(next(ks), (cfg.d_model,), ("embed",),
+                          init="zeros"),
+        }
+        if not cfg.tie_embeddings:
+            tree["head"] = param(next(ks), (cfg.d_model, cfg.vocab_padded),
+                                 ("embed", "vocab"))
+        for si, (descrs, repeat) in enumerate(self.segments):
+            tree[f"seg{si}"] = init_segment(next(ks), cfg, descrs, repeat,
+                                            out_scale)
+        if self.enc_segments:
+            enc = {"ln_f": param(next(ks), (cfg.d_model,), ("embed",),
+                                 init="zeros")}
+            for si, (descrs, repeat) in enumerate(self.enc_segments):
+                enc[f"seg{si}"] = init_segment(next(ks), cfg, descrs,
+                                               repeat, out_scale)
+            tree["enc"] = enc
+        return tree
+
+    def param_shapes(self, dtype=jnp.float32):
+        """(ShapeDtypeStruct values, logical PartitionSpec axes) without
+        allocating anything."""
+        tree = jax.eval_shape(self.init, jax.random.key(0))
+        vals = values(tree)
+        if dtype is not None:
+            vals = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, dtype), vals)
+        return vals, axes_of(tree)
+
+    # -- forward paths (value trees) --------------------------------------
+
+    def _encode(self, pv, src):
+        x, _ = run_segments(pv["enc"], self.cfg, self.enc_segments, src,
+                            jnp.arange(src.shape[1]), remat=self.remat,
+                            unroll=self.unroll)
+        return rms_norm(x, pv["enc"]["ln_f"], self.cfg.norm_eps)
+
+    def _inputs(self, pv, batch):
+        tokens = batch["tokens"]
+        x = jnp.take(pv["emb"], tokens, axis=0)
+        x = shard(x, "batch", None, None)
+        enc_out = None
+        prefix_len = 0
+        if "prefix" in batch:                      # vlm patch embeddings
+            x = jnp.concatenate([batch["prefix"].astype(x.dtype), x],
+                                axis=1)
+            prefix_len = batch["prefix"].shape[1]
+        if "src" in batch:                         # audio frames (encdec)
+            enc_out = self._encode(pv, batch["src"].astype(x.dtype))
+        return x, enc_out, prefix_len
+
+    def _head(self, pv):
+        if self.cfg.tie_embeddings:
+            return pv["emb"].T
+        return pv["head"]
+
+    def _mask_pad_vocab(self, logits):
+        if self.cfg.vocab_padded > self.cfg.vocab:
+            keep = jnp.arange(logits.shape[-1]) < self.cfg.vocab
+            logits = jnp.where(keep, logits, -1e30)
+        return logits
+
+    def train_loss(self, pv, batch):
+        cfg = self.cfg
+        x, enc_out, prefix_len = self._inputs(pv, batch)
+        positions = jnp.arange(x.shape[1])
+        x, aux = run_segments(pv, cfg, self.segments, x, positions,
+                              enc_out=enc_out, remat=self.remat,
+                              unroll=self.unroll)
+        x = rms_norm(x, pv["ln_f"], cfg.norm_eps)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        targets = batch["targets"]
+        mask = (targets >= 0).astype(jnp.float32)
+        loss = chunked_lm_loss(x, self._head(pv),
+                               jnp.maximum(targets, 0), mask,
+                               vocab_real=cfg.vocab)
+        return loss + MOE_AUX_COEF * aux, {"lm_loss": loss, "moe_aux": aux}
+
+    def prefill(self, pv, batch):
+        cfg = self.cfg
+        x, enc_out, _ = self._inputs(pv, batch)
+        positions = jnp.arange(x.shape[1])
+        x, _aux, caches = run_segments(pv, cfg, self.segments, x, positions,
+                                       enc_out=enc_out, remat=self.remat,
+                                       collect_cache=True,
+                                       unroll=self.unroll)
+        x = rms_norm(x, pv["ln_f"], cfg.norm_eps)
+        logits = (x[:, -1] @ self._head(pv)).astype(jnp.float32)
+        logits = self._mask_pad_vocab(logits)
+        return logits, caches
+
+    def decode_step(self, pv, caches_v, token, pos):
+        """token (B,) int32; pos () int32; caches as returned by
+        init_cache/prefill.  Returns (logits (B, V), new caches)."""
+        cfg = self.cfg
+        x1 = jnp.take(pv["emb"], token, axis=0)
+        x1 = shard(x1, "batch", None)
+        x1, caches = run_decode(pv, cfg, self.segments, caches_v, x1, pos,
+                                unroll=self.unroll)
+        x1 = rms_norm(x1, pv["ln_f"], cfg.norm_eps)
+        logits = (x1 @ self._head(pv)).astype(jnp.float32)
+        logits = shard(logits, "batch", "vocab")
+        logits = self._mask_pad_vocab(logits)
+        return logits, caches
+
+    # -- caches ------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.float32):
+        """Param-tree of zeroed caches (list per segment, stacked)."""
+        out = []
+        for descrs, repeat in self.segments:
+            one = {str(i): init_layer_cache(self.cfg, d, batch, seq_len,
+                                            dtype)
+                   for i, d in enumerate(descrs)}
+            stacked = jax.tree_util.tree_map(
+                lambda p: Param(
+                    jnp.zeros((repeat,) + p.value.shape, p.value.dtype),
+                    ("layers",) + p.axes),
+                one, is_leaf=lambda x: isinstance(x, Param))
+            out.append(stacked)
+        return out
+
+    def cache_shapes(self, batch: int, seq_len: int, dtype=jnp.float32):
+        tree = jax.eval_shape(
+            lambda: self.init_cache(batch, seq_len, dtype))
+        return values(tree), axes_of(tree)
+
+    # -- assigned input-shape cells ---------------------------------------
+
+    def input_specs(self, cell: ShapeCell, dtype=jnp.float32):
+        """(ShapeDtypeStruct tree, logical-axes tree) for one cell."""
+        cfg = self.cfg
+        B, L = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        f32 = dtype
+        sds = jax.ShapeDtypeStruct
+        if cell.kind in ("train", "prefill"):
+            L_tok = L
+            batch: Dict[str, Any] = {}
+            ax: Dict[str, Any] = {}
+            if cfg.family == "vlm":
+                P = cfg.prefix_len
+                L_tok = L - P
+                batch["prefix"] = sds((B, P, cfg.d_model), f32)
+                ax["prefix"] = ("batch", None, None)
+            if cfg.family == "encdec":
+                batch["src"] = sds((B, ENC_SRC_LEN, cfg.d_model), f32)
+                ax["src"] = ("batch", None, None)
+            batch["tokens"] = sds((B, L_tok), i32)
+            ax["tokens"] = ("batch", None)
+            if cell.kind == "train":
+                batch["targets"] = sds((B, L_tok), i32)
+                ax["targets"] = ("batch", None)
+            return batch, ax
+        # decode: one token against a seq_len cache
+        cache_vals, cache_ax = self.cache_shapes(B, L, dtype)
+        batch = {"token": sds((B,), i32), "pos": sds((), i32),
+                 "cache": cache_vals}
+        ax = {"token": ("batch",), "pos": (), "cache": cache_ax}
+        return batch, ax
+
+
+# ---------------------------------------------------------------------------
+# catalogue
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "seamless-m4t-medium", "tinyllama-1.1b", "qwen3-4b", "gemma3-4b",
+    "deepseek-67b", "rwkv6-3b", "granite-moe-3b-a800m",
+    "moonshot-v1-16b-a3b", "llava-next-34b", "jamba-1.5-large-398b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def get_model(arch_id: str, *, reduced: bool = False,
+              remat: str = "full", unroll: bool = False,
+              **overrides) -> LM:
+    cfg = get_config(arch_id)
+    if reduced:
+        cfg = cfg.reduced(**overrides)
+    elif overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return LM(cfg, remat=remat, unroll=unroll)

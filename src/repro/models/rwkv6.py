@@ -1,0 +1,189 @@
+"""RWKV-6 (Finch) — attention-free token mixing with data-dependent decay.
+
+Chunkwise-parallel formulation: within a chunk of ``T_C`` tokens the
+per-channel decay factorises, so the intra-chunk term is two matmuls
+(the standard linear-attention chunk trick); the chunk-to-chunk state
+(B, H, dk, dv) propagates through a ``lax.scan``.  Decode is the O(1)
+single-token recurrence on the same state.
+
+Recurrence (per head, channels c, state S):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+with w_t = exp(-exp(w0 + tanh(x_t A) B)) — the data-dependent decay that
+distinguishes Finch from RWKV-5.  Token shift uses learned per-channel
+lerp coefficients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import param, shard
+
+T_C = 16            # chunk length; bounds exp(|cumulative log-decay|)
+LOGW_MIN = -5.0     # per-token decay clamp (keeps the factorisation in f32)
+LORA_R = 64
+
+
+def init_time_mix(key, d_model: int, head_dim: int, out_scale=0.02,
+                  dtype=jnp.float32):
+    H = d_model // head_dim
+    ks = jax.random.split(key, 10)
+    D = d_model
+    return {
+        "mu": param(ks[0], (5, D), (None, "embed"), 0.5, dtype, init="ones"),
+        "w_r": param(ks[1], (D, D), ("embed", "heads_flat"), 0.02, dtype),
+        "w_k": param(ks[2], (D, D), ("embed", "heads_flat"), 0.02, dtype),
+        "w_v": param(ks[3], (D, D), ("embed", "heads_flat"), 0.02, dtype),
+        "w_g": param(ks[4], (D, D), ("embed", "heads_flat"), 0.02, dtype),
+        "w_o": param(ks[5], (D, D), ("heads_flat", "embed"), out_scale,
+                     dtype),
+        "w0": param(ks[6], (D,), ("heads_flat",), 0.5, dtype),
+        "lora_a": param(ks[7], (D, LORA_R), ("embed", None), 0.02, dtype),
+        "lora_b": param(ks[8], (LORA_R, D), (None, "heads_flat"), 0.02,
+                        dtype),
+        "u": param(ks[9], (D,), ("heads_flat",), 0.02, dtype),
+    }
+
+
+def init_channel_mix(key, d_model: int, d_ff: int, out_scale=0.02,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "mu": param(ks[0], (2, d_model), (None, "embed"), 0.5, dtype,
+                    init="ones"),
+        "w_k": param(ks[1], (d_model, d_ff), ("embed", "ffn"), 0.02, dtype),
+        "w_v": param(ks[2], (d_ff, d_model), ("ffn", "embed"), out_scale,
+                     dtype),
+        "w_r": param(ks[3], (d_model, d_model), ("embed", "embed_out"),
+                     0.02, dtype),
+    }
+
+
+def _token_shift(x, x_last):
+    """x (B, L, D); x_last (B, D) = final token of the previous segment."""
+    prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def _lerp(x, prev, mu):
+    m = jax.nn.sigmoid(mu)
+    return x * m + prev * (1.0 - m)
+
+
+def apply_time_mix(p, x, head_dim: int, state=None, x_last=None):
+    """x (B, L, D).  Returns (out, (state, x_last_new)).
+
+    state: (B, H, dk, dv) f32; x_last: (B, D)."""
+    B, L, D = x.shape
+    H = D // head_dim
+    dk = dv = head_dim
+    if x_last is None:
+        x_last = jnp.zeros((B, D), x.dtype)
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+    prev = _token_shift(x, x_last)
+    xr = _lerp(x, prev, p["mu"][0])
+    xk = _lerp(x, prev, p["mu"][1])
+    xv = _lerp(x, prev, p["mu"][2])
+    xw = _lerp(x, prev, p["mu"][3])
+    xg = _lerp(x, prev, p["mu"][4])
+
+    r = (xr @ p["w_r"]).reshape(B, L, H, dk)
+    k = (xk @ p["w_k"]).reshape(B, L, H, dk)
+    v = (xv @ p["w_v"]).reshape(B, L, H, dv)
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = -jnp.exp(
+        (p["w0"] + jnp.tanh(xw @ p["lora_a"]) @ p["lora_b"]).astype(
+            jnp.float32))
+    logw = jnp.clip(logw, LOGW_MIN, -1e-4).reshape(B, L, H, dk)
+    u = p["u"].reshape(H, dk)
+
+    # pad L to chunk multiple
+    pad = (-L) % T_C
+    Lp = L + pad
+    padT = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rc = padT(r.astype(jnp.float32)).reshape(B, Lp // T_C, T_C, H, dk)
+    kc = padT(k.astype(jnp.float32)).reshape(B, Lp // T_C, T_C, H, dk)
+    vc = padT(v.astype(jnp.float32)).reshape(B, Lp // T_C, T_C, H, dv)
+    wc = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                 constant_values=-1e-4).reshape(B, Lp // T_C, T_C, H, dk)
+    # scan over chunks; swap to (nc, B, T_C, H, *)
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), wc.transpose(1, 0, 2, 3, 4))
+
+    tri_lo = jnp.tril(jnp.ones((T_C, T_C), bool), -1)
+
+    def chunk(S, rkvw):
+        rr, kk, vv, ww = rkvw            # (B, T_C, H, dk/dv)
+        W = jnp.cumsum(ww, axis=1)       # inclusive cumulative log decay
+        Wm1 = W - ww                     # exclusive (decay up to t-1)
+        r_d = rr * jnp.exp(Wm1)          # r_t * P_{t-1}
+        k_d = kk * jnp.exp(-W)           # k_j / P_j
+        # intra-chunk: A[t, j] = sum_c r_d[t,c] k_d[j,c],  j < t
+        A = jnp.einsum("bthc,bjhc->bhtj", r_d, k_d)
+        A = jnp.where(tri_lo[None, None], A, 0.0)
+        o = jnp.einsum("bhtj,bjhd->bthd", A, vv)
+        # bonus (current token)
+        o = o + jnp.einsum("bthc,bthc,bthd->bthd",
+                           rr, u[None, None] * kk, vv)
+        # inter-chunk: r_d @ S
+        o = o + jnp.einsum("bthc,bhcd->bthd", r_d, S)
+        # state update: S' = diag(P_end) S + sum_j (k_j P_end/P_j) v_j^T
+        Pend = jnp.exp(W[:, -1])         # (B, H, dk)
+        k_s = kk * jnp.exp(W[:, -1][:, None] - W)
+        S_new = Pend[..., None] * S + jnp.einsum("bjhc,bjhd->bhcd", k_s, vv)
+        return S_new, o
+
+    state, outs = jax.lax.scan(chunk, state, xs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Lp, H * dv)[:, :L]
+    out = out.astype(x.dtype) * g
+    out = shard(out, "batch", None, None)
+    out = out @ p["w_o"]
+    return out, (state, x[:, -1])
+
+
+def decode_time_mix(p, x1, state, x_last, head_dim: int):
+    """Single-token recurrence.  x1 (B, D); returns (out, (state, x1))."""
+    B, D = x1.shape
+    H = D // head_dim
+    dk = dv = head_dim
+    xr = _lerp(x1, x_last, p["mu"][0])
+    xk = _lerp(x1, x_last, p["mu"][1])
+    xv = _lerp(x1, x_last, p["mu"][2])
+    xw = _lerp(x1, x_last, p["mu"][3])
+    xg = _lerp(x1, x_last, p["mu"][4])
+    r = (xr @ p["w_r"]).reshape(B, H, dk).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, H, dk).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, H, dv).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = -jnp.exp((p["w0"] + jnp.tanh(xw @ p["lora_a"]) @ p["lora_b"]
+                     ).astype(jnp.float32))
+    w = jnp.exp(jnp.clip(logw, LOGW_MIN, -1e-4)).reshape(B, H, dk)
+    u = p["u"].reshape(H, dk)
+    kv = jnp.einsum("bhc,bhd->bhcd", k, v)
+    o = jnp.einsum("bhc,bhcd->bhd", r, u[None, ..., None] * kv + state)
+    state = w[..., None] * state + kv
+    out = (o.reshape(B, H * dv).astype(x1.dtype) * g) @ p["w_o"]
+    return out, (state, x1)
+
+
+def apply_channel_mix(p, x, x_last=None):
+    B, L, D = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((B, D), x.dtype)
+    prev = _token_shift(x, x_last)
+    xk = _lerp(x, prev, p["mu"][0])
+    xr = _lerp(x, prev, p["mu"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    k = shard(k, "batch", None, "ffn")
+    kv = k @ p["w_v"]
+    return jax.nn.sigmoid(xr @ p["w_r"]) * kv, x[:, -1]
+
+
+def decode_channel_mix(p, x1, x_last):
+    xk = _lerp(x1, x_last, p["mu"][0])
+    xr = _lerp(x1, x_last, p["mu"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    kv = k @ p["w_v"]
+    return jax.nn.sigmoid(xr @ p["w_r"]) * kv, x1

@@ -1,0 +1,7 @@
+"""Optimizers + schedules (self-contained; no optax in this environment)."""
+from .adamw import AdamW, AdamWConfig
+from .schedule import cosine_warmup
+from .compress import ef_int8_allreduce, CompressionState
+
+__all__ = ["AdamW", "AdamWConfig", "cosine_warmup", "ef_int8_allreduce",
+           "CompressionState"]

@@ -1,0 +1,20 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor_frac: float = 0.1):
+    """Linear warmup -> cosine decay to ``floor_frac * peak``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps)
+                     / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

@@ -1,0 +1,108 @@
+"""Balance Detector behaviour (paper IV-C): Alg. 1 semantics, the
+Fig. 5 reproduction (SPFresh accumulates small postings; UBIS does not),
+and the beyond-paper termination guard."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import UBISConfig, UBISDriver, balance
+from repro.core import version_manager as vm
+from conftest import make_clustered
+
+
+def _live_lengths(state):
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    alive = np.asarray(state.allocated) & (status != 3)
+    return np.asarray(state.lengths)[alive]
+
+
+def test_split_preserves_members():
+    cfg = UBISConfig(dim=8, max_postings=64, capacity=64, l_min=4,
+                     l_max=48, max_ids=1 << 12, use_pallas="off")
+    rng = np.random.default_rng(0)
+    vecs = make_clustered(600, d=8, k=4, seed=2)
+    drv = UBISDriver(cfg, vecs[:100], round_size=64, bg_ops_per_round=4)
+    drv.insert(vecs[:400], np.arange(400))
+    # force one split manually on the fullest posting
+    lengths = np.asarray(drv.state.lengths)
+    pid = int(np.argmax(lengths))
+    if lengths[pid] > cfg.l_max:
+        before = set(np.asarray(drv.state.ids[pid])[
+            np.asarray(drv.state.slot_valid[pid])].tolist())
+        from repro.core.update import mark_status
+        from repro.core.types import STATUS_SPLITTING
+        drv.state = mark_status(drv.state, jnp.array([pid]),
+                                STATUS_SPLITTING)
+        drv.state, new_pids = balance.balance_split(
+            drv.state, cfg, jnp.asarray(pid, jnp.int32))
+        # every member is findable afterwards (posting or cache)
+        il = np.asarray(drv.state.id_loc)
+        for i in before:
+            assert il[i] != -1, f"id {i} lost by split"
+        # parent retired with successor pointers
+        status = np.asarray(vm.unpack_status(drv.state.rec_meta))
+        assert status[pid] == 3
+        s1, _ = vm.succ_ids(drv.state.rec_succ)
+        assert int(np.asarray(s1)[pid]) >= 0
+
+
+def test_termination_guard_halves_outlier_cluster():
+    """A tight cluster + one outlier used to livelock the paper's Alg. 1
+    (95/1 splits forever); the median-bisection guard halves it."""
+    cfg = UBISConfig(dim=4, max_postings=32, capacity=64, l_min=4,
+                     l_max=48, max_ids=1 << 10, use_pallas="off")
+    rng = np.random.default_rng(1)
+    tight = rng.normal(size=(60, 4)).astype(np.float32) * 0.01
+    tight[0] += 50.0  # one outlier
+    drv = UBISDriver(cfg, tight, round_size=64, bg_ops_per_round=2)
+    drv.insert(tight, np.arange(60))
+    from repro.core.update import mark_status
+    from repro.core.types import STATUS_SPLITTING
+    lengths = np.asarray(drv.state.lengths)
+    pid = int(np.argmax(lengths))
+    assert lengths[pid] > cfg.l_max
+    drv.state = mark_status(drv.state, jnp.array([pid]), STATUS_SPLITTING)
+    drv.state, new_pids = balance.balance_split(
+        drv.state, cfg, jnp.asarray(pid, jnp.int32))
+    new_lens = np.asarray(drv.state.lengths)[np.asarray(new_pids)]
+    alloc = np.asarray(drv.state.allocated)[np.asarray(new_pids)]
+    for ln, al in zip(new_lens, alloc):
+        if al:
+            assert ln <= cfg.l_max, "split did not reduce below l_max"
+
+
+def test_fig5_small_posting_accumulation():
+    """The paper's Fig. 5: after streaming updates, SPFresh leaves a
+    higher fraction of small postings than UBIS."""
+    ratios = {}
+    data = make_clustered(6000, d=12, k=24, seed=5)
+    for mode in ("spfresh", "ubis"):
+        cfg = UBISConfig(dim=12, max_postings=512, capacity=96, l_min=10,
+                         l_max=80, cache_capacity=1024, max_ids=1 << 13,
+                         use_pallas="off", mode=mode)
+        drv = UBISDriver(cfg, data[:800], round_size=256,
+                         bg_ops_per_round=8)
+        for off in range(0, 6000, 1000):
+            drv.insert(data[off:off + 1000], np.arange(off, off + 1000),
+                       tick_between=True)
+            # searches drive SPFresh's merge trigger
+            drv.search(data[:64], 10)
+            drv.tick()
+        drv.flush(max_ticks=30)
+        lens = _live_lengths(drv.state)
+        lens = lens[lens > 0]
+        ratios[mode] = float((lens < cfg.l_min).sum()) / max(len(lens), 1)
+    assert ratios["ubis"] <= ratios["spfresh"] + 1e-9, ratios
+
+
+def test_merge_absorbs_small_posting():
+    cfg = UBISConfig(dim=8, max_postings=64, capacity=64, l_min=8,
+                     l_max=48, max_ids=1 << 12, use_pallas="off")
+    vecs = make_clustered(500, d=8, k=3, seed=7)
+    drv = UBISDriver(cfg, vecs[:80], round_size=64, bg_ops_per_round=4)
+    drv.insert(vecs, np.arange(500))
+    drv.flush(max_ticks=40)
+    lens = _live_lengths(drv.state)
+    lens = lens[lens > 0]
+    # after quiescence no posting sits below the merge threshold
+    assert (lens >= cfg.l_min).all() or len(lens) <= 1, lens

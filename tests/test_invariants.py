@@ -1,0 +1,139 @@
+"""Property-based system invariants (hypothesis): under ANY interleaving
+of inserts / deletes / background ticks / searches, the index never
+loses, duplicates, or fabricates a vector, and the structural counters
+stay consistent.
+
+These are the distributed-systems guarantees the paper's CAS +
+version-manager design is supposed to provide; here they are checked
+mechanically over randomized schedules for BOTH modes (ubis/spfresh).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import UBISConfig, UBISDriver
+from repro.core import version_manager as vm
+
+settings.register_profile("sys", max_examples=8, deadline=None)
+settings.load_profile("sys")
+
+DIM = 8
+
+
+def _mk_cfg(mode):
+    return UBISConfig(dim=DIM, max_postings=256, capacity=64, l_min=4,
+                      l_max=48, cache_capacity=512, max_ids=1 << 13,
+                      use_pallas="off", mode=mode)
+
+
+def audit(state, cfg):
+    """Returns (locations dict id->where, duplicates count)."""
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    alloc = np.asarray(state.allocated)
+    vis = alloc & (status != 3)
+    ids = np.asarray(state.ids)
+    sv = np.asarray(state.slot_valid)
+    where, dup = {}, 0
+    for p in np.flatnonzero(vis):
+        for c in np.flatnonzero(sv[p]):
+            i = int(ids[p, c])
+            if i in where:
+                dup += 1
+            where[i] = ("post", p, c)
+    cv = np.asarray(state.cache_valid)
+    ci = np.asarray(state.cache_ids)
+    for s in np.flatnonzero(cv):
+        i = int(ci[s])
+        if i in where:
+            dup += 1
+        where[i] = ("cache", s)
+    return where, dup
+
+
+def check_all(state, cfg, live_ids):
+    where, dup = audit(state, cfg)
+    assert dup == 0, "duplicated vector"
+    # id_loc agreement: every id the map knows is where the map says
+    il = np.asarray(state.id_loc)
+    tracked = set(int(i) for i in np.flatnonzero(il != -1))
+    assert tracked == set(where), (
+        f"id_loc tracks {len(tracked)} ids but audit found {len(where)}")
+    # no externally-live id may be missing unless it was rejected
+    assert set(where) <= live_ids
+    # counters: lengths == live slots per visible posting
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    alloc = np.asarray(state.allocated)
+    sv = np.asarray(state.slot_valid)
+    lengths = np.asarray(state.lengths)
+    used = np.asarray(state.used)
+    for p in np.flatnonzero(alloc & (status != 3)):
+        assert lengths[p] == sv[p].sum(), f"length mismatch at {p}"
+        assert used[p] >= lengths[p]
+        assert used[p] <= cfg.capacity
+
+
+@pytest.mark.parametrize("mode", ["ubis", "spfresh"])
+@given(data=st.data())
+def test_random_schedule_invariants(mode, data):
+    cfg = _mk_cfg(mode)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    seed_vecs = rng.normal(size=(200, DIM)).astype(np.float32) * 4
+    drv = UBISDriver(cfg, seed_vecs, round_size=64, bg_ops_per_round=4,
+                     insert_retries=1)
+    next_id = 0
+    live = set()
+    ops_seq = data.draw(st.lists(
+        st.sampled_from(["insert", "delete", "tick", "search"]),
+        min_size=4, max_size=12))
+    for op in ops_seq:
+        if op == "insert":
+            n = int(rng.integers(1, 120))
+            vecs = rng.normal(size=(n, DIM)).astype(np.float32) * 4
+            ids = np.arange(next_id, next_id + n)
+            next_id += n
+            res = drv.insert(vecs, ids, tick_between=False)
+            live |= set(int(i) for i in ids)
+            # rejected ids are NOT live (caller owns retry)
+            il = np.asarray(drv.state.id_loc)
+            for i in ids:
+                if il[i] == -1:
+                    live.discard(int(i))
+        elif op == "delete" and live:
+            k = min(len(live), int(rng.integers(1, 40)))
+            dels = rng.choice(sorted(live), size=k, replace=False)
+            drv.delete(dels)
+            # SPFresh's lock model BLOCKS deletes on non-NORMAL postings;
+            # only ids the index actually dropped leave the live set
+            il = np.asarray(drv.state.id_loc)
+            live -= {int(x) for x in dels if il[int(x)] == -1}
+        elif op == "tick":
+            drv.tick()
+        elif op == "search":
+            q = rng.normal(size=(8, DIM)).astype(np.float32)
+            found, _ = drv.search(q, 5)
+            # results only contain live ids
+            for f in found.ravel():
+                assert f == -1 or int(f) in live
+        check_all(drv.state, cfg, live)
+    drv.flush(max_ticks=50)
+    check_all(drv.state, cfg, live)
+
+
+def test_free_list_integrity():
+    """Posting ids on the free list are unique and unallocated."""
+    cfg = _mk_cfg("ubis")
+    rng = np.random.default_rng(3)
+    vecs = rng.normal(size=(3000, DIM)).astype(np.float32) * 4
+    drv = UBISDriver(cfg, vecs[:500], round_size=128, bg_ops_per_round=8,
+                     gc_lag=4)
+    drv.insert(vecs, np.arange(3000))
+    drv.flush(max_ticks=60)
+    st_ = drv.state
+    top = int(st_.free_top)
+    free = np.asarray(st_.free_list)[:top]
+    assert len(np.unique(free)) == top, "duplicate ids on free list"
+    alloc = np.asarray(st_.allocated)
+    assert not alloc[free].any(), "allocated posting on free list"
+    # every posting is either allocated or on the free list
+    assert top + alloc.sum() == cfg.max_postings

@@ -1,0 +1,86 @@
+"""Search correctness: recall floors vs brute force, snapshot
+visibility, cache searchability during splits."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (UBISConfig, UBISDriver, brute_force, metrics,
+                        search as search_mod)
+from repro.core import version_manager as vm
+from conftest import make_clustered
+
+
+def _driver(n=4000, mode="ubis", dim=16):
+    cfg = UBISConfig(dim=dim, max_postings=512, capacity=96, l_min=10,
+                     l_max=80, cache_capacity=1024, max_ids=1 << 14,
+                     use_pallas="off", mode=mode)
+    data = make_clustered(n, d=dim, seed=3)
+    drv = UBISDriver(cfg, data[:800], round_size=256, bg_ops_per_round=8)
+    drv.insert(data, np.arange(n))
+    drv.flush(max_ticks=50)
+    return drv, cfg, data
+
+
+def test_recall_floor():
+    drv, cfg, data = _driver()
+    q = make_clustered(64, d=16, seed=11)
+    found, _ = drv.search(q, 10)
+    true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
+    rec = metrics.recall_at_k(found, np.asarray(true))
+    assert rec > 0.9, rec
+
+
+def test_recall_after_churn():
+    drv, cfg, data = _driver()
+    rng = np.random.default_rng(0)
+    # delete a third, insert fresh
+    drv.delete(rng.choice(4000, size=1300, replace=False))
+    fresh = make_clustered(1500, d=16, seed=77)
+    drv.insert(fresh, np.arange(10000, 11500))
+    drv.flush(max_ticks=50)
+    q = make_clustered(64, d=16, seed=13)
+    found, _ = drv.search(q, 10)
+    true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
+    rec = metrics.recall_at_k(found, np.asarray(true))
+    assert rec > 0.85, rec
+
+
+def test_snapshot_visibility_gates_new_postings():
+    """A posting whose weight exceeds the snapshot version is invisible:
+    searches at an old version never see fresh postings."""
+    drv, cfg, _ = _driver(n=1500)
+    state = drv.state
+    old_version = jnp.uint32(0)  # time-travel snapshot
+    vis_now = vm.visible(state.rec_meta, state.allocated,
+                         state.global_version)
+    vis_then = vm.visible(state.rec_meta, state.allocated, old_version)
+    # strictly fewer postings visible to the old snapshot (splits since)
+    assert int(vis_then.sum()) < int(vis_now.sum())
+    weights = np.asarray(vm.unpack_weight(state.rec_meta))
+    then = np.asarray(vis_then)
+    assert (weights[then] == 0).all()
+
+
+def test_cached_vectors_searchable_mid_split():
+    """Paper IV-B2: vectors parked in the cache during a split must be
+    found by search before the split completes."""
+    cfg = UBISConfig(dim=8, max_postings=128, capacity=64, l_min=4,
+                     l_max=48, cache_capacity=256, max_ids=1 << 12,
+                     use_pallas="off")
+    data = make_clustered(800, d=8, k=2, seed=4)
+    drv = UBISDriver(cfg, data[:100], round_size=128, bg_ops_per_round=2)
+    drv.insert(data[:600], np.arange(600))
+    # mark the fullest posting SPLITTING, then insert vectors aimed at it
+    lengths = np.asarray(drv.state.lengths)
+    pid = int(np.argmax(lengths))
+    from repro.core.update import mark_status
+    from repro.core.types import STATUS_SPLITTING
+    drv.state = mark_status(drv.state, jnp.array([pid]), STATUS_SPLITTING)
+    centroid = np.asarray(drv.state.centroids[pid])
+    probe_vecs = (centroid[None] + 0.01 * np.random.default_rng(0).normal(
+        size=(16, 8))).astype(np.float32)
+    drv.insert(probe_vecs, np.arange(700, 716), tick_between=False)
+    assert int(jnp.sum(drv.state.cache_valid)) > 0, "expected cache use"
+    found, _ = drv.search(probe_vecs, 3)
+    hits = sum(1 for i, row in enumerate(found) if 700 + i in row.tolist())
+    assert hits >= 14, f"cached vectors invisible to search ({hits}/16)"

@@ -1,0 +1,94 @@
+"""Posting Recorder (version manager) unit + property tests."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import version_manager as vm
+from repro.core.types import (NO_SUCC, STATUS_DELETED, STATUS_MERGING,
+                              STATUS_NORMAL, STATUS_SPLITTING)
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2 ** 30 - 1)),
+                min_size=1, max_size=40))
+def test_pack_unpack_roundtrip(pairs):
+    status = jnp.array([p[0] for p in pairs], jnp.uint32)
+    weight = jnp.array([p[1] for p in pairs], jnp.uint32)
+    meta = vm.pack_meta(status, weight)
+    np.testing.assert_array_equal(vm.unpack_status(meta), status)
+    np.testing.assert_array_equal(vm.unpack_weight(meta), weight)
+
+
+@given(st.lists(st.tuples(st.integers(0, 0xFFFF), st.integers(0, 0xFFFF)),
+                min_size=1, max_size=40))
+def test_succ_roundtrip(pairs):
+    s1 = jnp.array([p[0] for p in pairs], jnp.uint32)
+    s2 = jnp.array([p[1] for p in pairs], jnp.uint32)
+    packed = vm.pack_succ(s1, s2)
+    u1, u2 = vm.unpack_succ(packed)
+    np.testing.assert_array_equal(u1, s1)
+    np.testing.assert_array_equal(u2, s2)
+    g1, g2 = vm.succ_ids(packed)
+    expect = np.asarray(s1).astype(np.int64)
+    expect[expect == NO_SUCC] = -1
+    np.testing.assert_array_equal(np.asarray(g1).astype(np.int64), expect)
+
+
+@given(st.lists(st.integers(-1, 15), min_size=1, max_size=64))
+def test_first_occurrence_mask(xs):
+    m = np.asarray(vm.first_occurrence_mask(jnp.array(xs)))
+    seen = set()
+    for x, flag in zip(xs, m):
+        assert flag == (x not in seen)
+        seen.add(x)
+
+
+def test_transition_one_winner_per_word():
+    """CAS semantics: duplicate pids in one round -> first writer wins."""
+    meta = vm.pack_meta(jnp.zeros(8, jnp.uint32), jnp.arange(8))
+    pids = jnp.array([3, 3, 5, -1, 3], jnp.int32)
+    out = vm.transition(meta, pids, STATUS_SPLITTING)
+    st_ = np.asarray(vm.unpack_status(out))
+    assert st_[3] == STATUS_SPLITTING and st_[5] == STATUS_SPLITTING
+    assert (st_[[0, 1, 2, 4, 6, 7]] == STATUS_NORMAL).all()
+    # weights preserved when not specified
+    np.testing.assert_array_equal(vm.unpack_weight(out), jnp.arange(8))
+
+
+def test_visibility_rule():
+    meta = vm.pack_meta(
+        jnp.array([STATUS_NORMAL, STATUS_DELETED, STATUS_NORMAL,
+                   STATUS_MERGING], jnp.uint32),
+        jnp.array([0, 0, 10, 2], jnp.uint32))
+    alloc = jnp.array([True, True, True, False])
+    vis = np.asarray(vm.visible(meta, alloc, jnp.uint32(5)))
+    # [normal w0 -> vis; deleted -> no; normal w10 > snapshot 5 -> no;
+    #  unallocated -> no]
+    np.testing.assert_array_equal(vis, [True, False, False, False])
+
+
+def test_chase_successors():
+    """DELETED chains resolve to the nearer successor; dead ends flag."""
+    M, d = 8, 4
+    meta = vm.pack_meta(
+        jnp.array([3, 0, 0, 3, 3, 0, 3, 3], jnp.uint32),  # 0,3,4 deleted
+        jnp.zeros(8, jnp.uint32))
+    succ = vm.pack_succ(
+        jnp.array([1, NO_SUCC, NO_SUCC, 4, NO_SUCC, NO_SUCC, NO_SUCC,
+                   NO_SUCC], jnp.uint32),
+        jnp.array([2, NO_SUCC, NO_SUCC, NO_SUCC, NO_SUCC, NO_SUCC,
+                   NO_SUCC, NO_SUCC], jnp.uint32))
+    cents = jnp.zeros((M, d)).at[1].set(1.0).at[2].set(-1.0)
+    alloc = jnp.ones(8, bool)
+    pts = jnp.array([[0.9, 0.9, 0.9, 0.9], [-.9, -.9, -.9, -.9],
+                     [0.0, 0, 0, 0], [0, 0, 0, 0]])
+    pids = jnp.array([0, 0, 3, 6], jnp.int32)
+    out, dead = vm.chase_successors(meta, succ, alloc, cents, pids, pts, 4)
+    out = np.asarray(out)
+    assert out[0] == 1          # nearer centroid picked
+    assert out[1] == 2
+    assert bool(dead[2])        # 3 -> 4 (deleted, no succ) dead end
+    assert bool(dead[3])        # 6 deleted, no succ
+    assert not bool(dead[0]) and not bool(dead[1])
