@@ -1,0 +1,87 @@
+"""Diff a fresh ``bench_results.json`` against the committed baseline.
+
+    python benchmarks/check_regression.py bench_results.json BENCH_baseline.json
+
+Rows are matched on their identity keys (figure + mode/fg/bg/
+balance_factor/batch/dataset); metric columns are compared with a
+relative tolerance.  Exit 1 on any metric regressing by more than
+``THRESHOLD`` (20%).  Rows present in only one file are reported but do
+not fail the check (figures are added over time; the baseline only pins
+what it has seen).
+
+Wired into CI as a *non-blocking* step for now: single-core CI runners
+make TPS noisy, so the signal is advisory until variance is
+characterised.  Recall/small_frac are near-deterministic and the ones to
+watch.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+THRESHOLD = 0.20
+ID_KEYS = ("figure", "mode", "dataset", "batch", "fg", "bg",
+           "balance_factor")
+# metric -> direction ("up" = larger is better)
+METRICS = {"tps": "up", "qps": "up", "recall": "up", "final_recall": "up",
+           "small_frac": "down"}
+# below this absolute scale, relative comparison is meaningless noise
+ABS_FLOOR = {"small_frac": 0.02, "recall": 0.05, "final_recall": 0.05}
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((k, row[k]) for k in ID_KEYS if k in row)
+
+
+def compare(fresh: list, baseline: list) -> int:
+    base = {row_key(r): r for r in baseline}
+    failures, checked, matched = [], 0, 0
+    for row in fresh:
+        b = base.get(row_key(row))
+        if b is None:
+            continue
+        matched += 1
+        for metric, direction in METRICS.items():
+            if metric not in row or metric not in b:
+                continue
+            new, old = float(row[metric]), float(b[metric])
+            if new < 0 or old < 0:  # -1 = not evaluated
+                continue
+            checked += 1
+            floor = ABS_FLOOR.get(metric, 0.0)
+            if max(abs(old), abs(new)) <= floor:
+                continue
+            if direction == "up":
+                bad = new < old * (1 - THRESHOLD)
+            else:
+                bad = new > old * (1 + THRESHOLD) + floor
+            if bad:
+                failures.append(
+                    f"  {dict(row_key(row))} {metric}: {old:g} -> {new:g}")
+    print(f"regression check: {matched}/{len(fresh)} rows matched baseline, "
+          f"{checked} metric comparisons, {len(failures)} regressions "
+          f"(threshold {THRESHOLD:.0%})")
+    if failures:
+        print("REGRESSIONS:")
+        print("\n".join(failures))
+        return 1
+    return 0
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    try:
+        with open(argv[1]) as f:
+            fresh = json.load(f)
+        with open(argv[2]) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_regression: cannot load inputs: {e}")
+        return 2
+    return compare(fresh, baseline)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -74,7 +74,10 @@ def fig8_fg_bg_ratio(scale: BenchScale = QUICK) -> List[Dict]:
     """Paper Fig. 8: foreground/background resource ratio.
 
     Threads -> phase budgets (DESIGN.md §2): foreground budget is the
-    jobs/round; background budget is bg ops/tick.  Sweep the ratio."""
+    jobs/round; background budget is bg ops/tick.  Sweep the ratio.
+    Also reports background-plane cost per structural op — the number the
+    batched ``background_round`` is meant to drive down as bg grows (one
+    device call per tick regardless of batch size)."""
     import time
     from repro.data import DriftingVectorStream
     rows = []
@@ -86,6 +89,15 @@ def fig8_fg_bg_ratio(scale: BenchScale = QUICK) -> List[Dict]:
         drv = make_driver(scale, "ubis", batches[0],
                           round_size=256 * fg, bg_ops=bg)
         drv.search(queries[:8], scale.k)
+        # warm the background_round compile for THIS batch width: a tick
+        # on a fresh driver only marks (two-phase), so an all-padding
+        # round is the only way to get the compile out of the timed loop
+        from repro.core import balance as _balance
+        import jax.numpy as _jnp
+        B = max(bg, 1)
+        _balance.background_round(
+            drv.state, drv.cfg, _jnp.zeros(B, _jnp.int32),
+            _jnp.full(B, -1, _jnp.int32))
         nid = 0
         t0 = time.perf_counter()
         n_ins = 0
@@ -99,9 +111,15 @@ def fig8_fg_bg_ratio(scale: BenchScale = QUICK) -> List[Dict]:
         drv.search(queries, scale.k)
         qps = scale.queries / (time.perf_counter() - t0)
         rec = eval_recall(drv, queries, scale.k)
+        bg_ops = max(drv.stats["bg_ops"], 1)
         rows.append({"figure": "fig8", "fg": fg, "bg": bg,
                      "tps": round(tps, 1), "qps": round(qps, 1),
-                     "recall": round(rec, 4)})
+                     "recall": round(rec, 4),
+                     "bg_ops": int(drv.stats["bg_ops"]),
+                     # background_round execution cost only (bg_exec_time
+                     # excludes detect/drain/GC scheduler overhead)
+                     "bg_ms_per_op": round(
+                         drv.stats["bg_exec_time"] * 1e3 / bg_ops, 2)})
     return rows
 
 

@@ -6,8 +6,13 @@ by keeping posting lengths in memory and scanning them periodically,
 and (b) *identifies the root* — splits that produce an extremely small
 side — via the balance factor ``f`` (Alg. 1 BalanceSplit).
 
-All ops here are single-posting jitted transforms (the background
-'thread pool'); the driver sequences them, two-phase:
+Two layers of ops live here:
+  * single-posting jitted transforms (``balance_split`` / ``merge_postings``
+    / ``compact_posting`` / ``reassign_check``) — the reference semantics,
+    kept as the sequential oracle the equivalence tests check against;
+  * ``background_round`` — the production path: the WHOLE marked batch
+    (kinds encoded as an int lane) executes as one SPMD program per tick.
+The driver sequences rounds two-phase:
   round t   : mark SPLITTING/MERGING  (foreground traffic diverts to cache)
   round t+1 : execute; old posting -> DELETED with successor pointers.
 """
@@ -21,8 +26,9 @@ import jax.numpy as jnp
 from ..kernels import ops
 from ..kernels.posting_scan import BIG
 from . import version_manager as vm
-from .types import (NO_ID, STATUS_DELETED, STATUS_NORMAL, IndexState,
-                    UBISConfig)
+from .types import (KIND_COMPACT, KIND_MERGE, KIND_NONE, KIND_SPLIT, NO_ID,
+                    NO_SUCC, STATUS_DELETED, STATUS_MERGING, STATUS_NORMAL,
+                    STATUS_SPLITTING, BackgroundRound, IndexState, UBISConfig)
 from .update import (alloc_postings, batched_append, cache_append,
                      dataclasses_replace, free_postings, oob, _flat_set)
 
@@ -123,21 +129,16 @@ def _masked_mean(tile, mask, fallback):
 
 def _write_members(state, cfg, pid, tile, tids, member_mask):
     """Compact ``member_mask`` rows of a source tile into posting ``pid``
-    (freshly allocated, empty).  Returns state with id_loc repointed."""
+    (freshly allocated, empty).  Returns state with id_loc repointed.
+    Row packing is shared with the batched round via ``_pack_rows`` so
+    the sequential oracle and production path cannot drift."""
     C = cfg.capacity
-    order = jnp.argsort(~member_mask, stable=True)   # members first
-    n = jnp.sum(member_mask)
-    in_rows = order
-    rows = tile[in_rows]
-    rids = tids[in_rows]
-    keep = jnp.arange(C) < n
-    rids = jnp.where(keep, rids, NO_ID)
-    vectors = state.vectors.at[pid].set(
-        jnp.where(keep[:, None], rows, 0).astype(state.vectors.dtype))
+    rows, rids, keep, n = _pack_rows(tile, tids, member_mask)
+    vectors = state.vectors.at[pid].set(rows.astype(state.vectors.dtype))
     ids = state.ids.at[pid].set(rids)
     slot_valid = state.slot_valid.at[pid].set(keep)
-    used = state.used.at[pid].set(n.astype(jnp.int32))
-    lengths = state.lengths.at[pid].set(n.astype(jnp.int32))
+    used = state.used.at[pid].set(n)
+    lengths = state.lengths.at[pid].set(n)
     flat = pid * C + jnp.arange(C, dtype=jnp.int32)
     id_loc = state.id_loc.at[oob(rids, keep, cfg.max_ids)].set(flat,
                                                                mode="drop")
@@ -313,21 +314,12 @@ def merge_postings(state: IndexState, cfg: UBISConfig, pid):
 
     state, pids_new = alloc_postings(state, cfg, 1, cent[None], ver)
     pnew = pids_new[0]
-    # write both parents' members (total < l_max <= C by eligibility)
-    order1 = jnp.argsort(~m1, stable=True)
-    order2 = jnp.argsort(~m2, stable=True)
-    rows = jnp.concatenate([t1[order1], t2[order2]])
-    rids = jnp.concatenate([i1[order1], i2[order2]])
-    keepm = jnp.concatenate([m1[order1], m2[order2]])
-    # stable-compact the concatenated members into the first n slots
-    order = jnp.argsort(~keepm, stable=True)[:C]
-    rows, rids, keepm = rows[order], rids[order], keepm[order]
-    rids = jnp.where(keepm, rids, NO_ID)
-    vectors = state.vectors.at[pnew].set(
-        jnp.where(keepm[:, None], rows, 0).astype(state.vectors.dtype))
+    # write both parents' members (total < l_max <= C by eligibility);
+    # packing shared with the batched round via _merge_rows (no drift)
+    rows, rids, keepm, n = _merge_rows(t1, i1, m1, t2, i2, m2)
+    vectors = state.vectors.at[pnew].set(rows.astype(state.vectors.dtype))
     ids = state.ids.at[pnew].set(rids)
     slot_valid = state.slot_valid.at[pnew].set(keepm)
-    n = jnp.sum(keepm).astype(jnp.int32)
     used = state.used.at[pnew].set(n)
     lengths = state.lengths.at[pnew].set(n)
     flat = pnew * C + jnp.arange(C, dtype=jnp.int32)
@@ -404,3 +396,411 @@ def gc_round(state: IndexState, cfg: UBISConfig, min_live_version, k: int):
     valid = dead[order]
     state = free_postings(state, order.astype(jnp.int32), valid)
     return state, jnp.sum(valid)
+
+
+# ---------------------------------------------------------------------------
+# batched background round — the whole marked batch in ONE device program
+# ---------------------------------------------------------------------------
+# The driver used to sequence split/merge/compact one posting at a time,
+# with a host status read, a free-list read, and a separate jit dispatch
+# per op.  ``background_round`` replaces that loop: the batch of marked
+# (kind, pid) ops executes as a single SPMD program — vmapped masked
+# 2-means over a (B, C, d) gather, ranked free-list pops so concurrent
+# allocations never collide, one scatter installing every successor
+# pointer, and a fused post-op reassign pass.  Conflicts that the
+# sequential order used to resolve implicitly are resolved explicitly:
+#   * duplicate pids        -> first occurrence wins (recorder CAS rule);
+#   * two merges, 1 partner -> first in batch order wins, loser defers;
+#   * free-list exhaustion  -> a sequential grant scan admits ops in
+#                              batch order while slots last, later ops
+#                              defer (revert to NORMAL, re-marked later);
+#   * postings retiring this round are excluded from every move-out /
+#     reassign target set, so no vector can land in a dying tile.
+
+
+def _pack_rows(tile, tids, member_mask):
+    """Compact ``member_mask`` rows of one tile to the front (the
+    vmappable core of ``_write_members``, minus the state scatter)."""
+    C = tile.shape[0]
+    order = jnp.argsort(~member_mask, stable=True)
+    n = jnp.sum(member_mask)
+    rows = tile[order]
+    rids = tids[order]
+    keep = jnp.arange(C) < n
+    rows = jnp.where(keep[:, None], rows, 0)
+    rids = jnp.where(keep, rids, NO_ID)
+    return rows, rids, keep, n.astype(jnp.int32)
+
+
+def _merge_rows(t1, i1, m1, t2, i2, m2):
+    """Stable-compact the live members of two tiles into one (the
+    vmappable core of ``merge_postings``' tile construction)."""
+    C = t1.shape[0]
+    o1 = jnp.argsort(~m1, stable=True)
+    o2 = jnp.argsort(~m2, stable=True)
+    rows = jnp.concatenate([t1[o1], t2[o2]])
+    rids = jnp.concatenate([i1[o1], i2[o2]])
+    keepm = jnp.concatenate([m1[o1], m2[o2]])
+    order = jnp.argsort(~keepm, stable=True)[:C]
+    rows, rids, keepm = rows[order], rids[order], keepm[order]
+    rows = jnp.where(keepm[:, None], rows, 0)
+    rids = jnp.where(keepm, rids, NO_ID)
+    return rows, rids, keepm, jnp.sum(keepm).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "reassign", "use_cache"))
+def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
+                     reassign: bool = True, use_cache: bool = True):
+    """Execute a padded batch of marked background ops in one device call.
+
+    kinds: (B,) int32 in {KIND_NONE, KIND_SPLIT, KIND_MERGE, KIND_COMPACT}
+    pids:  (B,) int32 posting ids (-1 = padding)
+
+    Ops must have been marked (SPLITTING for split/compact, MERGING for
+    merge) in an earlier round — the two-phase window the vector cache
+    depends on.  ``use_cache=False`` folds split-side spills back into
+    child ``a`` instead of the cache (the sharded path, where the
+    replicated cache cannot be written per-shard).  Returns
+    (state, BackgroundRound).  Works on a sharded sub-pool too: all
+    shapes derive from ``state`` and ``cfg.max_postings`` is only used
+    as an out-of-bounds scatter sentinel (>= any local pool size).
+    """
+    B = kinds.shape[0]
+    C = cfg.capacity
+    M = state.lengths.shape[0]
+    MS = cfg.max_postings           # OOB sentinel, >= M under shard_map
+    d = cfg.dim
+    ver = state.global_version + jnp.uint32(1)
+
+    kinds = jnp.asarray(kinds, jnp.int32)
+    pids = jnp.asarray(pids, jnp.int32)
+    safe = jnp.clip(pids, 0, M - 1)
+    status = vm.unpack_status(state.rec_meta)
+
+    want = jnp.where(kinds == KIND_MERGE, STATUS_MERGING, STATUS_SPLITTING)
+    valid = ((pids >= 0) & (kinds != KIND_NONE)
+             & vm.first_occurrence_mask(pids)
+             & state.allocated[safe] & (status[safe] == want))
+
+    lengths0 = state.lengths[safe]
+    # a split whose live length no longer exceeds l_max demotes to compact
+    # (Alg. 1 lines 1-4) — decided on device, no host length read
+    kind = jnp.where(valid & (kinds == KIND_SPLIT) & (lengths0 <= cfg.l_max),
+                     KIND_COMPACT, jnp.where(valid, kinds, KIND_NONE))
+    is_split = kind == KIND_SPLIT
+    is_merge = kind == KIND_MERGE
+
+    normal0 = state.allocated & (status == STATUS_NORMAL)
+
+    # ---- merge partner selection (conflicts: first in batch order wins)
+    n_me = jnp.where(is_merge, lengths0, 0)
+    psc = ops.centroid_score(state.centroids[safe].astype(jnp.float32),
+                             state.centroids, normal0,
+                             backend=cfg.use_pallas)            # (B, M)
+    psc = jnp.where(state.lengths[None, :] + n_me[:, None] < cfg.l_max,
+                    psc, BIG)
+    partner = jnp.argmin(psc, -1).astype(jnp.int32)
+    has_partner = (jnp.min(psc, -1) < BIG / 2) & is_merge
+    pkey = jnp.where(has_partner, partner,
+                     -2 - jnp.arange(B, dtype=jnp.int32))
+    merge_ok = is_merge & (vm.first_occurrence_mask(pkey) | ~has_partner)
+    kind = jnp.where(is_merge & ~merge_ok, KIND_NONE, kind)
+    is_merge = kind == KIND_MERGE
+    is_compact = kind == KIND_COMPACT
+
+    # ---- free-slot budget: sequential grant scan over the batch -------
+    demand = jnp.where(is_split, 2, jnp.where(is_merge, 1, 0))
+
+    def grant_step(off, dem):
+        g = off + dem <= state.free_top
+        return off + jnp.where(g, dem, 0), (g, off)
+
+    _, (granted, starts) = jax.lax.scan(grant_step, jnp.int32(0), demand)
+    exec_ = (kind != KIND_NONE) & granted
+    split_exec = is_split & exec_
+    merge_exec = is_merge & exec_
+    compact_exec = is_compact & exec_
+    deferred = valid & ~exec_            # revert to NORMAL, re-mark later
+    total = jnp.sum(jnp.where(exec_, demand, 0))
+
+    # ---- ranked free-list pops: op i takes slots [start_i, start_i+dem)
+    idx1 = state.free_top - 1 - starts
+    pa = jnp.where(split_exec | merge_exec,
+                   state.free_list[jnp.clip(idx1, 0, M - 1)], -1)
+    pb = jnp.where(split_exec,
+                   state.free_list[jnp.clip(idx1 - 1, 0, M - 1)], -1)
+
+    partner = jnp.where(merge_exec & has_partner, partner, -1)
+    has_partner = partner >= 0
+    # postings retiring this round: split/merge parents + merge partners;
+    # excluded from every append-target set below
+    retiring = jnp.zeros((M,), bool)
+    retiring = retiring.at[oob(pids, split_exec | merge_exec, MS)].set(
+        True, mode="drop")
+    retiring = retiring.at[oob(partner, has_partner, MS)].set(
+        True, mode="drop")
+
+    tiles = state.vectors[safe].astype(jnp.float32)      # (B, C, d)
+    tids_all = state.ids[safe]                           # (B, C)
+    masks = state.slot_valid[safe]                       # (B, C)
+
+    # ---- split planning: vmapped masked 2-means + Alg. 1 balance ------
+    def split_plan(tile, mask):
+        assign, c0, c1 = _two_means(
+            tile, mask, cfg.kmeans_iters,
+            init="median" if cfg.is_ubis else "farthest")
+        n0 = jnp.sum((assign == 0) & mask)
+        n1 = jnp.sum((assign == 1) & mask)
+        small_is_0 = n0 <= n1
+        imbalanced = cfg.is_ubis & (
+            jnp.minimum(n0, n1).astype(jnp.float32)
+            < cfg.balance_factor * jnp.maximum(n0 + n1, 1).astype(
+                jnp.float32))
+        small_side = jnp.where(small_is_0, 0, 1)
+        small_mask = (assign == small_side) & mask
+        big_mask = (assign == 1 - small_side) & mask
+        c_big = jnp.where(small_is_0, c1, c0)
+        c_small = jnp.where(small_is_0, c0, c1)
+        return small_mask, big_mask, c_big, c_small, imbalanced
+
+    small_mask, big_mask, c_big, c_small, imbalanced = jax.vmap(split_plan)(
+        tiles, masks)
+
+    # nearer-posting search for every small-side row, one flat score call
+    sc = ops.centroid_score(tiles.reshape(B * C, d), state.centroids,
+                            normal0 & ~retiring, backend=cfg.use_pallas)
+    best_other = jnp.argmin(sc, -1).astype(jnp.int32).reshape(B, C)
+    best_d = jnp.min(sc, -1).reshape(B, C)
+    d_big_score = (jnp.sum(c_big ** 2, -1)[:, None]
+                   - 2 * jnp.einsum("bcd,bd->bc", tiles, c_big))
+    nearer = best_d < d_big_score
+    move_out = imbalanced[:, None] & small_mask & nearer & split_exec[:, None]
+    fold_in = imbalanced[:, None] & small_mask & ~nearer
+    members_a = jnp.where(imbalanced[:, None], big_mask | fold_in, big_mask)
+    members_b = jnp.where(imbalanced[:, None], jnp.zeros_like(small_mask),
+                          small_mask)
+
+    # termination guard: median bisection when a survivor stays oversize
+    oversized = cfg.is_ubis & (
+        (jnp.sum(members_a, -1) > cfg.l_max)
+        | (jnp.sum(members_b, -1) > cfg.l_max))
+    med = jax.vmap(_median_bisect)(tiles, masks)
+    med_a = (med == 0) & masks
+    med_b = (med == 1) & masks
+    members_a = jnp.where(oversized[:, None], med_a, members_a)
+    members_b = jnp.where(oversized[:, None], med_b, members_b)
+    move_out = move_out & ~oversized[:, None]
+    vmean = jax.vmap(_masked_mean)
+    c_big = jnp.where(oversized[:, None], vmean(tiles, med_a, c_big), c_big)
+    c_small = jnp.where(oversized[:, None], vmean(tiles, med_b, c_small),
+                        c_small)
+    cent_a = vmean(tiles, members_a, c_big)
+    cent_b = vmean(tiles, members_b, c_small)
+    b_empty = ~jnp.any(members_b, -1) & split_exec
+
+    # ---- merge tile construction --------------------------------------
+    safe_partner = jnp.clip(partner, 0, M - 1)
+    pt = state.vectors[safe_partner].astype(jnp.float32)
+    pi = state.ids[safe_partner]
+    pmask = state.slot_valid[safe_partner] & has_partner[:, None]
+    m_rows, m_rids, m_keep, m_n = jax.vmap(_merge_rows)(
+        tiles, tids_all, masks, pt, pi, pmask)
+    n1 = jnp.sum(masks, -1)
+    n2 = jnp.sum(pmask, -1)
+    mean1 = vmean(tiles, masks, state.centroids[safe].astype(jnp.float32))
+    mean2 = vmean(pt, pmask, jnp.zeros((B, d), jnp.float32))
+    cent_m = ((mean1 * n1[:, None] + mean2 * n2[:, None])
+              / jnp.maximum(n1 + n2, 1)[:, None])
+
+    # ---- compact + split children tile packing ------------------------
+    vpack = jax.vmap(_pack_rows)
+    a_rows, a_rids, a_keep, a_n = vpack(tiles, tids_all, members_a)
+    b_rows, b_rids, b_keep, b_n = vpack(tiles, tids_all, members_b)
+    c_rows, c_rids, c_keep, c_n = vpack(tiles, tids_all, masks)
+
+    # ---- one unified scatter writes every produced tile ---------------
+    w_pid = jnp.concatenate([jnp.where(split_exec, pa, -1),
+                             jnp.where(split_exec, pb, -1),
+                             jnp.where(merge_exec, pa, -1),
+                             jnp.where(compact_exec, pids, -1)])
+    w_valid = jnp.concatenate([split_exec, split_exec, merge_exec,
+                               compact_exec])
+    w_rows = jnp.concatenate([a_rows, b_rows, m_rows, c_rows])
+    w_rids = jnp.concatenate([a_rids, b_rids, m_rids, c_rids])
+    w_keep = jnp.concatenate([a_keep, b_keep, m_keep, c_keep])
+    w_keep = w_keep & w_valid[:, None]
+    w_rids = jnp.where(w_keep, w_rids, NO_ID)
+    w_n = jnp.concatenate([a_n, b_n, m_n, c_n])
+    w_cent = jnp.concatenate([cent_a, cent_b, cent_m,
+                              state.centroids[safe].astype(jnp.float32)])
+
+    # claim the popped slots (recorder word + allocated + free_top)
+    new_pids = jnp.concatenate([pa, pb])
+    np_safe = oob(new_pids, new_pids >= 0, MS)
+    rec_meta = state.rec_meta.at[np_safe].set(
+        vm.pack_meta(jnp.uint32(STATUS_NORMAL), ver), mode="drop")
+    rec_succ = state.rec_succ.at[np_safe].set(
+        jnp.uint32((NO_SUCC << 16) | NO_SUCC), mode="drop")
+    allocated = state.allocated.at[np_safe].set(True, mode="drop")
+
+    wt = oob(w_pid, w_valid, MS)
+    vectors = state.vectors.at[wt].set(
+        w_rows.astype(state.vectors.dtype), mode="drop")
+    ids_arr = state.ids.at[wt].set(w_rids, mode="drop")
+    slot_valid = state.slot_valid.at[wt].set(w_keep, mode="drop")
+    used = state.used.at[wt].set(w_n, mode="drop")
+    lengths = state.lengths.at[wt].set(w_n, mode="drop")
+    centroids = state.centroids.at[wt].set(
+        w_cent.astype(state.centroids.dtype), mode="drop")
+    flat = wt[:, None] * C + jnp.arange(C, dtype=jnp.int32)[None, :]
+    id_loc = state.id_loc.at[
+        oob(w_rids.reshape(-1), w_keep.reshape(-1), cfg.max_ids)].set(
+        flat.reshape(-1), mode="drop")
+
+    # ---- batched retirement: DELETED + successor installation ---------
+    succ_b = jnp.where(b_empty, -1, pb)
+    ret_pids = jnp.concatenate([jnp.where(split_exec, pids, -1),
+                                jnp.where(merge_exec, pids, -1),
+                                partner])
+    ret_s1 = jnp.concatenate([jnp.where(split_exec, pa, -1),
+                              jnp.where(merge_exec, pa, -1),
+                              jnp.where(has_partner, pa, -1)])
+    ret_s2 = jnp.concatenate([succ_b,
+                              jnp.full((2 * B,), -1, jnp.int32)])
+    rec_meta, rec_succ = vm.retire(rec_meta, rec_succ, ret_pids,
+                                   ret_s1, ret_s2, ver)
+    # Rescue rule: no mark may outlive a round it rode in.  A lane can be
+    # invalid (stale kind, duplicate pid) while its posting still carries
+    # SPLITTING/MERGING — e.g. a posting double-marked compact+merge: the
+    # first lane fails the status check, the second dies to the dedup.
+    # If no *other* lane handles that posting this round, revert it to
+    # NORMAL so the detector can re-mark it (else it is wedged forever:
+    # detect() only considers NORMAL postings).
+    handled = jnp.zeros((M,), bool).at[
+        oob(pids, exec_ | deferred, MS)].set(True, mode="drop")
+    st0 = status[safe]
+    stuck = ((pids >= 0) & ~exec_ & ~deferred & ~handled[safe]
+             & state.allocated[safe]
+             & ((st0 == STATUS_SPLITTING) | (st0 == STATUS_MERGING)))
+    # deferred ops, rescued stragglers + finished compacts return to NORMAL
+    rec_meta = vm.transition(
+        rec_meta,
+        jnp.concatenate([jnp.where(deferred | stuck, pids, -1),
+                         jnp.where(compact_exec, pids, -1)]),
+        STATUS_NORMAL)
+
+    # ---- neighbourhood graph: children adopt the parent's edges -------
+    pn = state.nbrs[safe]
+    nb_pid = jnp.concatenate([jnp.where(split_exec, pa, -1),
+                              jnp.where(split_exec, pb, -1),
+                              jnp.where(merge_exec, pa, -1)])
+    nb_rows = jnp.concatenate([
+        jnp.concatenate([jnp.where(b_empty, pa, pb)[:, None], pn[:, :-1]], 1),
+        jnp.concatenate([pa[:, None], pn[:, :-1]], 1),
+        pn])
+    nbrs = state.nbrs.at[oob(nb_pid, nb_pid >= 0, MS)].set(
+        nb_rows, mode="drop")
+
+    state = dataclasses_replace(
+        state, vectors=vectors, ids=ids_arr, slot_valid=slot_valid,
+        used=used, lengths=lengths, centroids=centroids, rec_meta=rec_meta,
+        rec_succ=rec_succ, allocated=allocated, nbrs=nbrs, id_loc=id_loc,
+        free_top=state.free_top - total, global_version=ver)
+
+    # empty b-sides go straight back to the free list
+    state = free_postings(state, pb, b_empty)
+
+    # ---- small-side move-outs (one conflict-free append for the batch)
+    mo_vecs = tiles.reshape(B * C, d)
+    mo_ids = tids_all.reshape(B * C)
+    mo = move_out.reshape(B * C)
+    mo_tgt = jnp.where(mo, best_other.reshape(B * C), -1)
+    state, mo_ok, _ = batched_append(state, cfg, mo_vecs, mo_ids, mo_tgt, mo)
+    spill = mo & ~mo_ok
+    if use_cache:
+        state, cache_ok = cache_append(state, cfg, mo_vecs, mo_ids,
+                                       jnp.where(spill, mo_tgt, -1), spill)
+        lost = spill & ~cache_ok
+        n_spill = jnp.sum(spill & cache_ok)
+    else:  # no cache (sharded path): every spill folds back
+        lost = spill
+        n_spill = jnp.int32(0)
+    # spills the cache could not hold (or cache-less mode) fold back into
+    # child a — always fits (|members_a| + |move_out| <= parent length <=
+    # capacity), so a full cache degrades to a lopsided split instead of
+    # silently dropping the vector with id_loc dangling into the retired
+    # parent (the sequential oracle's latent flaw, not replicated here)
+    pa_row = jnp.broadcast_to(pa[:, None], (B, C)).reshape(B * C)
+    state, _, _ = batched_append(state, cfg, mo_vecs, mo_ids,
+                                 jnp.where(lost, pa_row, -1), lost)
+
+    # ---- fused post-op reassign over every posting born this round ----
+    if reassign:
+        r_pid = jnp.concatenate([jnp.where(split_exec, pa, -1),
+                                 jnp.where(split_exec & ~b_empty, pb, -1),
+                                 jnp.where(merge_exec, pa, -1)])
+        rs = jnp.clip(r_pid, 0, M - 1)
+        r_tiles = state.vectors[rs].astype(jnp.float32)
+        r_ids = state.ids[rs]
+        r_mask = state.slot_valid[rs] & (r_pid >= 0)[:, None]
+        status2 = vm.unpack_status(state.rec_meta)
+        sc2 = ops.centroid_score(
+            r_tiles.reshape(3 * B * C, d), state.centroids,
+            state.allocated & (status2 == STATUS_NORMAL),
+            backend=cfg.use_pallas)
+        own = jnp.broadcast_to(rs[:, None], (3 * B, C)).reshape(-1)
+        sc2 = sc2.at[jnp.arange(3 * B * C), own].set(BIG)
+        r_best = jnp.argmin(sc2, -1).astype(jnp.int32)
+        r_bd = jnp.min(sc2, -1)
+        own_c = state.centroids[rs].astype(jnp.float32)
+        d_own = (jnp.sum(own_c ** 2, -1)[:, None]
+                 - 2 * jnp.einsum("bcd,bd->bc", r_tiles, own_c)).reshape(-1)
+        mv = r_mask.reshape(-1) & (r_bd < d_own)
+        state, mv_ok, _ = batched_append(
+            state, cfg, r_tiles.reshape(-1, d), r_ids.reshape(-1),
+            jnp.where(mv, r_best, -1), mv)
+        moved = mv & mv_ok
+        src_flat = (own * C
+                    + jnp.tile(jnp.arange(C, dtype=jnp.int32), 3 * B))
+        slot_valid2 = _flat_set(state.slot_valid,
+                                oob(src_flat, moved, MS * C),
+                                jnp.zeros_like(moved))
+        lengths2 = state.lengths.at[oob(own, moved, MS)].add(
+            -1, mode="drop")
+        state = dataclasses_replace(state, slot_valid=slot_valid2,
+                                    lengths=lengths2)
+        n_re = jnp.sum(moved)
+    else:
+        n_re = jnp.int32(0)
+
+    i32 = lambda x: jnp.asarray(x, jnp.int32)
+    rr = BackgroundRound(
+        executed=i32(jnp.sum(exec_)), n_split=i32(jnp.sum(split_exec)),
+        n_merge=i32(jnp.sum(merge_exec)),
+        n_compact=i32(jnp.sum(compact_exec)),
+        deferred=i32(jnp.sum(deferred) + jnp.sum(stuck)),
+        moved_out=i32(jnp.sum(mo & mo_ok)),
+        spilled=i32(n_spill), reassigned=i32(n_re),
+        freed=i32(jnp.sum(b_empty)))
+    return state, rr
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def select_candidates(state: IndexState, cfg: UBISConfig, k: int):
+    """Device-side candidate pick: top-k due ops by the driver's priority
+    (splits by length desc, then compacts, then merges by length asc).
+    Returns (kinds (k,), pids (k,)) ready for ``background_round`` — used
+    by the sharded path, where selection must not round-trip the host."""
+    split_due, merge_due, compact_due = detect(state, cfg)
+    L = jnp.int32(1) << 20
+    key = jnp.where(split_due, -state.lengths,
+                    jnp.where(compact_due, L,
+                              jnp.where(merge_due, 2 * L + state.lengths,
+                                        3 * L)))
+    order = jnp.argsort(key, stable=True)[:k].astype(jnp.int32)
+    due = key[order] < 3 * L
+    kinds = jnp.where(split_due[order], KIND_SPLIT,
+                      jnp.where(compact_due[order], KIND_COMPACT,
+                                KIND_MERGE))
+    kinds = jnp.where(due, kinds, KIND_NONE)
+    return kinds, jnp.where(due, order, -1)

@@ -27,7 +27,11 @@ import numpy as np
 
 from . import balance, search as search_mod, update
 from .build import initial_state
-from .types import IndexState, UBISConfig
+from .types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT, IndexState,
+                    UBISConfig)
+
+KIND_CODES = {"split": KIND_SPLIT, "merge": KIND_MERGE,
+              "compact": KIND_COMPACT}
 
 
 class UBISDriver:
@@ -167,6 +171,7 @@ class UBISDriver:
         detect + mark new candidates, GC."""
         t0 = time.perf_counter()
         executed = self._execute_marked()
+        self.stats["bg_exec_time"] += time.perf_counter() - t0
         drained = self._drain_cache() if self.cfg.is_ubis else 0
         marked = self._mark_candidates()
         reclaimed = self._gc()
@@ -190,57 +195,35 @@ class UBISDriver:
     # ------------------------------------------------------------------
 
     def _execute_marked(self) -> int:
-        from . import version_manager as vm_
-        from .types import STATUS_MERGING, STATUS_SPLITTING
-        n = 0
+        """Execute the whole marked batch as ONE jitted background round.
+
+        No per-op host reads: status/length/free-slot checks, slot
+        budgeting and conflict resolution all happen on device; the only
+        transfer is the small ``BackgroundRound`` counter struct.
+        """
         marked, self._marked = self._marked, []
         self._marked_set.clear()
-        for kind, pid in marked:
-            # guard: only execute if the posting still carries the mark
-            # (an earlier op in this batch may have retired it)
-            st_now = int(vm_.unpack_status(self.state.rec_meta[pid]))
-            want = STATUS_MERGING if kind == "merge" else STATUS_SPLITTING
-            if st_now != want or not bool(self.state.allocated[pid]):
-                continue
-            free_top = int(self.state.free_top)
-            pid_j = jnp.asarray(pid, jnp.int32)
-            if kind == "split":
-                if free_top < 2:
-                    self.state = update.mark_status(
-                        self.state, pid_j[None], 0)  # back to NORMAL
-                    continue
-                length = int(self.state.lengths[pid])
-                if length <= self.cfg.l_max:
-                    self.state = balance.compact_posting(
-                        self.state, self.cfg, pid_j)
-                    self.state = update.mark_status(
-                        self.state, pid_j[None], 0)
-                else:
-                    self.state, new_pids = balance.balance_split(
-                        self.state, self.cfg, pid_j)
-                    if self.reassign_after_split:
-                        for np_ in np.asarray(new_pids):
-                            if int(np_) >= 0 and bool(
-                                    self.state.allocated[int(np_)]):
-                                self.state, _ = balance.reassign_check(
-                                    self.state, self.cfg,
-                                    jnp.asarray(int(np_), jnp.int32))
-            elif kind == "merge":
-                if free_top < 1:
-                    self.state = update.mark_status(
-                        self.state, pid_j[None], 0)
-                    continue
-                self.state, pnew, _ = balance.merge_postings(
-                    self.state, self.cfg, pid_j)
-                if self.reassign_after_split:
-                    self.state, _ = balance.reassign_check(
-                        self.state, self.cfg, pnew)
-            elif kind == "compact":
-                self.state = balance.compact_posting(
-                    self.state, self.cfg, pid_j)
-                self.state = update.mark_status(self.state, pid_j[None], 0)
-            n += 1
-        return n
+        if not marked:
+            return 0
+        # every marked op MUST ride in this batch: truncating would leave
+        # its SPLITTING/MERGING mark set with nothing queued to clear it
+        # (the detector only re-marks NORMAL postings -> wedged forever)
+        B = max(self.bg_ops, len(marked), 1)
+        kinds = np.zeros(B, np.int32)
+        pids = np.full(B, -1, np.int32)
+        for i, (kind, pid) in enumerate(marked):
+            kinds[i] = KIND_CODES[kind]
+            pids[i] = pid
+        self.state, rr = balance.background_round(
+            self.state, self.cfg, jnp.asarray(kinds), jnp.asarray(pids),
+            reassign=self.reassign_after_split)
+        rr = jax.device_get(rr)
+        self.stats["bg_split"] += int(rr.n_split)
+        self.stats["bg_merge"] += int(rr.n_merge)
+        self.stats["bg_compact"] += int(rr.n_compact)
+        self.stats["bg_deferred"] += int(rr.deferred)
+        self.stats["bg_reassigned"] += int(rr.reassigned)
+        return int(rr.executed)
 
     def _drain_cache(self) -> int:
         cache_n = int(jnp.sum(self.state.cache_valid))
@@ -294,7 +277,16 @@ class UBISDriver:
         jobs = ([("split", int(p)) for p in split_pids]
                 + [("compact", int(p)) for p in compact_pids]
                 + [("merge", int(p)) for p in merge_pids])
-        jobs = [j for j in jobs if j[1] not in self._marked_set][:self.bg_ops]
+        # one job per posting: a hollowed-out full tile is both
+        # compact_due and merge_due — double-marking would leave the
+        # second kind's mark with a dead first lane in the batch
+        seen = set(self._marked_set)
+        deduped = []
+        for j in jobs:
+            if j[1] not in seen:
+                seen.add(j[1])
+                deduped.append(j)
+        jobs = deduped[:self.bg_ops]
         if not jobs:
             return 0
         split_like = [p for k_, p in jobs if k_ in ("split", "compact")]

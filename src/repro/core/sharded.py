@@ -28,10 +28,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..distributed.sharding import axis_size as _axis_size, shard_map
 from ..kernels import ref
 from ..kernels.posting_scan import BIG
-from . import version_manager as vm
-from .types import IndexState, UBISConfig
+from . import balance, version_manager as vm
+from .types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT, NO_SUCC,
+                    STATUS_MERGING, STATUS_SPLITTING, IndexState, UBISConfig)
+from .update import dataclasses_replace, rebuild_free_stack
 
 
 def index_specs(cfg: UBISConfig):
@@ -57,6 +60,20 @@ def _local_topk(scores, ids, k):
     return -neg, jnp.take_along_axis(ids, idx, axis=-1)
 
 
+def _rebase_succ(rec_succ, offset, limit):
+    """Shift stored successor pids by ``offset``; anything landing
+    outside [0, limit) becomes no-successor."""
+    s1, s2 = vm.succ_ids(rec_succ)
+
+    def shift(s):
+        t = jnp.where(s >= 0, s + offset, -1)
+        return jnp.where((t >= 0) & (t < limit), t, -1)
+
+    t1, t2 = shift(s1), shift(s2)
+    return vm.pack_succ(jnp.where(t1 < 0, NO_SUCC, t1),
+                        jnp.where(t2 < 0, NO_SUCC, t2))
+
+
 def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
                         nprobe: int | None = None,
                         shard_cache_scan: bool = True):
@@ -76,7 +93,7 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
     probe_cap = getattr(cfg, "shard_probe_cap", 0)
 
     def local(state: IndexState, queries):
-        n_shard = jax.lax.axis_size("model")
+        n_shard = _axis_size("model")
         my = jax.lax.axis_index("model")
         M_local = state.centroids.shape[0]
         Q = queries.shape[0]
@@ -158,8 +175,7 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
         return found, sf
 
     in_specs = (st_specs, qspec)
-    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                       out_specs=(qspec, qspec), check_vma=False)
+    fn = shard_map(local, mesh, in_specs, (qspec, qspec))
     return jax.jit(fn)
 
 
@@ -212,7 +228,94 @@ def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
             global_version=state.global_version + jnp.uint32(1))
         return state, accepted, rejected
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(st_specs, jspec, jspec, jspec),
-                       out_specs=(st_specs, P(), P()), check_vma=False)
+    fn = shard_map(local, mesh, (st_specs, jspec, jspec, jspec),
+                   (st_specs, P(), P()))
     return jax.jit(fn, donate_argnums=(0,))
+
+
+def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
+                            bg_ops: int = 8, reassign: bool = True):
+    """Builds a jitted sharded background tick: state -> (state, executed).
+
+    The SAME ``balance.background_round`` program runs on every model
+    shard over the postings it owns — structural work is shard-local, so
+    the whole pod's split/merge/compact batch is one collective-free
+    device call.  Per shard: detect -> pick top ``bg_ops`` candidates ->
+    mark -> execute, all on device.  Two shard-specific adaptations:
+
+      * the global free stack is meaningless per shard (its slices hold
+        arbitrary global ids), so each shard derives a local free view
+        from ``allocated`` on entry and the state returns with an EMPTY
+        (fail-safe) stack — gather + ``update.rebuild_free_stack`` before
+        single-device use;
+      * ``id_loc`` is replicated, so each shard's (local-flat) rewrites
+        are rebased by its pool offset and merged with one psum — every
+        id is owned by exactly one shard, so contributions never collide;
+      * successor pointers (``rec_succ``) are stored global, used local:
+        localized on entry (cross-shard successors dead-end, the safe
+        fallback) and rebased back to global pids on exit.
+
+    The vector cache is replicated and therefore unwritable per shard:
+    the round runs with ``use_cache=False`` (small-side spills fold back
+    into child ``a`` instead — nothing is dropped).
+    """
+    st_specs = index_specs(cfg)
+    C = cfg.capacity
+
+    def local(state: IndexState):
+        my = jax.lax.axis_index("model")
+        M_local = state.allocated.shape[0]
+        base_pid = my.astype(jnp.int32) * M_local
+        # local free view: unallocated local pids, stack top at the end
+        state = rebuild_free_stack(state)
+        # successor pointers are stored as GLOBAL pids; the local round
+        # reads/writes local ones.  Localize on entry (cross-shard
+        # successors become -1: the round treats them as absent, the
+        # designed-safe dead-end) and on exit rebase only the words the
+        # round actually rewrote — untouched postings keep their
+        # original global words, cross-shard pointers included.
+        old_succ_global = state.rec_succ
+        succ_local0 = _rebase_succ(old_succ_global, -base_pid, M_local)
+        state = dataclasses_replace(state, rec_succ=succ_local0)
+        old_id_loc = state.id_loc
+
+        kinds, pids = balance.select_candidates(state, cfg, bg_ops)
+        # mark + execute in one program: atomic within this device call,
+        # so the two-phase window collapses without a race window
+        split_like = (kinds == KIND_SPLIT) | (kinds == KIND_COMPACT)
+        rec_meta = vm.transition(state.rec_meta,
+                                 jnp.where(split_like, pids, -1),
+                                 STATUS_SPLITTING)
+        rec_meta = vm.transition(rec_meta,
+                                 jnp.where(kinds == KIND_MERGE, pids, -1),
+                                 STATUS_MERGING)
+        state = dataclasses_replace(state, rec_meta=rec_meta)
+        state, rr = balance.background_round(
+            state, cfg, kinds, pids, reassign=reassign, use_cache=False)
+
+        # merge the replicated id map: rebase local tile flats to global
+        base = my.astype(jnp.int32) * (M_local * C)
+        changed = state.id_loc != old_id_loc
+        rebased = jnp.where(changed & (state.id_loc >= 0),
+                            state.id_loc + base, state.id_loc)
+        delta = jnp.where(changed, rebased - old_id_loc, 0)
+        id_loc = old_id_loc + jax.lax.psum(delta, "model")
+        # free stack on exit: per-shard local views cannot form one
+        # canonical global stack, so return it fail-safe EMPTY — any
+        # consumer that pops from it gets nothing instead of an aliased
+        # live posting.  Each bg call re-derives its local view from
+        # ``allocated``; a gathered single-device state must run
+        # update.rebuild_free_stack() before driver/alloc/GC use.
+        succ_changed = state.rec_succ != succ_local0
+        rec_succ = jnp.where(
+            succ_changed,
+            _rebase_succ(state.rec_succ, base_pid, cfg.max_postings),
+            old_succ_global)
+        state = dataclasses_replace(
+            state, id_loc=id_loc, free_top=jnp.int32(0), rec_succ=rec_succ,
+            global_version=jax.lax.pmax(state.global_version, "model"))
+        executed = jax.lax.psum(rr.executed, "model")
+        return state, executed
+
+    fn = shard_map(local, mesh, (st_specs,), (st_specs, P()))
+    return jax.jit(fn)

@@ -28,6 +28,14 @@ NO_SUCC = 0xFFFF
 # Sentinel for empty id slots.
 NO_ID = -1
 
+# ---------------------------------------------------------------------------
+# Background-op kind codes (the int lane of a batched background round).
+# ---------------------------------------------------------------------------
+KIND_NONE = 0
+KIND_SPLIT = 1
+KIND_MERGE = 2
+KIND_COMPACT = 3
+
 
 @dataclasses.dataclass(frozen=True)
 class UBISConfig:
@@ -110,6 +118,27 @@ class IndexState:
         status = unpack_status(self.rec_meta)
         vis = self.allocated & (status != STATUS_DELETED)
         return jnp.sum(self.lengths * vis)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BackgroundRound:
+    """Outcome of one batched background round (all int32 scalars).
+
+    One of these is the *only* device->host transfer the driver makes per
+    background tick; every counter the scheduler/benchmarks need rides in
+    the same small struct.
+    """
+
+    executed: jax.Array    # ops that ran (splits + merges + compacts)
+    n_split: jax.Array     # true 2-means splits
+    n_merge: jax.Array     # merges (incl. partnerless self-rebuilds)
+    n_compact: jax.Array   # compactions (incl. split ops demoted in-round)
+    deferred: jax.Array    # ops reverted to NORMAL (no slots / conflicts)
+    moved_out: jax.Array   # small-side vectors appended to nearer postings
+    spilled: jax.Array     # move-outs that diverted to the vector cache
+    reassigned: jax.Array  # fused post-op reassign moves
+    freed: jax.Array       # empty split-b slots returned to the free list
 
 
 @jax.tree_util.register_dataclass

@@ -142,6 +142,20 @@ def dataclasses_replace(state: IndexState, **kw) -> IndexState:
     return dataclasses.replace(state, **kw)
 
 
+def rebuild_free_stack(state: IndexState) -> IndexState:
+    """Recompute a canonical free stack from ``allocated``.
+
+    The sharded background round leaves ``free_list``/``free_top``
+    fail-safe-empty (per-shard local views cannot form one global
+    stack); call this after gathering such a state back to one device
+    before handing it to any free-stack consumer (driver, alloc, GC).
+    """
+    order = jnp.argsort(state.allocated, stable=True)   # free pids first
+    n_free = jnp.sum(~state.allocated).astype(jnp.int32)
+    return dataclasses_replace(state, free_list=order.astype(jnp.int32),
+                               free_top=n_free)
+
+
 # ---------------------------------------------------------------------------
 # the conflict-free batched append (shared by every write path)
 # ---------------------------------------------------------------------------

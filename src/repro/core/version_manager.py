@@ -88,30 +88,45 @@ def transition(rec_meta, pids, new_status, new_weight=None):
     one winner per word per round).
     """
     pids = jnp.asarray(pids, jnp.int32)
+    M = rec_meta.shape[0]
     valid = pids >= 0
-    # first-writer-wins: keep only the first occurrence of each pid
-    order = jnp.arange(pids.shape[0])
+    # first-writer-wins: keep only the first occurrence of each pid;
+    # losers/padding are routed OUT OF BOUNDS so ``mode="drop"`` discards
+    # them (aliasing them to slot 0 would race the real write on pid 0)
     first = first_occurrence_mask(pids) & valid
-    safe = jnp.where(first, pids, 0)
-    cur = rec_meta[safe]
+    safe = jnp.where(first, pids, M)
+    cur = rec_meta[jnp.clip(pids, 0, M - 1)]
     weight = unpack_weight(cur) if new_weight is None else jnp.asarray(
         jnp.broadcast_to(new_weight, pids.shape), jnp.uint32)
     status = jnp.broadcast_to(jnp.asarray(new_status, jnp.uint32), pids.shape)
     packed = pack_meta(status, weight)
-    return rec_meta.at[safe].set(jnp.where(first, packed, cur), mode="drop")
+    return rec_meta.at[safe].set(packed, mode="drop")
 
 
 def set_successors(rec_succ, pids, succ1, succ2):
     pids = jnp.asarray(pids, jnp.int32)
+    M = rec_succ.shape[0]
     valid = pids >= 0
     first = first_occurrence_mask(pids) & valid
-    safe = jnp.where(first, pids, 0)
-    cur = rec_succ[safe]
+    safe = jnp.where(first, pids, M)     # losers/padding dropped, see above
     packed = pack_succ(
         jnp.where(jnp.asarray(succ1) < 0, NO_SUCC, jnp.asarray(succ1)),
         jnp.where(jnp.asarray(succ2) < 0, NO_SUCC, jnp.asarray(succ2)),
     )
-    return rec_succ.at[safe].set(jnp.where(first, packed, cur), mode="drop")
+    return rec_succ.at[safe].set(packed, mode="drop")
+
+
+def retire(rec_meta, rec_succ, pids, succ1, succ2, version):
+    """Retire a batch of postings: DELETED + retirement version + successor
+    pointers, in one pair of scatters.  ``pids`` may contain -1 padding;
+    duplicate pids resolve first-writer-wins (same CAS rule as
+    ``transition``)."""
+    pids = jnp.asarray(pids, jnp.int32)
+    rec_meta = transition(rec_meta, pids, STATUS_DELETED,
+                          jnp.broadcast_to(jnp.asarray(version, jnp.uint32),
+                                           pids.shape))
+    rec_succ = set_successors(rec_succ, pids, succ1, succ2)
+    return rec_meta, rec_succ
 
 
 def first_occurrence_mask(x):

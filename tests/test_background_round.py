@@ -1,0 +1,338 @@
+"""Batched background round vs. the sequential per-op oracle.
+
+The tentpole guarantee: ONE ``balance.background_round`` call over a
+mixed split/merge/compact batch leaves the index *equivalent* to the old
+one-op-at-a-time execution — same live id -> vector multiset, same
+structural invariants — while never touching the host mid-batch.
+Positions/posting ids may differ (conflict resolution is explicit rather
+than order-implicit), which is exactly why the comparison is multiset-
+level, not state-level.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (UBISConfig, UBISDriver, balance, update,
+                        version_manager as vm)
+from repro.core.types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT,
+                              STATUS_MERGING, STATUS_SPLITTING)
+from conftest import make_clustered
+
+KIND_CODE = {"split": KIND_SPLIT, "merge": KIND_MERGE,
+             "compact": KIND_COMPACT}
+
+
+def _mk_cfg(mode="ubis", max_postings=128):
+    return UBISConfig(dim=8, max_postings=max_postings, capacity=64,
+                      l_min=6, l_max=48, cache_capacity=512,
+                      max_ids=1 << 13, use_pallas="off", mode=mode)
+
+
+def live_multiset(state, cfg):
+    """id -> exact vector bytes for every live id (postings + cache)."""
+    C = cfg.capacity
+    il = np.asarray(state.id_loc)
+    vecs = np.asarray(state.vectors)
+    cvecs = np.asarray(state.cache_vecs)
+    out = {}
+    for i in np.flatnonzero(il != -1):
+        loc = int(il[i])
+        if loc >= 0:
+            out[int(i)] = vecs[loc // C, loc % C].tobytes()
+        else:
+            out[int(i)] = cvecs[-2 - loc].tobytes()
+    return out
+
+
+def check_invariants(state, cfg):
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    alloc = np.asarray(state.allocated)
+    sv = np.asarray(state.slot_valid)
+    ids = np.asarray(state.ids)
+    lengths = np.asarray(state.lengths)
+    used = np.asarray(state.used)
+    # audit postings + cache, assert no duplicate ids and id_loc agreement
+    where, dup = {}, 0
+    for p in np.flatnonzero(alloc & (status != 3)):
+        assert lengths[p] == sv[p].sum(), f"length mismatch at {p}"
+        assert used[p] >= lengths[p] and used[p] <= cfg.capacity
+        for c in np.flatnonzero(sv[p]):
+            i = int(ids[p, c])
+            dup += i in where
+            where[i] = p * cfg.capacity + c
+    cv = np.asarray(state.cache_valid)
+    ci = np.asarray(state.cache_ids)
+    for s in np.flatnonzero(cv):
+        i = int(ci[s])
+        dup += i in where
+        where[i] = -2 - s
+    assert dup == 0, "duplicated live id"
+    il = np.asarray(state.id_loc)
+    tracked = {int(i): int(il[i]) for i in np.flatnonzero(il != -1)}
+    assert tracked == where, (
+        f"id_loc desync: tracks {len(tracked)}, audit found {len(where)}")
+    # free-list integrity
+    top = int(state.free_top)
+    free = np.asarray(state.free_list)[:top]
+    assert len(np.unique(free)) == top
+    assert not alloc[free].any()
+    assert top + alloc.sum() == cfg.max_postings
+
+
+def sequential_execute(state, cfg, jobs, reassign=True):
+    """The retired driver loop, verbatim: the oracle the batch must match."""
+    for kind, pid in jobs:
+        st_now = int(vm.unpack_status(state.rec_meta[pid]))
+        want = STATUS_MERGING if kind == "merge" else STATUS_SPLITTING
+        if st_now != want or not bool(state.allocated[pid]):
+            continue
+        free_top = int(state.free_top)
+        pid_j = jnp.asarray(pid, jnp.int32)
+        if kind == "split":
+            if free_top < 2:
+                state = update.mark_status(state, pid_j[None], 0)
+                continue
+            if int(state.lengths[pid]) <= cfg.l_max:
+                state = balance.compact_posting(state, cfg, pid_j)
+                state = update.mark_status(state, pid_j[None], 0)
+            else:
+                state, new_pids = balance.balance_split(state, cfg, pid_j)
+                if reassign:
+                    for np_ in np.asarray(new_pids):
+                        if int(np_) >= 0 and bool(state.allocated[int(np_)]):
+                            state, _ = balance.reassign_check(
+                                state, cfg, jnp.asarray(int(np_), jnp.int32))
+        elif kind == "merge":
+            if free_top < 1:
+                state = update.mark_status(state, pid_j[None], 0)
+                continue
+            state, pnew, _ = balance.merge_postings(state, cfg, pid_j)
+            if reassign:
+                state, _ = balance.reassign_check(state, cfg, pnew)
+        elif kind == "compact":
+            state = balance.compact_posting(state, cfg, pid_j)
+            state = update.mark_status(state, pid_j[None], 0)
+    return state
+
+
+def _marked_state(cfg, seed, n=1200, n_del=300, bg_ops=8):
+    """Drive inserts (no ticks -> oversize postings) + deletes (-> small
+    postings and tombstones), then mark a mixed candidate batch exactly
+    the way the driver does."""
+    rng = np.random.default_rng(seed)
+    data = make_clustered(n, d=cfg.dim, k=6, seed=seed)
+    drv = UBISDriver(cfg, data[:150], round_size=128, bg_ops_per_round=bg_ops)
+    drv.insert(data, np.arange(n), tick_between=False)
+    dels = rng.choice(n, size=n_del, replace=False)
+    drv.delete(dels)
+    state = drv.state
+    split_due, merge_due, compact_due = (np.asarray(x) for x in
+                                         balance.detect(state, cfg))
+    lengths = np.asarray(state.lengths)
+    split_pids = np.flatnonzero(split_due)
+    split_pids = split_pids[np.argsort(-lengths[split_pids])]
+    merge_pids = np.flatnonzero(merge_due)
+    merge_pids = merge_pids[np.argsort(lengths[merge_pids])]
+    compact_pids = np.flatnonzero(compact_due)
+    jobs = ([("split", int(p)) for p in split_pids]
+            + [("compact", int(p)) for p in compact_pids]
+            + [("merge", int(p)) for p in merge_pids])[:bg_ops]
+    split_like = [p for k, p in jobs if k in ("split", "compact")]
+    merge_like = [p for k, p in jobs if k == "merge"]
+    if split_like:
+        state = update.mark_status(
+            state, jnp.asarray(split_like, jnp.int32), STATUS_SPLITTING)
+    if merge_like:
+        state = update.mark_status(
+            state, jnp.asarray(merge_like, jnp.int32), STATUS_MERGING)
+    return state, jobs
+
+
+def _run_batched(state, cfg, jobs, bg_ops, **kw):
+    kinds = np.zeros(bg_ops, np.int32)
+    pids = np.full(bg_ops, -1, np.int32)
+    for i, (k, p) in enumerate(jobs):
+        kinds[i], pids[i] = KIND_CODE[k], p
+    return balance.background_round(
+        state, cfg, jnp.asarray(kinds), jnp.asarray(pids), **kw)
+
+
+@pytest.mark.parametrize("mode", ["ubis", "spfresh"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_equals_sequential(mode, seed):
+    """Property: over randomized mixed batches, one background_round is
+    multiset-equivalent to the sequential execution order."""
+    cfg = _mk_cfg(mode)
+    state, jobs = _marked_state(cfg, seed)
+    assert jobs, "schedule produced no background candidates"
+    before = live_multiset(state, cfg)
+
+    st_seq = sequential_execute(state, cfg, list(jobs))
+    st_bat, rr = _run_batched(state, cfg, list(jobs), bg_ops=8)
+
+    check_invariants(st_seq, cfg)
+    check_invariants(st_bat, cfg)
+    seq_ms = live_multiset(st_seq, cfg)
+    bat_ms = live_multiset(st_bat, cfg)
+    # structural ops move vectors, never create or destroy them
+    assert seq_ms == before
+    assert bat_ms == before
+    assert int(rr.executed) > 0
+
+
+def test_mixed_batch_executes_all_kinds():
+    """One round containing splits AND merges AND compacts at once; the
+    merge half is forced by hollowing out two postings below l_min."""
+    cfg = _mk_cfg("ubis")
+    rng = np.random.default_rng(11)
+    data = make_clustered(1200, d=cfg.dim, k=6, seed=11)
+    drv = UBISDriver(cfg, data[:150], round_size=128, bg_ops_per_round=8)
+    drv.insert(data, np.arange(1200), tick_between=False)
+    state = drv.state
+    lengths = np.asarray(state.lengths)
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    normal = np.asarray(state.allocated) & (status == 0)
+    mid = np.flatnonzero(normal & (lengths >= cfg.l_min))[:2]
+    assert len(mid) == 2
+    ids = np.asarray(state.ids)
+    sv = np.asarray(state.slot_valid)
+    doomed = np.concatenate(
+        [ids[p][sv[p]][: int(lengths[p]) - cfg.l_min + 1] for p in mid])
+    drv.state = state
+    drv.delete(doomed)
+    state = drv.state
+    jobs = [("merge", int(p)) for p in mid]
+    lengths = np.asarray(state.lengths)
+    split_pids = np.flatnonzero(np.asarray(balance.detect(state, cfg)[0]))
+    jobs += [("split", int(p)) for p in split_pids[:4]]
+    state = update.mark_status(state, jnp.asarray(mid, jnp.int32),
+                               STATUS_MERGING)
+    state = update.mark_status(
+        state, jnp.asarray(split_pids[:4], jnp.int32), STATUS_SPLITTING)
+    before = live_multiset(state, cfg)
+    st_seq = sequential_execute(state, cfg, list(jobs))
+    st, rr = _run_batched(state, cfg, jobs, bg_ops=8)
+    check_invariants(st, cfg)
+    check_invariants(st_seq, cfg)
+    assert live_multiset(st, cfg) == before
+    assert live_multiset(st_seq, cfg) == before
+    assert int(rr.n_merge) > 0 and int(rr.n_split) > 0, (
+        int(rr.n_merge), int(rr.n_split))
+
+
+def test_free_exhaustion_defers_not_corrupts():
+    """With almost no free slots, later ops defer (revert to NORMAL) and
+    the state stays consistent — the batched grant scan must match the
+    sequential free_top checks."""
+    cfg = _mk_cfg("ubis", max_postings=32)
+    state, jobs = _marked_state(cfg, 3, n=1500, n_del=0)
+    free_top = int(state.free_top)
+    st_bat, rr = _run_batched(state, cfg, jobs, bg_ops=8)
+    check_invariants(st_bat, cfg)
+    assert live_multiset(st_bat, cfg) == live_multiset(state, cfg)
+    demand = int(rr.n_split) * 2 + int(rr.n_merge)
+    assert demand <= free_top
+    # nothing may stay stuck in a marked state
+    status = np.asarray(vm.unpack_status(st_bat.rec_meta))
+    alloc = np.asarray(st_bat.allocated)
+    assert not ((status == 1) | (status == 2))[alloc].any()
+
+
+def test_empty_and_stale_batch_is_noop():
+    cfg = _mk_cfg("ubis")
+    state, jobs = _marked_state(cfg, 4)
+    # all-padding batch
+    st, rr = _run_batched(state, cfg, [], bg_ops=4)
+    assert int(rr.executed) == 0
+    assert live_multiset(st, cfg) == live_multiset(state, cfg)
+    # a stale op (posting not carrying the mark) is skipped
+    unmarked = int(np.flatnonzero(np.asarray(
+        vm.unpack_status(state.rec_meta)) == 0)[0])
+    st2, rr2 = _run_batched(state, cfg, [("split", unmarked)], bg_ops=4)
+    assert int(rr2.executed) == 0
+    check_invariants(st2, cfg)
+
+
+def test_double_marked_posting_never_wedges():
+    """A full tile hollowed out by deletes is compact_due AND merge_due.
+    If both lanes land in one batch (stale compact lane + deduped merge
+    lane), neither executes — the rescue rule must revert the posting to
+    NORMAL instead of leaving it marked forever.  Also exercised end to
+    end through the driver, which must quiesce."""
+    cfg = _mk_cfg("ubis")
+    data = make_clustered(1500, d=cfg.dim, k=5, seed=21)
+    drv = UBISDriver(cfg, data[:150], round_size=128, bg_ops_per_round=8)
+    drv.insert(data, np.arange(1500), tick_between=False)
+    state = drv.state
+    used = np.asarray(state.used)
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    full = np.flatnonzero(np.asarray(state.allocated) & (status == 0)
+                          & (used >= cfg.capacity))
+    assert len(full), "no full tile in schedule"
+    p = int(full[0])
+    ids = np.asarray(state.ids)
+    sv = np.asarray(state.slot_valid)
+    live = ids[p][sv[p]]
+    drv.delete(live[: len(live) - cfg.l_min + 1])  # now len < l_min
+    state = drv.state
+    sd, md, cd = (np.asarray(x) for x in balance.detect(state, cfg))
+    assert cd[p] and md[p], "scenario must be compact_due AND merge_due"
+    # adversarial: double-mark (compact then merge -> status MERGING)
+    state = update.mark_status(state, jnp.asarray([p], jnp.int32),
+                               STATUS_SPLITTING)
+    state = update.mark_status(state, jnp.asarray([p], jnp.int32),
+                               STATUS_MERGING)
+    st2, rr = _run_batched(state, cfg, [("compact", p), ("merge", p)],
+                           bg_ops=8)
+    st_after = int(np.asarray(vm.unpack_status(st2.rec_meta))[p])
+    assert st_after in (0, 3), f"posting wedged in status {st_after}"
+    check_invariants(st2, cfg)
+    # and through the driver: marking dedupes, flush quiesces unstuck
+    ticks = drv.flush(max_ticks=60)
+    assert ticks < 60
+    status = np.asarray(vm.unpack_status(drv.state.rec_meta))
+    alloc = np.asarray(drv.state.allocated)
+    assert not (((status == 1) | (status == 2)) & alloc).any()
+
+
+def test_cache_full_spill_folds_back_lossless():
+    """Move-out spills that a full cache cannot hold must fold back into
+    child a instead of vanishing with a dangling id_loc (the sequential
+    oracle's latent flaw, fixed in the batched path)."""
+    hit = False
+    for seed in (31, 32, 33, 34):
+        cfg = UBISConfig(dim=8, max_postings=128, capacity=64, l_min=6,
+                         l_max=48, cache_capacity=8, balance_factor=0.45,
+                         max_ids=1 << 13, use_pallas="off")
+        state, jobs = _marked_state(cfg, seed)
+        if not jobs:
+            continue
+        before = live_multiset(state, cfg)
+        st, rr = _run_batched(state, cfg, jobs, bg_ops=8)
+        check_invariants(st, cfg)   # catches any dangling id_loc
+        assert live_multiset(st, cfg) == before
+        hit = hit or int(rr.n_split) > 0
+    assert hit, "no split executed across seeds — scenario too weak"
+
+
+def test_select_candidates_matches_detect():
+    cfg = _mk_cfg("ubis")
+    state, _ = _marked_state(cfg, 5)
+    # unmark so select sees NORMAL postings again
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    marked = np.flatnonzero((status == 1) | (status == 2))
+    if len(marked):
+        state = update.mark_status(state, jnp.asarray(marked, jnp.int32), 0)
+    kinds, pids = (np.asarray(x) for x in
+                   balance.select_candidates(state, cfg, 8))
+    split_due, merge_due, compact_due = (np.asarray(x) for x in
+                                         balance.detect(state, cfg))
+    due = split_due | merge_due | compact_due
+    n_due = int(due.sum())
+    assert (kinds != 0).sum() == min(8, n_due)
+    for k, p in zip(kinds, pids):
+        if k == 0:
+            continue
+        assert due[p]
+        if k == KIND_SPLIT:
+            assert split_due[p]

@@ -4,6 +4,7 @@ and the beyond-paper termination guard."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import UBISConfig, UBISDriver, balance
 from repro.core import version_manager as vm
@@ -71,6 +72,7 @@ def test_termination_guard_halves_outlier_cluster():
             assert ln <= cfg.l_max, "split did not reduce below l_max"
 
 
+@pytest.mark.slow
 def test_fig5_small_posting_accumulation():
     """The paper's Fig. 5: after streaming updates, SPFresh leaves a
     higher fraction of small postings than UBIS."""

@@ -5,6 +5,7 @@ import os
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
 
@@ -52,6 +53,7 @@ def test_atomicity_no_tmp_left(tmp_path):
     assert not any(f.endswith(".tmp") for f in files)
 
 
+@pytest.mark.slow
 def test_train_resume_continuity(tmp_path):
     """train.py resumes from checkpoint: run 6 steps, kill, resume to 10;
     the loss trajectory continues (data cursor restored)."""

@@ -10,6 +10,8 @@ mechanically over randomized schedules for BOTH modes (ubis/spfresh).
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import UBISConfig, UBISDriver

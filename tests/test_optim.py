@@ -3,6 +3,9 @@ schedules, clipping, EF-int8 gradient compression."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import AdamW, AdamWConfig, cosine_warmup

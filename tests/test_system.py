@@ -9,6 +9,7 @@ from repro.core import UBISConfig, UBISDriver, brute_force, metrics
 from conftest import make_clustered
 
 
+@pytest.mark.slow
 def test_streaming_recall_ubis_beats_spfresh():
     """The paper's core claim, at reduced scale: under a streaming
     workload with background churn, UBIS indexes more fresh vectors and
@@ -40,6 +41,7 @@ def test_streaming_recall_ubis_beats_spfresh():
     assert results["ubis"]["ingested"] >= 8000 * 0.98, results
 
 
+@pytest.mark.slow
 def test_retrieval_server_end_to_end():
     """serve.py: embed -> streaming index -> query, with live recall."""
     from repro.launch.serve import RetrievalServer, ServeConfig

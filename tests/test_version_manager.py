@@ -1,6 +1,9 @@
 """Posting Recorder (version manager) unit + property tests."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import version_manager as vm
