@@ -35,12 +35,13 @@ FULL = BenchScale(n=100000, dim=64, batches=20, queries=256,
                   max_postings=8192)
 
 
-def make_cfg(scale: BenchScale, mode: str, balance_factor: float = 0.15):
+def make_cfg(scale: BenchScale, mode: str, balance_factor: float = 0.15,
+             **kw):
     return UBISConfig(dim=scale.dim, max_postings=scale.max_postings,
                       capacity=96, l_min=10, l_max=80,
                       balance_factor=balance_factor,
                       cache_capacity=4096, max_ids=1 << 21,
-                      use_pallas="off", mode=mode)
+                      use_pallas="off", mode=mode, **kw)
 
 
 def make_driver(scale: BenchScale, mode: str, seed_vectors,

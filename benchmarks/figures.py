@@ -9,8 +9,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from .common import (QUICK, BenchScale, full_update_run, make_driver,
-                     streaming_run, eval_recall, _posting_lengths)
+from .common import (QUICK, BenchScale, full_update_run, make_cfg,
+                     make_driver, streaming_run, eval_recall,
+                     _posting_lengths)
 
 
 def fig5_posting_cdf(scale: BenchScale = QUICK) -> List[Dict]:
@@ -120,6 +121,64 @@ def fig8_fg_bg_ratio(scale: BenchScale = QUICK) -> List[Dict]:
                      # excludes detect/drain/GC scheduler overhead)
                      "bg_ms_per_op": round(
                          drv.stats["bg_exec_time"] * 1e3 / bg_ops, 2)})
+    return rows
+
+
+def figpq_memory_recall(scale: BenchScale = QUICK) -> List[Dict]:
+    """New axis beyond the paper: per-vector posting bytes vs recall@10
+    vs QPS for the quant plane (use_pq) against the float oracle.
+
+    Sweeps the subspace count m (bytes/vector = m for PQ, 4*dim for
+    float).  The workload is the fig5 streaming-drift run; recall is
+    measured against exact truth over everything streamed."""
+    import time
+    from repro.core import UBISConfig, UBISDriver, state_memory_bytes
+    from repro.data import DriftingVectorStream
+    rows = []
+    variants = [("float", {})]
+    for m in (scale.dim // 8, scale.dim // 4, scale.dim // 2):
+        variants.append((f"pq-m{m}", dict(use_pq=True, pq_m=m,
+                                          rerank_k=192)))
+    for name, pq_kw in variants:
+        stream = DriftingVectorStream(dim=scale.dim, seed=scale.seed)
+        batches = [stream.next_batch(scale.n // scale.batches)
+                   for _ in range(scale.batches)]
+        queries = stream.queries(scale.queries)
+        cfg = make_cfg(scale, "ubis", **pq_kw)
+        drv = UBISDriver(cfg, batches[0], round_size=512, bg_ops_per_round=8,
+                         seed=scale.seed, pq_retrain_every=8)
+        # warm the compile at the MEASURED query-batch shape, so the
+        # timed loop never pays trace+compile (it differs per variant)
+        drv.search(queries[:32], scale.k)
+        nid = 0
+        seen_v, seen_i = [], []
+        for b in batches:
+            ids = np.arange(nid, nid + len(b))
+            nid += len(b)
+            seen_v.append(b)
+            seen_i.append(ids)
+            drv.insert(b, ids)
+            drv.flush(max_ticks=6)
+        drv.flush(max_ticks=40)
+        recall = eval_recall(drv, queries, scale.k,
+                             np.concatenate(seen_v), np.concatenate(seen_i))
+        lat = []
+        for off in range(0, len(queries), 32):
+            chunk = queries[off:off + 32]
+            t1 = time.perf_counter()
+            drv.search(chunk, scale.k)
+            lat.append((time.perf_counter() - t1) / len(chunk))
+        qps = 1.0 / float(np.mean(lat))
+        # phase-2 bytes actually scanned per vector: float tiles vs codes
+        bpv = cfg.pq_m if cfg.use_pq else cfg.dim * 4
+        rows.append({"figure": "figpq", "variant": name,
+                     "bytes_per_vector": bpv,
+                     "compression_x": round(cfg.dim * 4 / bpv, 1),
+                     "recall": round(recall, 4),
+                     "qps": round(qps, 1),
+                     "memory_mb": round(
+                         state_memory_bytes(drv.state) / 2 ** 20, 1),
+                     "pq_retrains": int(drv.stats["pq_retrains"])})
     return rows
 
 

@@ -19,7 +19,8 @@ sys.path.insert(0, ".")  # repo root (benchmarks package)
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--figures", default="fig5,fig6,fig7,table4,fig8,fig9")
+    ap.add_argument("--figures",
+                    default="fig5,fig6,fig7,table4,fig8,fig9,figpq")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
@@ -34,6 +35,7 @@ def main(argv=None) -> None:
         "table4": figures.table4_full_update,
         "fig8": figures.fig8_fg_bg_ratio,
         "fig9": figures.fig9_balance_factor,
+        "figpq": figures.figpq_memory_recall,
     }
     wanted = [f.strip() for f in args.figures.split(",") if f.strip()]
     all_rows = []
@@ -86,6 +88,13 @@ def _headline(name: str, rows) -> str:
             return f"best fg:bg={best['fg']}:{best['bg']}"
         if name == "fig9":
             return "recall rises with f, qps falls (see rows)"
+        if name == "figpq":
+            fl = next(r for r in rows if r["variant"] == "float")
+            best = max((r for r in rows if r["variant"] != "float"),
+                       key=lambda r: r["recall"])
+            return (f"{best['variant']} {best['compression_x']}x smaller, "
+                    f"recall {best['recall']:.3f} vs float "
+                    f"{fl['recall']:.3f}")
     except Exception as e:  # pragma: no cover
         return f"derived-error:{e}"
     return ""

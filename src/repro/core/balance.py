@@ -127,6 +127,16 @@ def _masked_mean(tile, mask, fallback):
     return jnp.where(jnp.any(mask), m, fallback)
 
 
+def _encode_written(state, cfg, rows):
+    """Codes for freshly packed tile rows, under the ACTIVE codebook —
+    every tile rewrite (split child, merge product, compact) is the lazy
+    re-encode point of the versioned-codebook scheme."""
+    from ..quant import pq
+    cb = state.pq_codebooks[state.pq_active]
+    stored = rows.astype(state.vectors.dtype).astype(jnp.float32)
+    return pq.encode_tiles(cb, stored)
+
+
 def _write_members(state, cfg, pid, tile, tids, member_mask):
     """Compact ``member_mask`` rows of a source tile into posting ``pid``
     (freshly allocated, empty).  Returns state with id_loc repointed.
@@ -142,9 +152,17 @@ def _write_members(state, cfg, pid, tile, tids, member_mask):
     flat = pid * C + jnp.arange(C, dtype=jnp.int32)
     id_loc = state.id_loc.at[oob(rids, keep, cfg.max_ids)].set(flat,
                                                                mode="drop")
-    return dataclasses_replace(state, vectors=vectors, ids=ids,
-                               slot_valid=slot_valid, used=used,
-                               lengths=lengths, id_loc=id_loc)
+    state = dataclasses_replace(state, vectors=vectors, ids=ids,
+                                slot_valid=slot_valid, used=used,
+                                lengths=lengths, id_loc=id_loc)
+    if cfg.use_pq:
+        codes = state.codes.at[pid].set(
+            _encode_written(state, cfg, rows[None])[0])
+        state = dataclasses_replace(
+            state, codes=codes,
+            pq_posting_slot=state.pq_posting_slot.at[pid].set(
+                state.pq_active))
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -328,6 +346,13 @@ def merge_postings(state: IndexState, cfg: UBISConfig, pid):
     state = dataclasses_replace(state, vectors=vectors, ids=ids,
                                 slot_valid=slot_valid, used=used,
                                 lengths=lengths, id_loc=id_loc)
+    if cfg.use_pq:
+        state = dataclasses_replace(
+            state,
+            codes=state.codes.at[pnew].set(
+                _encode_written(state, cfg, rows[None])[0]),
+            pq_posting_slot=state.pq_posting_slot.at[pnew].set(
+                state.pq_active))
 
     parents = jnp.stack([pid, jnp.where(has_partner, partner, -1)])
     rec_meta = vm.transition(state.rec_meta, parents, STATUS_DELETED,
@@ -545,6 +570,12 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
     masks = state.slot_valid[safe]                       # (B, C)
 
     # ---- split planning: vmapped masked 2-means + Alg. 1 balance ------
+    # The 2-means sweep and the (B*C, M) nearer-posting matmul are the
+    # round's dominant FLOPs but only splits consume them: an all-compact
+    # / all-merge batch skips the whole block via lax.cond (ROADMAP
+    # follow-up; the skip is observable as bg_ms_per_op in fig8).
+    vmean = jax.vmap(_masked_mean)
+
     def split_plan(tile, mask):
         assign, c0, c1 = _two_means(
             tile, mask, cfg.kmeans_iters,
@@ -563,39 +594,53 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
         c_small = jnp.where(small_is_0, c0, c1)
         return small_mask, big_mask, c_big, c_small, imbalanced
 
-    small_mask, big_mask, c_big, c_small, imbalanced = jax.vmap(split_plan)(
-        tiles, masks)
+    def plan_splits(_):
+        small_mask, big_mask, c_big, c_small, imbalanced = jax.vmap(
+            split_plan)(tiles, masks)
+        # nearer-posting search per small-side row, one flat score call
+        sc = ops.centroid_score(tiles.reshape(B * C, d), state.centroids,
+                                normal0 & ~retiring,
+                                backend=cfg.use_pallas)
+        best_other = jnp.argmin(sc, -1).astype(jnp.int32).reshape(B, C)
+        best_d = jnp.min(sc, -1).reshape(B, C)
+        d_big_score = (jnp.sum(c_big ** 2, -1)[:, None]
+                       - 2 * jnp.einsum("bcd,bd->bc", tiles, c_big))
+        nearer = best_d < d_big_score
+        move_out = (imbalanced[:, None] & small_mask & nearer
+                    & split_exec[:, None])
+        fold_in = imbalanced[:, None] & small_mask & ~nearer
+        members_a = jnp.where(imbalanced[:, None], big_mask | fold_in,
+                              big_mask)
+        members_b = jnp.where(imbalanced[:, None],
+                              jnp.zeros_like(small_mask), small_mask)
+        # termination guard: median bisection when a survivor stays
+        # oversize
+        oversized = cfg.is_ubis & (
+            (jnp.sum(members_a, -1) > cfg.l_max)
+            | (jnp.sum(members_b, -1) > cfg.l_max))
+        med = jax.vmap(_median_bisect)(tiles, masks)
+        med_a = (med == 0) & masks
+        med_b = (med == 1) & masks
+        members_a = jnp.where(oversized[:, None], med_a, members_a)
+        members_b = jnp.where(oversized[:, None], med_b, members_b)
+        move_out = move_out & ~oversized[:, None]
+        c_big = jnp.where(oversized[:, None], vmean(tiles, med_a, c_big),
+                          c_big)
+        c_small = jnp.where(oversized[:, None],
+                            vmean(tiles, med_b, c_small), c_small)
+        cent_a = vmean(tiles, members_a, c_big)
+        cent_b = vmean(tiles, members_b, c_small)
+        return members_a, members_b, move_out, best_other, cent_a, cent_b
 
-    # nearer-posting search for every small-side row, one flat score call
-    sc = ops.centroid_score(tiles.reshape(B * C, d), state.centroids,
-                            normal0 & ~retiring, backend=cfg.use_pallas)
-    best_other = jnp.argmin(sc, -1).astype(jnp.int32).reshape(B, C)
-    best_d = jnp.min(sc, -1).reshape(B, C)
-    d_big_score = (jnp.sum(c_big ** 2, -1)[:, None]
-                   - 2 * jnp.einsum("bcd,bd->bc", tiles, c_big))
-    nearer = best_d < d_big_score
-    move_out = imbalanced[:, None] & small_mask & nearer & split_exec[:, None]
-    fold_in = imbalanced[:, None] & small_mask & ~nearer
-    members_a = jnp.where(imbalanced[:, None], big_mask | fold_in, big_mask)
-    members_b = jnp.where(imbalanced[:, None], jnp.zeros_like(small_mask),
-                          small_mask)
+    def plan_nothing(_):
+        zc = jnp.zeros((B, C), bool)
+        return (zc, zc, zc, jnp.zeros((B, C), jnp.int32),
+                jnp.zeros((B, d), jnp.float32),
+                jnp.zeros((B, d), jnp.float32))
 
-    # termination guard: median bisection when a survivor stays oversize
-    oversized = cfg.is_ubis & (
-        (jnp.sum(members_a, -1) > cfg.l_max)
-        | (jnp.sum(members_b, -1) > cfg.l_max))
-    med = jax.vmap(_median_bisect)(tiles, masks)
-    med_a = (med == 0) & masks
-    med_b = (med == 1) & masks
-    members_a = jnp.where(oversized[:, None], med_a, members_a)
-    members_b = jnp.where(oversized[:, None], med_b, members_b)
-    move_out = move_out & ~oversized[:, None]
-    vmean = jax.vmap(_masked_mean)
-    c_big = jnp.where(oversized[:, None], vmean(tiles, med_a, c_big), c_big)
-    c_small = jnp.where(oversized[:, None], vmean(tiles, med_b, c_small),
-                        c_small)
-    cent_a = vmean(tiles, members_a, c_big)
-    cent_b = vmean(tiles, members_b, c_small)
+    (members_a, members_b, move_out, best_other, cent_a,
+     cent_b) = jax.lax.cond(jnp.any(split_exec), plan_splits, plan_nothing,
+                            None)
     b_empty = ~jnp.any(members_b, -1) & split_exec
 
     # ---- merge tile construction --------------------------------------
@@ -656,6 +701,16 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
     id_loc = state.id_loc.at[
         oob(w_rids.reshape(-1), w_keep.reshape(-1), cfg.max_ids)].set(
         flat.reshape(-1), mode="drop")
+    codes = state.codes
+    pq_posting_slot = state.pq_posting_slot
+    if cfg.use_pq:
+        # every tile produced this round (split children, merge product,
+        # compacted survivors) re-encodes under the ACTIVE codebook —
+        # the lazy upgrade point of the versioned-codebook scheme
+        codes = codes.at[wt].set(_encode_written(state, cfg, w_rows),
+                                 mode="drop")
+        pq_posting_slot = pq_posting_slot.at[wt].set(state.pq_active,
+                                                     mode="drop")
 
     # ---- batched retirement: DELETED + successor installation ---------
     succ_b = jnp.where(b_empty, -1, pb)
@@ -705,6 +760,7 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
         state, vectors=vectors, ids=ids_arr, slot_valid=slot_valid,
         used=used, lengths=lengths, centroids=centroids, rec_meta=rec_meta,
         rec_succ=rec_succ, allocated=allocated, nbrs=nbrs, id_loc=id_loc,
+        codes=codes, pq_posting_slot=pq_posting_slot,
         free_top=state.free_top - total, global_version=ver)
 
     # empty b-sides go straight back to the free list
@@ -735,41 +791,50 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
                                  jnp.where(lost, pa_row, -1), lost)
 
     # ---- fused post-op reassign over every posting born this round ----
+    # Gated by lax.cond: the (3B*C, M) score matmul only runs when the
+    # batch actually produced a posting (all-compact batches skip it).
     if reassign:
         r_pid = jnp.concatenate([jnp.where(split_exec, pa, -1),
                                  jnp.where(split_exec & ~b_empty, pb, -1),
                                  jnp.where(merge_exec, pa, -1)])
-        rs = jnp.clip(r_pid, 0, M - 1)
-        r_tiles = state.vectors[rs].astype(jnp.float32)
-        r_ids = state.ids[rs]
-        r_mask = state.slot_valid[rs] & (r_pid >= 0)[:, None]
-        status2 = vm.unpack_status(state.rec_meta)
-        sc2 = ops.centroid_score(
-            r_tiles.reshape(3 * B * C, d), state.centroids,
-            state.allocated & (status2 == STATUS_NORMAL),
-            backend=cfg.use_pallas)
-        own = jnp.broadcast_to(rs[:, None], (3 * B, C)).reshape(-1)
-        sc2 = sc2.at[jnp.arange(3 * B * C), own].set(BIG)
-        r_best = jnp.argmin(sc2, -1).astype(jnp.int32)
-        r_bd = jnp.min(sc2, -1)
-        own_c = state.centroids[rs].astype(jnp.float32)
-        d_own = (jnp.sum(own_c ** 2, -1)[:, None]
-                 - 2 * jnp.einsum("bcd,bd->bc", r_tiles, own_c)).reshape(-1)
-        mv = r_mask.reshape(-1) & (r_bd < d_own)
-        state, mv_ok, _ = batched_append(
-            state, cfg, r_tiles.reshape(-1, d), r_ids.reshape(-1),
-            jnp.where(mv, r_best, -1), mv)
-        moved = mv & mv_ok
-        src_flat = (own * C
-                    + jnp.tile(jnp.arange(C, dtype=jnp.int32), 3 * B))
-        slot_valid2 = _flat_set(state.slot_valid,
-                                oob(src_flat, moved, MS * C),
-                                jnp.zeros_like(moved))
-        lengths2 = state.lengths.at[oob(own, moved, MS)].add(
-            -1, mode="drop")
-        state = dataclasses_replace(state, slot_valid=slot_valid2,
-                                    lengths=lengths2)
-        n_re = jnp.sum(moved)
+
+        def do_reassign(state):
+            rs = jnp.clip(r_pid, 0, M - 1)
+            r_tiles = state.vectors[rs].astype(jnp.float32)
+            r_ids = state.ids[rs]
+            r_mask = state.slot_valid[rs] & (r_pid >= 0)[:, None]
+            status2 = vm.unpack_status(state.rec_meta)
+            sc2 = ops.centroid_score(
+                r_tiles.reshape(3 * B * C, d), state.centroids,
+                state.allocated & (status2 == STATUS_NORMAL),
+                backend=cfg.use_pallas)
+            own = jnp.broadcast_to(rs[:, None], (3 * B, C)).reshape(-1)
+            sc2 = sc2.at[jnp.arange(3 * B * C), own].set(BIG)
+            r_best = jnp.argmin(sc2, -1).astype(jnp.int32)
+            r_bd = jnp.min(sc2, -1)
+            own_c = state.centroids[rs].astype(jnp.float32)
+            d_own = (jnp.sum(own_c ** 2, -1)[:, None]
+                     - 2 * jnp.einsum("bcd,bd->bc", r_tiles,
+                                      own_c)).reshape(-1)
+            mv = r_mask.reshape(-1) & (r_bd < d_own)
+            state, mv_ok, _ = batched_append(
+                state, cfg, r_tiles.reshape(-1, d), r_ids.reshape(-1),
+                jnp.where(mv, r_best, -1), mv)
+            moved = mv & mv_ok
+            src_flat = (own * C
+                        + jnp.tile(jnp.arange(C, dtype=jnp.int32), 3 * B))
+            slot_valid2 = _flat_set(state.slot_valid,
+                                    oob(src_flat, moved, MS * C),
+                                    jnp.zeros_like(moved))
+            lengths2 = state.lengths.at[oob(own, moved, MS)].add(
+                -1, mode="drop")
+            state = dataclasses_replace(state, slot_valid=slot_valid2,
+                                        lengths=lengths2)
+            return state, jnp.sum(moved).astype(jnp.int32)
+
+        state, n_re = jax.lax.cond(
+            jnp.any(r_pid >= 0), do_reassign,
+            lambda state: (state, jnp.int32(0)), state)
     else:
         n_re = jnp.int32(0)
 

@@ -69,4 +69,14 @@ def initial_state(cfg: UBISConfig, seed_vectors, *, key=None,
     cents = kmeans(sample, k0, cfg.kmeans_iters, key)
     state = empty_state(cfg)
     state, _ = seed_postings(state, cfg, cents, k0)
+    if cfg.use_pq:
+        # generation-0 codebooks fit on the same seed sample; every
+        # insert round encodes against them from the first vector on
+        from ..quant import pq
+        key, pk = jax.random.split(key)
+        cb0 = pq.init_codebooks(sample, cfg.pq_m, cfg.pq_ksub,
+                                cfg.kmeans_iters, pk,
+                                backend=cfg.use_pallas)
+        state = dataclasses_replace(
+            state, pq_codebooks=state.pq_codebooks.at[0].set(cb0))
     return state

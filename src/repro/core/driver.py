@@ -41,7 +41,8 @@ class UBISDriver:
                  seed: int = 0, round_size: int = 1024,
                  bg_ops_per_round: int = 4, drain_per_tick: int = 256,
                  insert_retries: int = 2, gc_lag: int = 16,
-                 reassign_after_split: bool = True):
+                 reassign_after_split: bool = True,
+                 pq_retrain_every: int = 32):
         self.cfg = cfg
         self.round_size = int(round_size)
         self.bg_ops = int(bg_ops_per_round)
@@ -49,6 +50,11 @@ class UBISDriver:
         self.retries = int(insert_retries)
         self.gc_lag = int(gc_lag)
         self.reassign_after_split = reassign_after_split
+        # quant plane: codebook re-train cadence in ticks (0 = never);
+        # only meaningful with cfg.use_pq
+        self.pq_retrain_every = int(pq_retrain_every)
+        self._ticks = 0
+        self._pq_key = jax.random.key(seed + 0x517C0DE)
 
         if seed_vectors is None:
             raise ValueError("seed_vectors required (used for k-means seeds)")
@@ -168,18 +174,21 @@ class UBISDriver:
 
     def tick(self) -> dict:
         """One background round: execute marked ops, drain the cache,
-        detect + mark new candidates, GC."""
+        detect + mark new candidates, GC, and (quant plane) re-train the
+        PQ codebooks on cadence."""
         t0 = time.perf_counter()
         executed = self._execute_marked()
         self.stats["bg_exec_time"] += time.perf_counter() - t0
         drained = self._drain_cache() if self.cfg.is_ubis else 0
         marked = self._mark_candidates()
         reclaimed = self._gc()
+        retrained = self._pq_retrain()
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed
         return {"executed": executed, "drained": drained,
-                "marked": marked, "gc": reclaimed, "seconds": dt}
+                "marked": marked, "gc": reclaimed,
+                "pq_retrained": retrained, "seconds": dt}
 
     def flush(self, max_ticks: int = 200) -> int:
         """Tick until quiescent (no marked ops, no due candidates, cache
@@ -310,6 +319,22 @@ class UBISDriver:
         self.state, n = balance.gc_round(
             self.state, self.cfg, jnp.uint32(ver - self.gc_lag), 64)
         return int(n)
+
+    def _pq_retrain(self) -> int:
+        """Versioned codebook re-train on tick cadence (quant plane)."""
+        if not self.cfg.use_pq or self.pq_retrain_every <= 0:
+            return 0
+        self._ticks += 1
+        if self._ticks % self.pq_retrain_every:
+            return 0
+        from ..quant import pq
+        self._pq_key, k = jax.random.split(self._pq_key)
+        self.state = pq.retrain_round(self.state, self.cfg, k)
+        self.stats["pq_retrains"] += 1
+        # live codebook generation, for monitors (throughput() readers)
+        self.stats["pq_generation"] = int(
+            self.state.pq_slot_gen[self.state.pq_active])
+        return 1
 
     # ---- SPFresh strict-trigger bookkeeping ---------------------------
 

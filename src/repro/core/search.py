@@ -40,10 +40,17 @@ def search(state: IndexState, cfg: UBISConfig, queries: jax.Array,
     _, probe = jax.lax.top_k(-csc, nprobe)
     probe = probe.astype(jnp.int32)
 
-    pscores = ops.posting_scan_gather(
-        queries, state.vectors, state.slot_valid, vis, probe,
-        backend=cfg.use_pallas)                               # (Q, P, C)
-    pids = state.ids[probe]                                   # (Q, P, C)
+    if cfg.use_pq:
+        # two-stage quant-plane scan: ADC over the probed code tiles
+        # (C*m bytes per posting instead of C*d*4), then exact rerank of
+        # the top ``rerank_k`` float candidates.  The float path below
+        # stays the oracle — use_pq=False is bit-identical to it.
+        pscores, pids = _pq_stage(state, cfg, queries, probe, vis)
+    else:
+        pscores = ops.posting_scan_gather(
+            queries, state.vectors, state.slot_valid, vis, probe,
+            backend=cfg.use_pallas).reshape(Q, -1)            # (Q, P*C)
+        pids = state.ids[probe].reshape(Q, -1)                # (Q, P*C)
 
     cscores = ops.centroid_score(queries, state.cache_vecs,
                                  state.cache_valid,
@@ -51,14 +58,44 @@ def search(state: IndexState, cfg: UBISConfig, queries: jax.Array,
     cids = jnp.broadcast_to(state.cache_ids[None, :],
                             (Q, cfg.cache_capacity))
 
-    all_scores = jnp.concatenate(
-        [pscores.reshape(Q, -1), cscores], axis=1)
-    all_ids = jnp.concatenate([pids.reshape(Q, -1), cids], axis=1)
+    all_scores = jnp.concatenate([pscores, cscores], axis=1)
+    all_ids = jnp.concatenate([pids, cids], axis=1)
     neg, idx = jax.lax.top_k(-all_scores, k)
     found = jnp.take_along_axis(all_ids, idx, axis=1)
     scores = -neg
     found = jnp.where(scores < BIG / 2, found, -1)  # fewer than k hits
     return found, scores, probe
+
+
+def _pq_stage(state: IndexState, cfg: UBISConfig, queries: jax.Array,
+              probe: jax.Array, vis: jax.Array):
+    """ADC scan + candidate gather + exact rerank.
+
+    Returns (scores (Q, R), ids (Q, R)) of the exact-reranked float
+    candidates, ready to merge with the cache scan.  R = rerank_k.
+    """
+    from ..quant import pq
+    Q = queries.shape[0]
+    M, C, _ = state.vectors.shape
+    P = probe.shape[1]
+    R = min(cfg.rerank_k, P * C)
+
+    luts = pq.lookup_tables(state.pq_codebooks, queries)     # (Q, V, m, ksub)
+    adc = ops.pq_scan_gather(luts, state.codes, state.pq_posting_slot,
+                             state.slot_valid, vis, probe,
+                             backend=cfg.use_pallas)          # (Q, P, C)
+    neg, ridx = jax.lax.top_k(-adc.reshape(Q, -1), R)
+    adc_top = -neg
+    flat_all = (probe[:, :, None] * C
+                + jnp.arange(C, dtype=jnp.int32)[None, None, :])
+    cand = jnp.take_along_axis(flat_all.reshape(Q, -1), ridx, axis=1)
+    cand_vecs = state.vectors.reshape(M * C, -1)[cand].astype(jnp.float32)
+    exact = (jnp.sum(cand_vecs * cand_vecs, -1)
+             - 2.0 * jnp.einsum("qd,qrd->qr", queries, cand_vecs))
+    exact = jnp.where(adc_top < BIG / 2, exact, BIG)
+    cand_ids = state.ids.reshape(-1)[cand]
+    cand_ids = jnp.where(adc_top < BIG / 2, cand_ids, -1)
+    return exact, cand_ids
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
@@ -75,9 +112,10 @@ def brute_force(state: IndexState, cfg: UBISConfig, queries: jax.Array,
     cs = ops.centroid_score(queries, state.cache_vecs, state.cache_valid,
                             backend=cfg.use_pallas)
     all_scores = jnp.concatenate([s, cs], axis=1)
-    flat_ids = jnp.concatenate(
-        [state.ids.reshape(-1),
-         state.cache_ids])[None, :].repeat(queries.shape[0], 0)
+    flat = jnp.concatenate([state.ids.reshape(-1), state.cache_ids])
+    # broadcast, don't materialize Q copies of the (M*C + K) id row
+    flat_ids = jnp.broadcast_to(flat[None, :],
+                                (queries.shape[0], flat.shape[0]))
     neg, idx = jax.lax.top_k(-all_scores, k)
     found = jnp.take_along_axis(flat_ids, idx, axis=1)
     return jnp.where(-neg < BIG / 2, found, -1), -neg

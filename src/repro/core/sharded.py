@@ -52,6 +52,10 @@ def index_specs(cfg: UBISConfig):
         cache_vecs=P(), cache_ids=P(), cache_target=P(), cache_valid=P(),
         free_list=P("model"), free_top=P(), global_version=P(),
         id_loc=P(),
+        # quant plane: codes follow their posting's shard; the (small)
+        # versioned codebooks are replicated so any shard can encode
+        codes=P("model"), pq_codebooks=P(), pq_slot_gen=P(),
+        pq_active=P(), pq_posting_slot=P("model"),
     )
 
 

@@ -59,6 +59,13 @@ class UBISConfig:
     # distributed search: cap owned probes scanned per shard (0 = nprobe);
     # ~4x phase-2 work reduction on a 16-way pod (EXPERIMENTS.md §Perf)
     shard_probe_cap: int = 0
+    # --- product-quantization plane (quant/pq.py) ----------------------
+    use_pq: bool = False              # two-stage ADC search + code upkeep
+    pq_m: int = 8                     # subspaces per vector (codes: m bytes)
+    pq_ksub: int = 256                # centroids per subspace (uint8 codes)
+    pq_versions: int = 2              # codebook version slots kept live
+    pq_sample: int = 2048             # training sample size (re-train)
+    rerank_k: int = 64                # float candidates exact-reranked
 
     def __post_init__(self):
         assert self.max_postings < NO_SUCC, "successor ids are 16-bit"
@@ -66,6 +73,23 @@ class UBISConfig:
         assert self.capacity <= 2 * self.l_max, \
             "median-bisection split guard needs capacity/2 <= l_max"
         assert self.mode in ("ubis", "spfresh")
+        if self.use_pq:
+            assert self.dim % self.pq_m == 0, "pq_m must divide dim"
+        assert 2 <= self.pq_ksub <= 256, "codes are uint8"
+        assert self.pq_versions >= 2, "need >= 2 slots for lazy re-encode"
+        assert self.rerank_k >= 1
+
+    @property
+    def pq_m_eff(self) -> int:
+        """Subspace count actually used for array shapes.  With the
+        quant plane off the (always-present, fixed-pytree-shape) code
+        arrays are dead weight, so they shrink to one subspace; with it
+        on, the __post_init__ assert guarantees pq_m divides dim."""
+        return self.pq_m if self.use_pq else 1
+
+    @property
+    def pq_dsub(self) -> int:
+        return self.dim // self.pq_m_eff
 
     @property
     def is_ubis(self) -> bool:
@@ -105,6 +129,14 @@ class IndexState:
     global_version: jax.Array  # () uint32 monotone version counter
     # --- id -> flat location (pid * C + slot), -1 if absent ---------------
     id_loc: jax.Array         # (N,) int32
+    # --- product-quantization plane (quant/pq.py; V = pq_versions) ---------
+    # codes are subspace-major (m before C) so the ADC kernel streams
+    # (1, m, C) tiles with the lane dim = capacity, like the float tiles.
+    codes: jax.Array          # (M, m, C) uint8 PQ codes per slot
+    pq_codebooks: jax.Array   # (V, m, ksub, dsub) f32 versioned codebooks
+    pq_slot_gen: jax.Array    # (V,) uint32 generation held by each slot
+    pq_active: jax.Array      # () int32 slot new codes are written under
+    pq_posting_slot: jax.Array  # (M,) int32 codebook slot of each posting
 
     def num_alive(self) -> jax.Array:
         from .version_manager import unpack_status
@@ -175,6 +207,13 @@ def empty_state(cfg: UBISConfig) -> IndexState:
         free_top=jnp.array(M, jnp.int32),
         global_version=jnp.array(0, jnp.uint32),
         id_loc=jnp.full((N,), -1, jnp.int32),
+        codes=jnp.zeros((M, cfg.pq_m_eff, C), jnp.uint8),
+        pq_codebooks=jnp.zeros(
+            (cfg.pq_versions, cfg.pq_m_eff, cfg.pq_ksub, cfg.pq_dsub),
+            jnp.float32),
+        pq_slot_gen=jnp.zeros((cfg.pq_versions,), jnp.uint32),
+        pq_active=jnp.array(0, jnp.int32),
+        pq_posting_slot=jnp.zeros((M,), jnp.int32),
     )
 
 

@@ -84,8 +84,8 @@ def alloc_postings(state: IndexState, cfg: UBISConfig, k: int,
     meta = vm.pack_meta(jnp.full((k,), STATUS_NORMAL, jnp.uint32),
                         jnp.broadcast_to(jnp.asarray(weight, jnp.uint32), (k,)))
     succ = jnp.full((k,), (NO_SUCC << 16) | NO_SUCC, jnp.uint32)
-    state = IndexState(
-        vectors=state.vectors,
+    state = dataclasses_replace(
+        state,
         ids=state.ids.at[pids].set(NO_ID),
         slot_valid=state.slot_valid.at[pids].set(False),
         used=state.used.at[pids].set(0),
@@ -95,13 +95,9 @@ def alloc_postings(state: IndexState, cfg: UBISConfig, k: int,
         rec_meta=state.rec_meta.at[pids].set(meta),
         rec_succ=state.rec_succ.at[pids].set(succ),
         allocated=state.allocated.at[pids].set(True),
-        nbrs=state.nbrs,
-        cache_vecs=state.cache_vecs, cache_ids=state.cache_ids,
-        cache_target=state.cache_target, cache_valid=state.cache_valid,
-        free_list=state.free_list,
         free_top=state.free_top - k,
-        global_version=state.global_version,
-        id_loc=state.id_loc,
+        # fresh postings write codes under the active codebook generation
+        pq_posting_slot=state.pq_posting_slot.at[pids].set(state.pq_active),
     )
     return state, pids
 
@@ -184,9 +180,28 @@ def batched_append(state: IndexState, cfg: UBISConfig, vecs, ids, pids,
     id_loc = state.id_loc
     if update_id_loc:
         id_loc = id_loc.at[oob(ids, ok, cfg.max_ids)].set(flat, mode="drop")
+    codes = state.codes
+    if cfg.use_pq:
+        # quant-plane invariant: every float write carries its code,
+        # encoded under the TARGET posting's codebook slot (postings pin
+        # a codebook generation; appends must match it, not the active
+        # one).  Encode under every slot (V small, static), select per
+        # job.  Encode the post-storage-cast value so decode agrees with
+        # the stored bytes under non-f32 dtypes.
+        from ..quant import pq
+        x = vecs.astype(state.vectors.dtype).astype(jnp.float32)
+        codes_all = pq.encode_all_versions(state.pq_codebooks, x)
+        tslot = jnp.clip(state.pq_posting_slot[safe_pid], 0,
+                         cfg.pq_versions - 1)
+        code_j = jnp.take_along_axis(
+            codes_all.transpose(1, 0, 2), tslot[:, None, None], axis=1
+        )[:, 0]                                             # (J, m)
+        codes = codes.at[oob(pids, ok, cfg.max_postings), :, slot].set(
+            code_j, mode="drop")
     state = dataclasses_replace(state, vectors=vectors, ids=ids_arr,
                                 slot_valid=slot_valid, used=used,
-                                lengths=lengths, id_loc=id_loc)
+                                lengths=lengths, id_loc=id_loc,
+                                codes=codes)
     return state, ok, flat
 
 

@@ -140,6 +140,32 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return out[:, :, Lqp - Lq:, :D]
 
 
+def pq_scan_gather(luts: jax.Array, codes: jax.Array,
+                   posting_slot: jax.Array, slot_valid: jax.Array,
+                   vis: jax.Array, probe: jax.Array,
+                   *, backend: str = "auto"):
+    """ADC scan of probed PQ-code tiles (quant plane, DESIGN: two-stage
+    search).  luts: (Q, V, m, ksub); codes: (M, m, C) uint8;
+    posting_slot: (M,) int32; probe: (Q, P) -> (Q, P, C) scores, BIG at
+    invalid slots / invisible postings.
+
+    Kernel path requires C % 128 == 0 and ksub % 128 == 0 (the TPU
+    storage layout, as for posting_scan_gather); ref fallback otherwise.
+    """
+    from .pq_scan import pq_scan_gather as _pq_pallas
+    V = luts.shape[1]
+    C = codes.shape[2]
+    ksub = luts.shape[3]
+    slot = jnp.clip(posting_slot.astype(jnp.int32), 0, V - 1)
+    if not _use_pallas(backend) or C % 128 or ksub % 128:
+        raw = ref.pq_scan_gather(luts, codes, slot, probe)
+    else:
+        raw = _pq_pallas(luts, codes, slot, probe.astype(jnp.int32),
+                         interpret=_interpret())
+    ok = slot_valid[probe] & vis[probe][..., None]
+    return jnp.where(ok, raw, BIG)
+
+
 def posting_scan_gather(q: jax.Array, vectors: jax.Array,
                         slot_valid: jax.Array, vis: jax.Array,
                         probe: jax.Array, *, backend: str = "auto"):

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: ADC lookup-table scan over packed PQ codes.
+
+The quant-plane twin of ``posting_scan.py``'s gather kernel: for each
+(query, probe) pair, stream one posting's uint8 code tile HBM->VMEM and
+accumulate per-subspace lookup-table entries.  The probe table AND the
+per-posting codebook-slot table are scalar-prefetched, so the lookup
+table block for grid step (i, j) is selected by the *probed posting's*
+codebook version — versioned codebooks cost one extra scalar indirection,
+not a second pass.
+
+The in-kernel gather is expressed as ``m`` small one-hot matmuls
+(code -> one-hot (C, ksub) on the VPU, one-hot @ lut[j] on the MXU):
+TPU has no per-lane dynamic gather, but ksub <= 256 keeps each one-hot
+block a single (C, 256) tile.  Arithmetic intensity is higher than the
+float scan by design — C*m bytes of codes per posting instead of
+C*d*4 — which is the whole point of the quant plane.
+
+    luts  : (Q, V, m, ksub) f32   per-query per-slot ADC tables
+    codes : (M, m, C) uint8       subspace-major code tiles
+    slot  : (M,) int32            codebook slot per posting (prefetched)
+    probe : (Q, P) int32          posting ids per query (prefetched)
+Output:
+    score : (Q, P, C) f32 raw ADC scores (masking done by the wrapper)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(probe_ref, slot_ref, lut_ref, codes_ref, o_ref):
+    del probe_ref, slot_ref                       # consumed by index maps
+    lut = lut_ref[0, 0].astype(jnp.float32)       # (m, ksub)
+    code = codes_ref[0].astype(jnp.int32)         # (m, C)
+    m, C = code.shape
+    ksub = lut.shape[1]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (C, ksub), 1)
+    acc = jnp.zeros((C,), jnp.float32)
+    for j in range(m):                            # static unroll, m small
+        onehot = (code[j][:, None] == k_iota).astype(jnp.float32)
+        acc = acc + jax.lax.dot_general(
+            onehot, lut[j], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    o_ref[0, 0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pq_scan_gather(luts: jax.Array, codes: jax.Array, slot: jax.Array,
+                   probe: jax.Array, *, interpret: bool = False
+                   ) -> jax.Array:
+    """Padded-shape Pallas entry.  C % 128 == 0 and ksub % 128 == 0 are
+    guaranteed by the ops.py wrapper (ref fallback otherwise)."""
+    Q, V, m, ksub = luts.shape
+    M, _, C = codes.shape
+    P = probe.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, m, ksub),
+                         lambda i, j, probe, slot: (i, slot[probe[i, j]],
+                                                    0, 0)),
+            pl.BlockSpec((1, m, C),
+                         lambda i, j, probe, slot: (probe[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C),
+                               lambda i, j, probe, slot: (i, j, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, P, C), jnp.float32),
+        interpret=interpret,
+    )(probe, slot, luts, codes)

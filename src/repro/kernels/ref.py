@@ -89,6 +89,28 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def pq_scan_gather(luts: jax.Array, codes: jax.Array, slot: jax.Array,
+                   probe: jax.Array) -> jax.Array:
+    """ADC scan over probed PQ-code tiles (quant plane phase 2).
+
+    luts: (Q, V, m, ksub) per-query per-codebook-slot lookup tables;
+    codes: (M, m, C) uint8 subspace-major codes; slot: (M,) int32
+    codebook slot of each posting; probe: (Q, P) int32.
+    Returns raw (Q, P, C) scores ``sum_j lut[slot[p], j, code[j, c]]``
+    (validity masking is the wrapper's job, as in posting_scan_gather).
+    """
+    Q, V, m, ksub = luts.shape
+    codes_g = codes[probe].astype(jnp.int32)                # (Q, P, m, C)
+    # one flat gather per (q, p, j, c): index = slot*m*ksub + j*ksub + code
+    # (avoids materializing the (Q, P, m, ksub) per-probe table slice)
+    base = (jnp.clip(slot[probe], 0)[:, :, None] * (m * ksub)
+            + jnp.arange(m, dtype=jnp.int32)[None, None, :] * ksub)
+    idx = base[..., None] + codes_g                         # (Q, P, m, C)
+    flat = luts.reshape(Q, V * m * ksub)
+    picked = jnp.take_along_axis(flat, idx.reshape(Q, -1), axis=1)
+    return jnp.sum(picked.reshape(codes_g.shape), axis=2)   # (Q, P, C)
+
+
 def posting_scan_gather(queries: jax.Array, vectors: jax.Array,
                         slot_valid: jax.Array, vis: jax.Array,
                         probe: jax.Array) -> jax.Array:

@@ -1,0 +1,7 @@
+"""Streaming product-quantization plane (PQ codes beside float tiles)."""
+from .pq import (encode, encode_all_versions, decode, lookup_tables,
+                 train_codebooks, init_codebooks, retrain_round, encode_tiles)
+
+__all__ = ["encode", "encode_all_versions", "decode", "lookup_tables",
+           "train_codebooks", "init_codebooks", "retrain_round",
+           "encode_tiles"]

@@ -315,6 +315,62 @@ def test_cache_full_spill_folds_back_lossless():
     assert hit, "no split executed across seeds — scenario too weak"
 
 
+def test_all_compact_batch_skips_split_plan_but_executes():
+    """The lax.cond gate on the 2-means/reassign matmuls must not change
+    semantics: a batch of ONLY compacts executes, stays multiset-equal to
+    the sequential oracle, and leaves every posting NORMAL."""
+    cfg = _mk_cfg("ubis")
+    state, jobs = _marked_state(cfg, 6)
+    # strip the batch down to compact lanes only; unmark the rest so no
+    # mark outlives the round
+    compacts = [j for j in jobs if j[0] == "compact"]
+    others = [p for k_, p in jobs if k_ != "compact"]
+    if others:
+        state = update.mark_status(state, jnp.asarray(others, jnp.int32), 0)
+    if not compacts:  # synthesize: every marked split whose length fits
+        compacts = [("compact", p) for k_, p in jobs if k_ == "split"]
+    assert compacts, "no compact-able candidates in schedule"
+    before = live_multiset(state, cfg)
+    st_seq = sequential_execute(state, cfg, list(compacts))
+    st_bat, rr = _run_batched(state, cfg, list(compacts), bg_ops=8)
+    check_invariants(st_bat, cfg)
+    assert live_multiset(st_bat, cfg) == before
+    assert live_multiset(st_seq, cfg) == before
+    assert int(rr.executed) > 0 and int(rr.n_split) == 0
+    assert int(rr.reassigned) == 0 and int(rr.moved_out) == 0
+
+
+def test_codebook_retrain_mid_stream_is_invisible():
+    """Quant plane: a codebook re-train landing between a mark round and
+    its execute round (the adversarial interleaving) never changes the
+    live id->vector multiset, search visibility, or the structural
+    invariants — and the executed round still matches the oracle."""
+    import jax
+    from repro.quant import pq
+    cfg = UBISConfig(dim=8, max_postings=128, capacity=64, l_min=6,
+                     l_max=48, cache_capacity=512, max_ids=1 << 13,
+                     use_pallas="off", use_pq=True, pq_m=4, pq_ksub=32)
+    state, jobs = _marked_state(cfg, 7)
+    assert jobs
+    before = live_multiset(state, cfg)
+    vis_before = np.asarray(vm.visible(state.rec_meta, state.allocated,
+                                       state.global_version))
+    state2 = pq.retrain_round(state, cfg, jax.random.key(3))
+    vis_after = np.asarray(vm.visible(state2.rec_meta, state2.allocated,
+                                      state2.global_version))
+    assert live_multiset(state2, cfg) == before
+    np.testing.assert_array_equal(vis_before, vis_after)
+    check_invariants(state2, cfg)
+    # the marked batch still executes equivalently on the re-trained state
+    st_seq = sequential_execute(state2, cfg, list(jobs))
+    st_bat, rr = _run_batched(state2, cfg, list(jobs), bg_ops=8)
+    check_invariants(st_seq, cfg)
+    check_invariants(st_bat, cfg)
+    assert live_multiset(st_bat, cfg) == before
+    assert live_multiset(st_seq, cfg) == before
+    assert int(rr.executed) > 0
+
+
 def test_select_candidates_matches_detect():
     cfg = _mk_cfg("ubis")
     state, _ = _marked_state(cfg, 5)

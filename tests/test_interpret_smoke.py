@@ -1,0 +1,39 @@
+"""Index-level workload on the PALLAS kernel path (interpret=True on
+CPU) — not the jnp reference the index normally dispatches to off-TPU.
+
+This is the ROADMAP "run the kernel path periodically" item: the weekly
+``kernels-interpret`` CI job runs it (marked slow, so the per-PR quick
+suite skips it).  Shapes satisfy every kernel-path alignment gate:
+dim % 128 == 0, capacity % 128 == 0, pq_ksub % 128 == 0 — so search
+exercises the Pallas ``centroid_score``, ``posting_scan_gather`` and
+``pq_scan`` kernels end to end through the driver.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import UBISConfig, UBISDriver, brute_force, metrics
+from conftest import make_clustered
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.mark.parametrize("use_pq", [False, True])
+def test_driver_workload_on_pallas_interpret(use_pq):
+    cfg = UBISConfig(dim=128, max_postings=64, capacity=128, l_min=8,
+                     l_max=96, cache_capacity=256, max_ids=1 << 12,
+                     nprobe=8, use_pallas="pallas", use_pq=use_pq,
+                     pq_m=8, pq_ksub=256, rerank_k=64)
+    data = make_clustered(700, d=cfg.dim, k=5, seed=2)
+    drv = UBISDriver(cfg, data[:200], round_size=128, bg_ops_per_round=4,
+                     pq_retrain_every=3)
+    drv.insert(data, np.arange(700))
+    drv.delete(np.arange(0, 120))
+    drv.flush(max_ticks=12)
+    assert drv.stats["bg_ops"] > 0, "workload exercised no structural ops"
+    q = make_clustered(8, d=cfg.dim, k=5, seed=7)
+    found, _ = drv.search(q, 10)
+    true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
+    rec = metrics.recall_at_k(found, np.asarray(true))
+    floor = 0.8 if use_pq else 0.9
+    assert rec > floor, rec
