@@ -4,18 +4,23 @@ Scale honesty (DESIGN.md §8): the paper runs 1M x 128-768d on NVMe with
 16 vCPUs; this container is one CPU core, so defaults are 20k x 32d.
 Relative claims (UBIS vs SPFresh on recall/TPS, distribution shapes,
 parameter trade-offs) are the reproduction target.  ``--full`` scales up.
+
+Every engine is built through ``repro.api.make_index`` and driven
+through the ``StreamingIndex`` protocol — the workload loops below
+contain ZERO engine-specific branches, which is what makes the
+``figengines`` comparison (including ``ubis-sharded``) one loop over
+engine names.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import (UBISConfig, UBISDriver, brute_force, metrics,
-                        state_memory_bytes)
+from repro.api import make_index
+from repro.core import UBISConfig, metrics
 from repro.data import DriftingVectorStream, StaticVectorSet
 
 
@@ -35,8 +40,8 @@ FULL = BenchScale(n=100000, dim=64, batches=20, queries=256,
                   max_postings=8192)
 
 
-def make_cfg(scale: BenchScale, mode: str, balance_factor: float = 0.15,
-             **kw):
+def make_cfg(scale: BenchScale, mode: str = "ubis",
+             balance_factor: float = 0.15, **kw):
     return UBISConfig(dim=scale.dim, max_postings=scale.max_postings,
                       capacity=96, l_min=10, l_max=80,
                       balance_factor=balance_factor,
@@ -44,23 +49,23 @@ def make_cfg(scale: BenchScale, mode: str, balance_factor: float = 0.15,
                       use_pallas="off", mode=mode, **kw)
 
 
-def make_driver(scale: BenchScale, mode: str, seed_vectors,
+def make_driver(scale: BenchScale, engine: str, seed_vectors,
                 balance_factor: float = 0.15, round_size: int = 512,
                 bg_ops: int = 8, fg_threads: int = 1):
-    """fg_threads models the paper's foreground thread count: the
-    foreground round budget per tick is fg_threads * round_size.
+    """Build any engine behind the one front door.
 
-    mode "freshdiskann" builds the graph-based comparison baseline."""
-    if mode == "freshdiskann":
-        from repro.core.freshdiskann import FreshDiskANN, GraphConfig
-        gcfg = GraphConfig(dim=scale.dim,
-                           max_nodes=max(2 * scale.n, 4096),
-                           degree=24, beam=40)
-        seed_ids = np.arange(10 ** 7, 10 ** 7 + len(seed_vectors))
-        return FreshDiskANN(gcfg, seed_vectors, seed_ids)
-    cfg = make_cfg(scale, mode, balance_factor)
-    return UBISDriver(cfg, seed_vectors, round_size=round_size,
-                      bg_ops_per_round=bg_ops, seed=scale.seed)
+    fg_threads models the paper's foreground thread count: the
+    foreground round budget per tick is fg_threads * round_size.
+    Engine-specific construction (mode rewrite, GraphConfig translation,
+    seed-corpus ingestion for the build-once engines) lives in the
+    registry, not here."""
+    cfg = make_cfg(scale, "ubis", balance_factor)
+    return make_index(engine, cfg, seed_vectors,
+                      seed_ids=np.arange(len(seed_vectors)),
+                      seed=scale.seed,
+                      round_size=round_size * fg_threads,
+                      bg_ops_per_round=bg_ops,
+                      max_nodes=max(2 * scale.n, 4096), degree=24, beam=40)
 
 
 def eval_recall(drv, queries: np.ndarray, k: int,
@@ -70,7 +75,7 @@ def eval_recall(drv, queries: np.ndarray, k: int,
     With (stream_vecs, stream_ids): truth = exact k-NN over EVERYTHING
     streamed so far (paper semantics — an index that rejected/blocked
     fresh vectors pays for them in recall).  Otherwise truth = the
-    index's own live contents."""
+    index's own live contents via the engine's ``exact`` oracle."""
     found, _ = drv.search(queries, k)
     if stream_vecs is not None:
         d2 = ((queries[:, None, :].astype(np.float32)
@@ -78,20 +83,11 @@ def eval_recall(drv, queries: np.ndarray, k: int,
         order = np.argsort(d2, axis=1)[:, :k]
         true = np.asarray(stream_ids)[order]
         return metrics.recall_at_k(found, true)
-    if isinstance(drv, UBISDriver):
-        true, _ = brute_force(drv.state, drv.cfg, jnp.asarray(queries), k)
-        return metrics.recall_at_k(found, np.asarray(true))
-    valid = np.asarray(drv.state.valid)
-    ids = np.asarray(drv.state.ids)
-    vecs = np.asarray(drv.state.vectors)
-    live = np.flatnonzero(valid)
-    d2 = ((queries[:, None, :] - vecs[live][None]) ** 2).sum(-1)
-    order = np.argsort(d2, axis=1)[:, :k]
-    true = ids[live][order]
-    return metrics.recall_at_k(found, true)
+    true, _ = drv.exact(queries, k)
+    return metrics.recall_at_k(found, np.asarray(true))
 
 
-def streaming_run(scale: BenchScale, mode: str,
+def streaming_run(scale: BenchScale, engine: str,
                   dataset: str = "drift",
                   balance_factor: float = 0.15,
                   bg_ops: int = 8,
@@ -109,9 +105,9 @@ def streaming_run(scale: BenchScale, mode: str,
         queries = sset.queries(scale.queries)
 
     seed_vecs = batches[0]
-    drv = make_driver(scale, mode, seed_vecs, balance_factor,
+    l_min = make_cfg(scale).l_min      # small-posting threshold (fig5)
+    drv = make_driver(scale, engine, seed_vecs, balance_factor,
                       bg_ops=bg_ops)
-    is_ubis_driver = isinstance(drv, UBISDriver)
     # warm up compile paths outside timed regions
     drv.search(queries[:8], scale.k)
     records = []
@@ -125,7 +121,7 @@ def streaming_run(scale: BenchScale, mode: str,
         t0 = time.perf_counter()
         r = drv.insert(batch, ids)
         # background phases run continuously in the paper (4 threads);
-        # give both modes the same bounded budget per batch
+        # give every engine the same bounded budget per batch
         drv.flush(max_ticks=6)
         t_upd = time.perf_counter() - t0
         rec = {}
@@ -143,18 +139,15 @@ def streaming_run(scale: BenchScale, mode: str,
             qps = 1.0 / np.mean(lat)
             p99 = float(np.percentile(np.repeat(lat, 32), 99) * 1e3)
             rec.update(recall=recall, qps=qps, p99_ms=p99)
-        lens = _posting_lengths(drv) if is_ubis_driver else np.array([])
-        mem = (state_memory_bytes(drv.state) if is_ubis_driver
-               else drv.memory_bytes())
+        lens = drv.posting_lengths()
         rec.update(
             batch=bi,
-            tps=(r["accepted"] + r["cached"]) / t_upd,
-            accepted=r["accepted"], cached=r["cached"],
-            rejected=r["rejected"],
-            memory_mb=mem / 2 ** 20,
+            tps=(r.accepted + r.cached) / t_upd,
+            accepted=r.accepted, cached=r.cached,
+            rejected=r.rejected,
+            memory_mb=drv.memory_bytes() / 2 ** 20,
             n_postings=len(lens),
-            small_frac=float((lens < drv.cfg.l_min).mean()) if len(lens)
-            else 0.0,
+            small_frac=float((lens < l_min).mean()) if len(lens) else 0.0,
             median_len=int(np.median(lens)) if len(lens) else 0,
         )
         records.append(rec)
@@ -165,21 +158,13 @@ def streaming_run(scale: BenchScale, mode: str,
     return records
 
 
-def _posting_lengths(drv: UBISDriver) -> np.ndarray:
-    from repro.core import version_manager as vm
-    status = np.asarray(vm.unpack_status(drv.state.rec_meta))
-    alive = np.asarray(drv.state.allocated) & (status != 3)
-    lens = np.asarray(drv.state.lengths)[alive]
-    return lens[lens > 0]
-
-
-def full_update_run(scale: BenchScale, mode: str,
+def full_update_run(scale: BenchScale, engine: str,
                     dataset: str = "static") -> Dict:
     """The paper's *full update* workload (Table IV): append everything,
     then measure the final index."""
     sset = StaticVectorSet(n=scale.n, dim=scale.dim, seed=scale.seed)
     queries = sset.queries(scale.queries)
-    drv = make_driver(scale, mode, sset.vectors[:2000])
+    drv = make_driver(scale, engine, sset.vectors[:2000])
     drv.search(queries[:8], scale.k)  # warm up
     t0 = time.perf_counter()
     r = drv.insert(sset.vectors, np.arange(scale.n))
@@ -192,14 +177,12 @@ def full_update_run(scale: BenchScale, mode: str,
         t1 = time.perf_counter()
         drv.search(queries[off:off + 32], scale.k)
         lat.append((time.perf_counter() - t1) / 32)
-    mem = (state_memory_bytes(drv.state) if isinstance(drv, UBISDriver)
-           else drv.memory_bytes())
     return {
-        "mode": mode,
+        "mode": engine,
         "recall": recall,
-        "tps": (r["accepted"] + r["cached"]) / t_upd,
-        "rejected": r["rejected"],
-        "memory_mb": mem / 2 ** 20,
+        "tps": (r.accepted + r.cached) / t_upd,
+        "rejected": r.rejected,
+        "memory_mb": drv.memory_bytes() / 2 ** 20,
         "qps": 1.0 / np.mean(lat),
         "p99_ms": float(np.percentile(np.repeat(lat, 32), 99) * 1e3),
     }

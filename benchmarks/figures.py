@@ -10,8 +10,7 @@ from typing import Dict, List
 import numpy as np
 
 from .common import (QUICK, BenchScale, full_update_run, make_cfg,
-                     make_driver, streaming_run, eval_recall,
-                     _posting_lengths)
+                     make_driver, streaming_run, eval_recall)
 
 
 def fig5_posting_cdf(scale: BenchScale = QUICK) -> List[Dict]:
@@ -105,7 +104,7 @@ def fig8_fg_bg_ratio(scale: BenchScale = QUICK) -> List[Dict]:
         for b in batches:
             r = drv.insert(b, np.arange(nid, nid + len(b)))
             nid += len(b)
-            n_ins += r["accepted"] + r["cached"]
+            n_ins += r.accepted + r.cached
             drv.tick()
         tps = n_ins / (time.perf_counter() - t0)
         t0 = time.perf_counter()
@@ -179,6 +178,31 @@ def figpq_memory_recall(scale: BenchScale = QUICK) -> List[Dict]:
                      "memory_mb": round(
                          state_memory_bytes(drv.state) / 2 ** 20, 1),
                      "pq_retrains": int(drv.stats["pq_retrains"])})
+    return rows
+
+
+def figengines_comparison(scale: BenchScale = QUICK) -> List[Dict]:
+    """Beyond the paper's two-way plots: ALL engines under the identical
+    streaming-churn workload, one loop over engine names through
+    ``make_index`` — zero engine-specific branches (the point of the
+    ``StreamingIndex`` front door).  ``spann`` honestly pays for its
+    refused updates in recall; ``ubis-sharded`` runs the distributed
+    driver on however many local devices exist (1 in CI)."""
+    from repro.api import ENGINES
+    rows = []
+    for engine in ENGINES:
+        recs = streaming_run(scale, engine, dataset="drift")
+        last = recs[-1]
+        rows.append({
+            "figure": "figengines", "mode": engine,
+            "final_recall": round(last["final_recall"], 4),
+            "mean_tps": round(float(np.mean([r["tps"] for r in recs])), 1),
+            "mean_qps": round(float(np.mean(
+                [r["qps"] for r in recs if "qps" in r])), 1),
+            "rejected": int(sum(r["rejected"] for r in recs)),
+            "memory_mb": round(last["memory_mb"], 1),
+            "n_postings": last["n_postings"],
+        })
     return rows
 
 

@@ -20,7 +20,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--figures",
-                    default="fig5,fig6,fig7,table4,fig8,fig9,figpq")
+                    default="fig5,fig6,fig7,table4,fig8,fig9,figpq,"
+                            "figengines")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
@@ -36,6 +37,7 @@ def main(argv=None) -> None:
         "fig8": figures.fig8_fg_bg_ratio,
         "fig9": figures.fig9_balance_factor,
         "figpq": figures.figpq_memory_recall,
+        "figengines": figures.figengines_comparison,
     }
     wanted = [f.strip() for f in args.figures.split(",") if f.strip()]
     all_rows = []
@@ -95,6 +97,9 @@ def _headline(name: str, rows) -> str:
             return (f"{best['variant']} {best['compression_x']}x smaller, "
                     f"recall {best['recall']:.3f} vs float "
                     f"{fl['recall']:.3f}")
+        if name == "figengines":
+            return " ".join(f"{r['mode']}={r['final_recall']:.3f}"
+                            for r in rows)
     except Exception as e:  # pragma: no cover
         return f"derived-error:{e}"
     return ""

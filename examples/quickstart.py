@@ -1,14 +1,20 @@
-"""Quickstart: build a UBIS index, stream updates, search.
+"""Quickstart: build a streaming index through the one front door,
+stream updates, search.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [engine]
+
+``engine`` is any of repro.api.ENGINES ("ubis" default; try
+"ubis-sharded" for the distributed driver — identical API).
 """
+import sys
+
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import UBISConfig, UBISDriver, brute_force, metrics
+from repro.api import make_index
+from repro.core import UBISConfig, metrics
 
 
-def main():
+def main(engine: str = "ubis"):
     rng = np.random.default_rng(0)
     dim = 32
     # a drifting mixture: new clusters appear over time (fresh vectors)
@@ -23,7 +29,7 @@ def main():
                      l_min=10, l_max=80, balance_factor=0.15,
                      max_ids=1 << 18, use_pallas="off")
     data0 = batch(2000, 0.0)
-    index = UBISDriver(cfg, data0)            # k-means-seeded, empty
+    index = make_index(engine, cfg, data0)    # k-means-seeded, empty
     index.insert(data0, np.arange(2000))      # initial load
 
     next_id = 2000
@@ -34,18 +40,18 @@ def main():
         index.tick()                          # background split/merge/GC
         q = batch(64, shift=step * 0.5)
         found, scores = index.search(q, k=10)
-        true, _ = brute_force(index.state, cfg, jnp.asarray(q), 10)
+        true, _ = index.exact(q, 10)
         rec = metrics.recall_at_k(found, np.asarray(true))
-        print(f"batch {step}: +{r['accepted'] + r['cached']} vectors, "
+        print(f"batch {step}: +{r.accepted + r.cached} vectors, "
               f"recall@10 = {rec:.3f}")
 
     index.delete(np.arange(0, 1000))          # expire stale vectors
     index.flush()                             # drain background work
-    print("live vectors:", int(index.state.live_vector_count()))
+    print("live vectors:", index.live_count())
     print("throughput:", {k: round(v, 1)
                           for k, v in index.throughput().items()
                           if k in ("tps", "qps")})
 
 
 if __name__ == "__main__":
-    main()
+    main(*sys.argv[1:2])

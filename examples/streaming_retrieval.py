@@ -3,8 +3,12 @@ stream of fresh documents, UBIS indexes them online, and queries are
 answered while updates continue — the Figure-1 workload (vehicles
 publishing trajectories while others search).
 
-    PYTHONPATH=src python examples/streaming_retrieval.py
+    PYTHONPATH=src python examples/streaming_retrieval.py \
+        [--steps N] [--docs-per-step N] [--engine NAME]
+
+Reduced scale for CI smoke: ``--steps 4 --docs-per-step 48``.
 """
+import argparse
 import time
 
 import numpy as np
@@ -13,22 +17,34 @@ from repro.core import UBISConfig
 from repro.launch.serve import RetrievalServer, ServeConfig
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--docs-per-step", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=24)
+    ap.add_argument("--engine", default="ubis",
+                    help="any repro.api.ENGINES name")
+    args = ap.parse_args(argv)
+
     cfg = ServeConfig(arch="tinyllama-1.1b", reduced=True, embed_dim=48)
     icfg = UBISConfig(dim=48, max_postings=1024, capacity=96,
                       max_ids=1 << 18, use_pallas="off")
     rng = np.random.default_rng(0)
     seed_vecs = rng.normal(size=(512, 48)).astype(np.float32)
-    server = RetrievalServer(cfg, index_cfg=icfg, seed_vectors=seed_vecs)
+    server = RetrievalServer(cfg, index_cfg=icfg, seed_vectors=seed_vecs,
+                             engine=args.engine)
     vocab = server.embedder.model.cfg.vocab
 
-    print("streaming 12 batches of fresh docs with interleaved queries")
+    print(f"streaming {args.steps} batches of fresh docs with "
+          f"interleaved queries (engine={args.engine})")
     t0 = time.time()
-    for step in range(12):
-        docs = rng.integers(0, vocab, (128, 24)).astype(np.int32)
+    for step in range(args.steps):
+        docs = rng.integers(0, vocab,
+                            (args.docs_per_step, args.seq)).astype(np.int32)
         ids = server.ingest_tokens(docs)
         if step % 3 == 2:
-            queries = rng.integers(0, vocab, (32, 24)).astype(np.int32)
+            queries = rng.integers(0, vocab,
+                                   (32, args.seq)).astype(np.int32)
             found, scores = server.query_tokens(queries, k=5)
             qv = server.embedder.embed(queries)
             rec = server.recall_check(qv, k=5)

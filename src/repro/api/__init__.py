@@ -1,0 +1,33 @@
+"""One front door: the engine-agnostic streaming-index API.
+
+    from repro.api import make_index, ENGINES
+
+    idx = make_index("ubis", cfg, seed_vectors)      # any engine name
+    idx.insert(vecs, ids); idx.tick()
+    res = idx.search(queries, k=10)                  # SearchResult
+
+Engines: ``ubis`` | ``spfresh`` | ``spann`` | ``freshdiskann`` |
+``ubis-sharded`` — all conform to :class:`StreamingIndex`, so an engine
+comparison is one loop over names (see ``benchmarks/figures.py``
+``figengines`` and ``examples/engine_compare.py``).
+
+The registry and the sharded driver import the engine modules, which in
+turn import :mod:`repro.api.types` for the result dataclasses — load
+them lazily here so ``repro.core`` never re-enters a half-initialised
+``repro.api`` package.
+"""
+from .types import (SearchResult, StreamingIndex, TickReport,  # noqa: F401
+                    UpdateResult)
+
+__all__ = ["StreamingIndex", "SearchResult", "UpdateResult", "TickReport",
+           "make_index", "ENGINES", "ShardedUBISDriver"]
+
+
+def __getattr__(name):
+    if name in ("make_index", "ENGINES"):
+        from . import registry
+        return getattr(registry, name)
+    if name == "ShardedUBISDriver":
+        from .sharded_driver import ShardedUBISDriver
+        return ShardedUBISDriver
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

@@ -1,0 +1,73 @@
+"""Engine registry: ``make_index(engine, cfg, seed_vectors, **kw)``.
+
+One constructor for every engine in the paper's comparison.  All
+engines take the same ``UBISConfig`` (the registry rewrites ``mode``
+and, for the graph baseline, translates to a ``GraphConfig``), and
+keyword arguments unknown to an engine are silently dropped — which is
+what lets one shared kwargs dict drive a whole engine-comparison loop
+with zero engine-specific branches at the call site:
+
+    for engine in ENGINES:
+        idx = make_index(engine, cfg, seed, seed_ids=ids0,
+                         round_size=512, bg_ops_per_round=8)
+        ...same insert/delete/search/tick/flush loop...
+
+``seed_vectors`` semantics follow each engine's construction story:
+the cluster engines (ubis/spfresh/ubis-sharded) use them for k-means
+seeding only (NOT inserted); the build-once engines (spann,
+freshdiskann) ingest them under ``seed_ids`` (default ``arange``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.types import UBISConfig
+from .types import StreamingIndex
+
+ENGINES = ("ubis", "spfresh", "spann", "freshdiskann", "ubis-sharded")
+
+_DRIVER_KW = {"seed", "round_size", "bg_ops_per_round", "drain_per_tick",
+              "insert_retries", "gc_lag", "reassign_after_split",
+              "pq_retrain_every"}
+_UBIS_KW = _DRIVER_KW | {"fused_tick"}
+_SHARDED_KW = _DRIVER_KW | {"mesh", "shard_cache_scan"}
+_SPANN_KW = {"seed", "round_size"}
+_GRAPH_KW = {"max_nodes", "degree", "beam", "alpha", "consolidate_every"}
+
+
+def _pick(kw: dict, allowed: set) -> dict:
+    return {k: v for k, v in kw.items() if k in allowed}
+
+
+def _with_mode(cfg: UBISConfig, mode: str) -> UBISConfig:
+    return cfg if cfg.mode == mode else dataclasses.replace(cfg, mode=mode)
+
+
+def make_index(engine: str, cfg: UBISConfig, seed_vectors, *,
+               seed_ids=None, **kw) -> StreamingIndex:
+    """Build any engine behind the ``StreamingIndex`` front door."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from "
+                         f"{ENGINES}")
+    if engine in ("ubis", "spfresh"):
+        from ..core.driver import UBISDriver
+        return UBISDriver(_with_mode(cfg, engine), seed_vectors,
+                          **_pick(kw, _UBIS_KW))
+    if engine == "ubis-sharded":
+        from .sharded_driver import ShardedUBISDriver
+        return ShardedUBISDriver(_with_mode(cfg, "ubis"), seed_vectors,
+                                 **_pick(kw, _SHARDED_KW))
+    seeds = np.asarray(seed_vectors, np.float32)
+    ids = (np.arange(len(seeds)) if seed_ids is None
+           else np.asarray(seed_ids, np.int64))
+    if engine == "spann":
+        from ..core.spann import SPANNStatic
+        return SPANNStatic(_with_mode(cfg, "ubis"), seeds, ids,
+                           **_pick(kw, _SPANN_KW))
+    from ..core.freshdiskann import FreshDiskANN, GraphConfig
+    gkw = _pick(kw, _GRAPH_KW)
+    gkw.setdefault("max_nodes", 1 << 17)
+    gcfg = GraphConfig(dim=cfg.dim, **gkw)
+    return FreshDiskANN(gcfg, seeds, ids)

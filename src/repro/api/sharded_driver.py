@@ -1,0 +1,373 @@
+"""Host orchestration for the sharded index — the distributed driver.
+
+``ShardedUBISDriver`` presents the *identical* ``StreamingIndex`` API as
+the single-device ``UBISDriver``, with every data-plane call dispatched
+to the jitted sharded programs (``core/sharded.py``) over a TPU-pod
+mesh:
+
+  * **insert** — padded replicated job rounds through
+    ``make_sharded_insert``; the per-job accepted mask drives the
+    retry-with-a-tick-between loop, and jobs still rejected after the
+    retries park in the **host-mediated vector cache** (below);
+  * **delete** — ``make_sharded_delete`` rounds (owner-shard tombstones,
+    replicated id-map/cache updates, zero collectives);
+  * **search** — ``make_sharded_search`` per (k, nprobe), queries padded
+    to the data-axis multiple;
+  * **tick**  — ONE ``make_sharded_background`` call (per-shard select →
+    mark → execute → epoch GC, collective-free), then the host cache
+    drain, then the PQ codebook re-train on cadence.
+
+**Host-mediated vector cache.**  The cache arrays are *replicated*
+across model shards, so no shard may write them inside an SPMD program
+(replica divergence).  Instead the host owns cache admission: rejected
+jobs are written into the replicated cache arrays host-side (every
+replica gets the same bytes), which keeps them *searchable* — the
+sharded search's cache scan sees them — and deletable; each tick drains
+up to ``drain_per_tick`` of them back through the sharded insert round.
+
+**Snapshot contract.**  The sharded rounds return the free stack
+fail-safe EMPTY; ``snapshot()`` gathers the state and passes it through
+``update.ensure_free_stack``, which rebuilds the canonical stack and
+*asserts* it (the encoded form of the old sharded.py comment) — a
+gathered state that would alias live postings cannot escape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import update
+from ..core.build import initial_state
+from ..core.sharded import (index_specs, make_sharded_background,
+                            make_sharded_delete, make_sharded_insert,
+                            make_sharded_search)
+from ..core.search import brute_force
+from ..core.types import IndexState, UBISConfig
+from .types import SearchResult, TickReport, UpdateResult
+
+
+def default_mesh(cfg: UBISConfig) -> Mesh:
+    """All local devices on the ``model`` axis (posting-pool sharding),
+    falling back toward fewer shards until ``max_postings`` divides."""
+    n = len(jax.devices())
+    m = n
+    while m > 1 and (cfg.max_postings % m or n % m):
+        m -= 1
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+class ShardedUBISDriver:
+    """Streaming driver over a sharded index (a ``StreamingIndex``)."""
+
+    def __init__(self, cfg: UBISConfig, seed_vectors=None, *,
+                 mesh: Optional[Mesh] = None, seed: int = 0,
+                 round_size: int = 1024, bg_ops_per_round: int = 8,
+                 drain_per_tick: int = 256, insert_retries: int = 2,
+                 gc_lag: int = 16, reassign_after_split: bool = True,
+                 pq_retrain_every: int = 32,
+                 shard_cache_scan: bool = True):
+        if not cfg.is_ubis:
+            raise ValueError("ShardedUBISDriver is UBIS-mode only "
+                             "(SPFresh's lock model is single-device)")
+        if seed_vectors is None:
+            raise ValueError("seed_vectors required (used for k-means seeds)")
+        self.cfg = cfg
+        self.mesh = mesh if mesh is not None else default_mesh(cfg)
+        if cfg.max_postings % self.mesh.shape["model"]:
+            raise ValueError("max_postings must divide the model axis")
+        self.round_size = int(round_size)
+        self.bg_ops = int(bg_ops_per_round)
+        self.drain_n = int(drain_per_tick)
+        self.retries = int(insert_retries)
+        self.gc_lag = int(gc_lag)
+        self.pq_retrain_every = int(pq_retrain_every)
+        self._ticks = 0
+        self._pq_key = jax.random.key(seed + 0x517C0DE)
+        self.stats = defaultdict(float)
+
+        specs = index_specs(cfg)
+        self._shardings = jax.tree_util.tree_map(
+            lambda sp: NamedSharding(self.mesh, sp), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self._rep = NamedSharding(self.mesh, P())
+        state = initial_state(cfg, jnp.asarray(seed_vectors),
+                              key=jax.random.key(seed))
+        self.state: IndexState = jax.device_put(state, self._shardings)
+
+        self._insert_fn = make_sharded_insert(cfg, self.mesh)
+        self._delete_fn = make_sharded_delete(cfg, self.mesh)
+        self._background_fn = make_sharded_background(
+            cfg, self.mesh, bg_ops=self.bg_ops,
+            reassign=reassign_after_split)
+        self._shard_cache_scan = shard_cache_scan
+        self._search_fns = {}
+        # queries shard over the data axes: batches pad to this multiple
+        axes = self.mesh.axis_names
+        qaxes = ("pod", "data") if "pod" in axes else ("data",)
+        self._q_mult = 1
+        for a in qaxes:
+            self._q_mult *= self.mesh.shape[a]
+
+    # ------------------------------------------------------------------
+    # foreground
+    # ------------------------------------------------------------------
+
+    def insert(self, vecs, ids, *, tick_between: bool = True) -> UpdateResult:
+        """Stream (vecs, ids) through padded sharded insert rounds.
+
+        Rejected jobs retry up to ``insert_retries`` times with a
+        background tick in between; survivors park in the host-mediated
+        cache (searchable immediately, drained on later ticks) and only
+        overflow beyond the cache is reported rejected.
+        """
+        vecs = np.asarray(vecs, np.float32)
+        ids = np.asarray(ids, np.int64).astype(np.int32)
+        if len(vecs) != len(ids):
+            raise ValueError(f"vecs/ids length mismatch: {len(vecs)} vs "
+                             f"{len(ids)}")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.cfg.max_ids):
+            raise ValueError("ids out of range for cfg.max_ids")
+        t0 = time.perf_counter()
+        n_acc = 0
+        pending = (vecs, ids)
+        for attempt in range(self.retries + 1):
+            acc, rej_v, rej_i = self._insert_rounds(*pending)
+            n_acc += acc
+            if rej_i is None:
+                pending = None
+                break
+            pending = (rej_v, rej_i)
+            if tick_between:
+                self.tick()
+        n_cache = n_rej = 0
+        if pending is not None:
+            n_cache = self._cache_put(*pending)
+            n_rej = len(pending[1]) - n_cache
+        jax.block_until_ready(self.state.lengths)
+        dt = time.perf_counter() - t0
+        self.stats["insert_time"] += dt
+        self.stats["inserted"] += n_acc + n_cache
+        self.stats["rejected"] += n_rej
+        return UpdateResult(accepted=n_acc, cached=n_cache, rejected=n_rej,
+                            seconds=dt)
+
+    def _insert_rounds(self, vecs, ids):
+        """One pass of padded sharded insert rounds.  Returns
+        (n_accepted, rej_vecs | None, rej_ids | None)."""
+        J = self.round_size
+        n_acc = 0
+        rej_v, rej_i = [], []
+        for off in range(0, len(ids), J):
+            cv, ci = vecs[off:off + J], ids[off:off + J]
+            n = len(ci)
+            pad = J - n
+            valid = np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
+            cv = np.concatenate([cv, np.zeros((pad, self.cfg.dim),
+                                              np.float32)])
+            ci = np.concatenate([ci, np.zeros(pad, np.int32)])
+            self.state, accm = self._insert_fn(
+                self.state, jnp.asarray(cv), jnp.asarray(ci),
+                jnp.asarray(valid))
+            accm = np.asarray(accm)[:n]
+            n_acc += int(accm.sum())
+            if not accm.all():
+                rej_v.append(cv[:n][~accm])
+                rej_i.append(ci[:n][~accm])
+        if not rej_i:
+            return n_acc, None, None
+        return n_acc, np.concatenate(rej_v), np.concatenate(rej_i)
+
+    def delete(self, ids) -> UpdateResult:
+        ids = np.asarray(ids, np.int64).astype(np.int32)
+        t0 = time.perf_counter()
+        J = self.round_size
+        n_done = 0
+        for off in range(0, len(ids), J):
+            ci = ids[off:off + J]
+            pad = J - len(ci)
+            valid = np.concatenate([np.ones(len(ci), bool),
+                                    np.zeros(pad, bool)])
+            ci = np.concatenate([ci, np.zeros(pad, np.int32)])
+            self.state, done = self._delete_fn(
+                self.state, jnp.asarray(ci), jnp.asarray(valid))
+            n_done += int(np.asarray(done).sum())
+        jax.block_until_ready(self.state.lengths)
+        dt = time.perf_counter() - t0
+        self.stats["delete_time"] += dt
+        self.stats["deleted"] += n_done
+        return UpdateResult(deleted=n_done, seconds=dt)
+
+    def search(self, queries, k: int,
+               nprobe: Optional[int] = None) -> SearchResult:
+        q = np.asarray(queries, np.float32)
+        t0 = time.perf_counter()
+        key = (k, nprobe)
+        fn = self._search_fns.get(key)
+        if fn is None:
+            fn = self._search_fns[key] = make_sharded_search(
+                self.cfg, self.mesh, k=k, nprobe=nprobe,
+                shard_cache_scan=self._shard_cache_scan)
+        Q = q.shape[0]
+        pad = (-Q) % self._q_mult
+        if pad:
+            q = np.concatenate([q, np.zeros((pad, q.shape[1]), np.float32)])
+        found, scores = fn(self.state, jnp.asarray(q))
+        found = np.asarray(found)[:Q]
+        scores = np.asarray(scores)[:Q]
+        dt = time.perf_counter() - t0
+        self.stats["search_time"] += dt
+        self.stats["queries"] += Q
+        return SearchResult(ids=found, scores=scores, seconds=dt)
+
+    # ------------------------------------------------------------------
+    # background
+    # ------------------------------------------------------------------
+
+    def tick(self) -> TickReport:
+        """One background round: the collective-free sharded
+        select/mark/execute/GC program, then the host cache drain, then
+        the PQ re-train on cadence."""
+        t0 = time.perf_counter()
+        ver = int(jax.device_get(self.state.global_version))
+        gc_min = ver - self.gc_lag if ver > self.gc_lag else 0
+        self.state, ex, gc = self._background_fn(self.state,
+                                                 jnp.uint32(gc_min))
+        executed, reclaimed = int(ex), int(gc)
+        self.stats["bg_exec_time"] += time.perf_counter() - t0
+        drained = self._drain_cache()
+        retrained = self._pq_retrain()
+        dt = time.perf_counter() - t0
+        self.stats["bg_time"] += dt
+        self.stats["bg_ops"] += executed
+        self.stats["bg_gc"] += reclaimed
+        # marked=0, honestly: the sharded round selects and executes in
+        # ONE atomic program, so there is no separate mark phase to
+        # count — quiescence is executed == 0 (+ empty cache), and a
+        # caller porting UBISDriver's flush check gets exactly that
+        return TickReport(executed=executed, drained=drained,
+                          gc=reclaimed, pq_retrained=retrained,
+                          seconds=dt)
+
+    def flush(self, max_ticks: int = 200) -> int:
+        """Tick until quiescent (no structural work, cache empty)."""
+        for i in range(max_ticks):
+            r = self.tick()
+            cache_n = int(np.asarray(self.state.cache_valid).sum())
+            if r.executed == 0 and cache_n == 0:
+                return i + 1
+        return max_ticks
+
+    # ---- host-mediated vector cache -----------------------------------
+
+    def _replicate(self, x):
+        return jax.device_put(jnp.asarray(x), self._rep)
+
+    def _cache_put(self, vecs, ids) -> int:
+        """Park jobs in the replicated cache from the host (every
+        replica receives identical bytes; id_loc takes the ``-2 - slot``
+        encoding, so the entries are searchable and deletable)."""
+        cval = np.array(self.state.cache_valid)
+        free = np.flatnonzero(~cval)
+        n = min(len(free), len(ids))
+        if n == 0:
+            return 0
+        slots = free[:n]
+        cvecs = np.array(self.state.cache_vecs)
+        cids = np.array(self.state.cache_ids)
+        ctgt = np.array(self.state.cache_target)
+        iloc = np.array(self.state.id_loc)
+        cvecs[slots] = vecs[:n]
+        cids[slots] = ids[:n]
+        ctgt[slots] = -1
+        cval[slots] = True
+        iloc[ids[:n]] = -2 - slots
+        self.state = dataclasses.replace(
+            self.state, cache_vecs=self._replicate(cvecs),
+            cache_ids=self._replicate(cids),
+            cache_target=self._replicate(ctgt),
+            cache_valid=self._replicate(cval),
+            id_loc=self._replicate(iloc))
+        self.stats["host_cached"] += n
+        return n
+
+    def _drain_cache(self) -> int:
+        """Pop up to ``drain_per_tick`` cached vectors and feed them back
+        through the sharded insert round; failures re-park."""
+        cval = np.array(self.state.cache_valid)
+        slots = np.flatnonzero(cval)[:self.drain_n]
+        if slots.size == 0:
+            return 0
+        vecs = np.asarray(self.state.cache_vecs)[slots].astype(np.float32)
+        ids = np.asarray(self.state.cache_ids)[slots]
+        cval[slots] = False
+        self.state = dataclasses.replace(
+            self.state, cache_valid=self._replicate(cval))
+        n_acc, rej_v, rej_i = self._insert_rounds(vecs, ids)
+        if rej_i is not None:
+            self._cache_put(rej_v, rej_i)
+        return n_acc
+
+    def _pq_retrain(self) -> int:
+        """Versioned codebook re-train on tick cadence (quant plane).
+        ``retrain_round`` is a plain jit program: GSPMD partitions it
+        over the existing shardings; the output is re-pinned to the
+        canonical specs so later shard_map calls see exact layouts."""
+        if not self.cfg.use_pq or self.pq_retrain_every <= 0:
+            return 0
+        self._ticks += 1
+        if self._ticks % self.pq_retrain_every:
+            return 0
+        from ..quant import pq
+        self._pq_key, k = jax.random.split(self._pq_key)
+        st = pq.retrain_round(self.state, self.cfg, k)
+        self.state = jax.device_put(st, self._shardings)
+        self.stats["pq_retrains"] += 1
+        return 1
+
+    # ---- StreamingIndex protocol surface ------------------------------
+
+    def snapshot(self) -> IndexState:
+        """Gather to a single-device state with a canonical free stack
+        (``update.ensure_free_stack`` asserts the contract — the sharded
+        rounds hand back a fail-safe EMPTY stack)."""
+        host = jax.device_get(self.state)
+        st = jax.tree_util.tree_map(jnp.asarray, host)
+        return update.ensure_free_stack(st)
+
+    def memory_bytes(self) -> int:
+        from ..core.types import state_memory_bytes
+        return state_memory_bytes(self.state)
+
+    def exact(self, queries, k: int) -> SearchResult:
+        """Exact top-k over live contents (recall oracle).
+
+        Runs on the GATHERED snapshot, not through GSPMD over the
+        sharded state: XLA may keep the replicated id row in a
+        partial-sum representation across the data axis there, which
+        silently scales the returned ids (observed: exactly x data-axis
+        ids).  The oracle is eval-only, so the gather cost is fine.
+        """
+        found, scores = brute_force(self.snapshot(), self.cfg,
+                                    jnp.asarray(queries, jnp.float32), k)
+        return SearchResult(ids=np.asarray(found),
+                            scores=np.asarray(scores))
+
+    def posting_lengths(self) -> np.ndarray:
+        from ..core.metrics import live_posting_lengths
+        return live_posting_lengths(self.state)
+
+    def live_count(self) -> int:
+        """Vectors in visible postings + the (replicated) cache."""
+        return int(self.state.live_vector_count()) + int(
+            np.asarray(self.state.cache_valid).sum())
+
+    def throughput(self) -> dict:
+        from ..core.metrics import throughput_from_stats
+        return throughput_from_stats(self.stats)

@@ -1,0 +1,112 @@
+"""The engine-agnostic streaming-index contract (one front door).
+
+Every engine in the paper's comparison — UBIS, SPFresh, SPANN,
+FreshDiskANN, and the sharded UBIS driver — answers the same five
+questions: ingest fresh vectors, expire stale ones, search, advance
+background maintenance, and report what happened.  ``StreamingIndex``
+pins that contract structurally (``typing.Protocol``: no inheritance
+required), and the three result dataclasses replace the ad-hoc
+dict/tuple returns the engines used to hand back.
+
+Compatibility dunders: ``SearchResult`` iterates as ``(ids, scores)``
+and the update/tick results subscript like the dicts they replace, so
+``found, _ = idx.search(q, k)`` and ``r["accepted"]`` keep working while
+call sites migrate to attribute access.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Mapping, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """One search batch.  ``ids`` is (Q, k) int32 with -1 where fewer
+    than k hits exist; ``scores`` follows the repo-wide convention
+    ``||v||^2 - 2 q.v`` (add ``||q||^2`` for true squared distances)."""
+
+    ids: np.ndarray
+    scores: np.ndarray
+    seconds: float = 0.0
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        # legacy tuple shape: ``found, scores = idx.search(q, k)``
+        return iter((self.ids, self.scores))
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """Outcome of one insert() or delete() call (counts over the batch).
+
+    insert fills accepted/cached/rejected; delete fills deleted/blocked.
+    ``applied`` is the number of jobs the index actually absorbed.
+    """
+
+    accepted: int = 0
+    cached: int = 0
+    rejected: int = 0
+    deleted: int = 0
+    blocked: int = 0
+    seconds: float = 0.0
+
+    @property
+    def applied(self) -> int:
+        return self.accepted + self.cached + self.deleted
+
+    def __getitem__(self, key: str):
+        # legacy dict shape: ``r["accepted"]``
+        return getattr(self, key)
+
+
+@dataclasses.dataclass
+class TickReport:
+    """Outcome of one background tick."""
+
+    executed: int = 0
+    drained: int = 0
+    marked: int = 0
+    gc: int = 0
+    pq_retrained: int = 0
+    seconds: float = 0.0
+
+    def __getitem__(self, key: str):
+        return getattr(self, key)
+
+
+@runtime_checkable
+class StreamingIndex(Protocol):
+    """The one front door every engine presents.
+
+    Engines conform structurally — ``isinstance(x, StreamingIndex)``
+    checks method presence at runtime.  ``stats`` is a mapping of
+    monotone counters (engine-specific keys allowed; the common ones are
+    inserted/deleted/queries and the *_time accumulators feeding
+    throughput).  ``snapshot()`` returns a single-device-usable state
+    pytree — for sharded engines this implies the gather plus the
+    canonical free-stack rebuild (``update.ensure_free_stack``).
+    """
+
+    def insert(self, vecs, ids) -> UpdateResult: ...
+
+    def delete(self, ids) -> UpdateResult: ...
+
+    def search(self, queries, k: int) -> SearchResult: ...
+
+    def tick(self) -> TickReport: ...
+
+    def flush(self, max_ticks: int = 200) -> int: ...
+
+    def snapshot(self) -> Any: ...
+
+    def memory_bytes(self) -> int: ...
+
+    def exact(self, queries, k: int) -> SearchResult: ...
+
+    def posting_lengths(self) -> np.ndarray: ...
+
+    def live_count(self) -> int: ...
+
+    @property
+    def stats(self) -> Mapping: ...

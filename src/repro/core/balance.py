@@ -850,6 +850,34 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
     return state, rr
 
 
+def mark_selected(rec_meta, kinds, pids):
+    """Transition the selected batch to its window status on device
+    (SPLITTING for split/compact lanes, MERGING for merge lanes) — the
+    mark half of the two-phase window, shared by the sharded round and
+    the single-device ``fused_tick`` path."""
+    split_like = (kinds == KIND_SPLIT) | (kinds == KIND_COMPACT)
+    rec_meta = vm.transition(rec_meta, jnp.where(split_like, pids, -1),
+                             STATUS_SPLITTING)
+    return vm.transition(rec_meta, jnp.where(kinds == KIND_MERGE, pids, -1),
+                         STATUS_MERGING)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def mark_round(state: IndexState, cfg: UBISConfig, k: int):
+    """Device-side candidate selection + mark in one program: the
+    ``fused_tick`` replacement for the driver's ``detect()`` host
+    round-trip.  Returns (state, kinds, pids, n_marked) — kinds/pids
+    stay on device and feed the next tick's ``background_round``; only
+    the scalar count crosses to the host (for scheduling/quiescence).
+    """
+    kinds, pids = select_candidates(state, cfg, k)
+    rec_meta = mark_selected(state.rec_meta, kinds, pids)
+    state = dataclasses_replace(
+        state, rec_meta=rec_meta,
+        global_version=state.global_version + jnp.uint32(1))
+    return state, kinds, pids, jnp.sum(kinds != KIND_NONE)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
 def select_candidates(state: IndexState, cfg: UBISConfig, k: int):
     """Device-side candidate pick: top-k due ops by the driver's priority

@@ -1,5 +1,9 @@
 """High-Concurrency Controller (paper IV-B2) — entry-point shim.
 
+DEPRECATED entry point: new code should go through the engine-agnostic
+front door, ``repro.api.make_index`` (the ``StreamingIndex`` protocol),
+which covers every engine — not just the UBIS driver re-exported here.
+
 The controller is split across two layers:
   * data plane (jitted rounds; the three status branches, conflict-free
     scatters, the vector cache):     ``core/update.py``

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.types import SearchResult, TickReport, UpdateResult
 from . import balance, search as search_mod, update
 from .build import initial_state
 from .types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT, IndexState,
@@ -35,14 +36,23 @@ KIND_CODES = {"split": KIND_SPLIT, "merge": KIND_MERGE,
 
 
 class UBISDriver:
-    """Streaming driver for one index instance."""
+    """Streaming driver for one index instance (a ``StreamingIndex``).
+
+    ``fused_tick=True`` (UBIS mode only) moves background candidate
+    selection on device: ``balance.mark_round`` replaces the
+    ``detect()`` host round-trip — the kinds/pids batch stays on device
+    and feeds the next tick's ``background_round`` directly, exactly as
+    the sharded round already selects.  SPFresh's strict triggers are
+    host-noted by construction, so the flag is ignored in that mode.
+    """
 
     def __init__(self, cfg: UBISConfig, seed_vectors=None, *,
                  seed: int = 0, round_size: int = 1024,
                  bg_ops_per_round: int = 4, drain_per_tick: int = 256,
                  insert_retries: int = 2, gc_lag: int = 16,
                  reassign_after_split: bool = True,
-                 pq_retrain_every: int = 32):
+                 pq_retrain_every: int = 32,
+                 fused_tick: bool = False):
         self.cfg = cfg
         self.round_size = int(round_size)
         self.bg_ops = int(bg_ops_per_round)
@@ -53,6 +63,7 @@ class UBISDriver:
         # quant plane: codebook re-train cadence in ticks (0 = never);
         # only meaningful with cfg.use_pq
         self.pq_retrain_every = int(pq_retrain_every)
+        self.fused_tick = bool(fused_tick) and cfg.is_ubis
         self._ticks = 0
         self._pq_key = jax.random.key(seed + 0x517C0DE)
 
@@ -63,6 +74,8 @@ class UBISDriver:
         # ops marked SPLITTING/MERGING last tick, executed this tick
         self._marked: list[tuple[str, int]] = []
         self._marked_set: set[int] = set()
+        # fused_tick: device-resident (kinds, pids) marked last tick
+        self._marked_dev = None
         # SPFresh strict-trigger candidate sets
         self._sp_split: set[int] = set()
         self._sp_merge: set[int] = set()
@@ -72,7 +85,7 @@ class UBISDriver:
     # foreground
     # ------------------------------------------------------------------
 
-    def insert(self, vecs, ids, *, tick_between: bool = True) -> dict:
+    def insert(self, vecs, ids, *, tick_between: bool = True) -> UpdateResult:
         """Stream (vecs, ids) through padded insert rounds.
 
         Rejected jobs (SPFresh lock model / full cache) are retried up to
@@ -131,10 +144,10 @@ class UBISDriver:
         self.stats["insert_time"] += dt
         self.stats["inserted"] += n_acc + n_cache
         self.stats["rejected"] += n_rej
-        return {"accepted": n_acc, "cached": n_cache, "rejected": n_rej,
-                "seconds": dt}
+        return UpdateResult(accepted=n_acc, cached=n_cache, rejected=n_rej,
+                            seconds=dt)
 
-    def delete(self, ids) -> dict:
+    def delete(self, ids) -> UpdateResult:
         ids = np.asarray(ids, np.int64).astype(np.int32)
         t0 = time.perf_counter()
         J = self.round_size
@@ -153,9 +166,10 @@ class UBISDriver:
         dt = time.perf_counter() - t0
         self.stats["delete_time"] += dt
         self.stats["deleted"] += n_done
-        return {"deleted": n_done, "blocked": n_blocked, "seconds": dt}
+        return UpdateResult(deleted=n_done, blocked=n_blocked, seconds=dt)
 
-    def search(self, queries, k: int, nprobe: Optional[int] = None):
+    def search(self, queries, k: int,
+               nprobe: Optional[int] = None) -> SearchResult:
         queries = jnp.asarray(np.asarray(queries, np.float32))
         t0 = time.perf_counter()
         found, scores, probe = search_mod.search(
@@ -166,13 +180,13 @@ class UBISDriver:
         self.stats["queries"] += queries.shape[0]
         if not self.cfg.is_ubis:
             self._note_spfresh_small(np.asarray(probe))
-        return found, np.asarray(scores)
+        return SearchResult(ids=found, scores=np.asarray(scores), seconds=dt)
 
     # ------------------------------------------------------------------
     # background
     # ------------------------------------------------------------------
 
-    def tick(self) -> dict:
+    def tick(self) -> TickReport:
         """One background round: execute marked ops, drain the cache,
         detect + mark new candidates, GC, and (quant plane) re-train the
         PQ codebooks on cadence."""
@@ -186,9 +200,9 @@ class UBISDriver:
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed
-        return {"executed": executed, "drained": drained,
-                "marked": marked, "gc": reclaimed,
-                "pq_retrained": retrained, "seconds": dt}
+        return TickReport(executed=executed, drained=drained,
+                          marked=marked, gc=reclaimed,
+                          pq_retrained=retrained, seconds=dt)
 
     def flush(self, max_ticks: int = 200) -> int:
         """Tick until quiescent (no marked ops, no due candidates, cache
@@ -196,7 +210,7 @@ class UBISDriver:
         for i in range(max_ticks):
             r = self.tick()
             cache_n = int(jnp.sum(self.state.cache_valid))
-            if (r["executed"] == 0 and r["marked"] == 0
+            if (r.executed == 0 and r.marked == 0
                     and (cache_n == 0 or not self.cfg.is_ubis)):
                 return i + 1
         return max_ticks
@@ -210,21 +224,29 @@ class UBISDriver:
         budgeting and conflict resolution all happen on device; the only
         transfer is the small ``BackgroundRound`` counter struct.
         """
-        marked, self._marked = self._marked, []
-        self._marked_set.clear()
-        if not marked:
-            return 0
-        # every marked op MUST ride in this batch: truncating would leave
-        # its SPLITTING/MERGING mark set with nothing queued to clear it
-        # (the detector only re-marks NORMAL postings -> wedged forever)
-        B = max(self.bg_ops, len(marked), 1)
-        kinds = np.zeros(B, np.int32)
-        pids = np.full(B, -1, np.int32)
-        for i, (kind, pid) in enumerate(marked):
-            kinds[i] = KIND_CODES[kind]
-            pids[i] = pid
+        if self.fused_tick:
+            md, self._marked_dev = self._marked_dev, None
+            if md is None:
+                return 0
+            kinds, pids = md
+        else:
+            marked, self._marked = self._marked, []
+            self._marked_set.clear()
+            if not marked:
+                return 0
+            # every marked op MUST ride in this batch: truncating would
+            # leave its SPLITTING/MERGING mark set with nothing queued to
+            # clear it (the detector only re-marks NORMAL postings ->
+            # wedged forever)
+            B = max(self.bg_ops, len(marked), 1)
+            kinds_np = np.zeros(B, np.int32)
+            pids_np = np.full(B, -1, np.int32)
+            for i, (kind, pid) in enumerate(marked):
+                kinds_np[i] = KIND_CODES[kind]
+                pids_np[i] = pid
+            kinds, pids = jnp.asarray(kinds_np), jnp.asarray(pids_np)
         self.state, rr = balance.background_round(
-            self.state, self.cfg, jnp.asarray(kinds), jnp.asarray(pids),
+            self.state, self.cfg, kinds, pids,
             reassign=self.reassign_after_split)
         rr = jax.device_get(rr)
         self.stats["bg_split"] += int(rr.n_split)
@@ -252,6 +274,15 @@ class UBISDriver:
 
     def _mark_candidates(self) -> int:
         from .types import STATUS_MERGING, STATUS_SPLITTING
+        if self.fused_tick:
+            # device-side selection + mark (one program, no detect()
+            # host round-trip); the kinds/pids batch never leaves the
+            # device — only the scalar count does, for flush quiescence
+            self.state, kinds, pids, n = balance.mark_round(
+                self.state, self.cfg, self.bg_ops)
+            n = int(n)
+            self._marked_dev = (kinds, pids) if n else None
+            return n
         if self.cfg.is_ubis:
             split_due, merge_due, compact_due = jax.device_get(
                 balance.detect(self.state, self.cfg))
@@ -351,11 +382,34 @@ class UBISDriver:
             if p >= 0:
                 self._sp_merge.add(int(p))
 
+    # ---- StreamingIndex protocol surface ------------------------------
+
+    def snapshot(self) -> IndexState:
+        """The live single-device state (already canonical)."""
+        return self.state
+
+    def memory_bytes(self) -> int:
+        from .types import state_memory_bytes
+        return state_memory_bytes(self.state)
+
+    def exact(self, queries, k: int) -> SearchResult:
+        """Exact top-k over the index's live contents (recall oracle)."""
+        found, scores = search_mod.brute_force(
+            self.state, self.cfg, jnp.asarray(queries, jnp.float32), k)
+        return SearchResult(ids=np.asarray(found),
+                            scores=np.asarray(scores))
+
+    def posting_lengths(self) -> np.ndarray:
+        from .metrics import live_posting_lengths
+        return live_posting_lengths(self.state)
+
+    def live_count(self) -> int:
+        """Vectors in visible postings + the cache (protocol surface)."""
+        return int(self.state.live_vector_count()) + int(
+            jnp.sum(self.state.cache_valid))
+
     # ------------------------------------------------------------------
 
     def throughput(self) -> dict:
-        s = self.stats
-        upd_time = s["insert_time"] + s["delete_time"] + s["bg_time"]
-        tps = (s["inserted"] + s["deleted"]) / upd_time if upd_time else 0.0
-        qps = s["queries"] / s["search_time"] if s["search_time"] else 0.0
-        return {"tps": tps, "qps": qps, **dict(s)}
+        from .metrics import throughput_from_stats
+        return throughput_from_stats(self.stats)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.types import SearchResult, TickReport, UpdateResult
+
 BIG = 1e30
 
 
@@ -170,23 +172,31 @@ class FreshDiskANN:
             nbrs=jnp.asarray(self._host_nbrs))
 
     def insert(self, vecs: np.ndarray, ids: np.ndarray,
-               _chunk: int = 128) -> dict:
+               _chunk: int = 128) -> UpdateResult:
         """Chunked internally: each sub-batch links against a graph that
         already contains its predecessors (sequential-insert fidelity)."""
         if len(vecs) > _chunk:
             t0 = time.perf_counter()
-            tot = {"accepted": 0, "cached": 0, "rejected": 0}
+            n_acc = 0
             for off in range(0, len(vecs), _chunk):
-                r = self.insert(vecs[off:off + _chunk],
-                                ids[off:off + _chunk])
-                for k in tot:
-                    tot[k] += r[k]
-            tot["seconds"] = time.perf_counter() - t0
-            return tot
+                n_acc += self.insert(vecs[off:off + _chunk],
+                                     ids[off:off + _chunk]).accepted
+            return UpdateResult(accepted=n_acc,
+                                seconds=time.perf_counter() - t0)
         t0 = time.perf_counter()
         vecs = np.asarray(vecs, np.float32)
         ids = np.asarray(ids, np.int64)
         cfg = self.cfg
+        # upsert semantics: re-inserting a live external id retires its
+        # old node first — otherwise the stale duplicate stays valid
+        # forever (deletes only track the newest node per id)
+        stale = [self._id2node[int(i)] for i in ids
+                 if int(i) in self._id2node]
+        if stale:
+            self.state = dataclasses.replace(
+                self.state,
+                valid=self.state.valid.at[jnp.asarray(stale)].set(False))
+            self._deletes_pending += len(stale)
         n0 = int(self.state.n_used)
         n_new = len(vecs)
         # batched candidate search against the current graph
@@ -241,10 +251,9 @@ class FreshDiskANN:
         dt = time.perf_counter() - t0
         self.stats["insert_time"] += dt
         self.stats["inserted"] += n_new
-        return {"accepted": n_new, "cached": 0, "rejected": 0,
-                "seconds": dt}
+        return UpdateResult(accepted=n_new, seconds=dt)
 
-    def delete(self, ids: np.ndarray) -> dict:
+    def delete(self, ids: np.ndarray) -> UpdateResult:
         t0 = time.perf_counter()
         nodes = [self._id2node[i] for i in np.asarray(ids, np.int64)
                  if int(i) in self._id2node]
@@ -260,7 +269,7 @@ class FreshDiskANN:
         dt = time.perf_counter() - t0
         self.stats["delete_time"] += dt
         self.stats["deleted"] += len(nodes)
-        return {"deleted": len(nodes), "blocked": 0, "seconds": dt}
+        return UpdateResult(deleted=len(nodes), seconds=dt)
 
     def consolidate(self):
         """FreshDiskANN's StreamingMerge analogue: splice tombstoned
@@ -291,22 +300,60 @@ class FreshDiskANN:
         self._deletes_pending = 0
         self._sync_device()
 
-    def search(self, queries: np.ndarray, k: int):
+    def search(self, queries: np.ndarray, k: int) -> SearchResult:
         t0 = time.perf_counter()
         ids, d = _search_topk(self.state, self.cfg,
                               jnp.asarray(queries, jnp.float32), k)
         dt = time.perf_counter() - t0
         self.stats["search_time"] += dt
         self.stats["queries"] += len(queries)
-        return np.asarray(ids), np.asarray(d)
+        return SearchResult(ids=np.asarray(ids), scores=np.asarray(d),
+                            seconds=dt)
 
-    def tick(self):
-        return {"executed": 0}
+    def tick(self) -> TickReport:
+        return TickReport()
 
-    def flush(self, max_ticks: int = 0):
+    def flush(self, max_ticks: int = 0) -> int:
         self.consolidate()
         return 1
+
+    # ---- StreamingIndex protocol surface ------------------------------
+
+    def snapshot(self) -> GraphState:
+        return self.state
 
     def memory_bytes(self) -> int:
         return int(sum(x.size * x.dtype.itemsize for x in
                        jax.tree_util.tree_leaves(self.state)))
+
+    def exact(self, queries: np.ndarray, k: int) -> SearchResult:
+        """Exact top-k over the live (non-tombstoned) nodes."""
+        valid = np.asarray(self.state.valid)
+        live = np.flatnonzero(valid)
+        q = np.asarray(queries, np.float32)
+        if live.size == 0:
+            shape = (len(q), k)
+            return SearchResult(ids=np.full(shape, -1, np.int32),
+                                scores=np.full(shape, BIG, np.float32))
+        vecs = np.asarray(self.state.vectors)[live]
+        ids = np.asarray(self.state.ids)[live]
+        d2 = ((q[:, None, :] - vecs[None]) ** 2).sum(-1)
+        order = np.argsort(d2, axis=1)[:, :k]
+        found = ids[order]
+        scores = np.take_along_axis(d2, order, axis=1)
+        if found.shape[1] < k:   # fewer live nodes than k
+            padn = k - found.shape[1]
+            found = np.pad(found, ((0, 0), (0, padn)), constant_values=-1)
+            scores = np.pad(scores, ((0, 0), (0, padn)),
+                            constant_values=BIG)
+        return SearchResult(ids=found, scores=scores)
+
+    def posting_lengths(self) -> np.ndarray:
+        return np.empty((0,), np.int32)
+
+    def live_count(self) -> int:
+        return int(np.asarray(self.state.valid).sum())
+
+    def throughput(self) -> dict:
+        from .metrics import throughput_from_stats
+        return throughput_from_stats(self.stats)

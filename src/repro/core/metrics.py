@@ -23,6 +23,27 @@ def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
     return hits / total if total else 1.0
 
 
+def live_posting_lengths(state) -> np.ndarray:
+    """Live lengths of visible postings (posting-CDF statistics) —
+    shared by the single-device and sharded drivers so their benchmark
+    metrics can never diverge."""
+    from .version_manager import unpack_status
+    status = np.asarray(unpack_status(state.rec_meta))
+    alive = np.asarray(state.allocated) & (status != 3)
+    lens = np.asarray(state.lengths)[alive]
+    return lens[lens > 0]
+
+
+def throughput_from_stats(stats) -> dict:
+    """TPS/QPS derived from a driver's counter mapping (shared engine
+    formula: updates over insert+delete+background wall time)."""
+    upd = stats["insert_time"] + stats["delete_time"] + stats["bg_time"]
+    tps = (stats["inserted"] + stats["deleted"]) / upd if upd else 0.0
+    qps = (stats["queries"] / stats["search_time"]
+           if stats["search_time"] else 0.0)
+    return {"tps": tps, "qps": qps, **dict(stats)}
+
+
 def posting_length_cdf(lengths: np.ndarray, alive: np.ndarray,
                        edges=None) -> tuple:
     """CDF of live posting lengths (paper Fig. 5)."""

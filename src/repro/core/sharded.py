@@ -29,12 +29,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import axis_size as _axis_size, shard_map
-from ..kernels import ref
+from ..kernels import ops, ref
 from ..kernels.posting_scan import BIG
 from . import balance, version_manager as vm
-from .types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT, NO_SUCC,
-                    STATUS_MERGING, STATUS_SPLITTING, IndexState, UBISConfig)
-from .update import dataclasses_replace, rebuild_free_stack
+from .types import NO_SUCC, IndexState, UBISConfig
+from .update import (_flat_set, dataclasses_replace, oob,
+                     rebuild_free_stack)
 
 
 def index_specs(cfg: UBISConfig):
@@ -76,6 +76,42 @@ def _rebase_succ(rec_succ, offset, limit):
     t1, t2 = shift(s1), shift(s2)
     return vm.pack_succ(jnp.where(t1 < 0, NO_SUCC, t1),
                         jnp.where(t2 < 0, NO_SUCC, t2))
+
+
+def _pq_phase2(state: IndexState, cfg: UBISConfig, queries, probe, mine,
+               vis, k: int):
+    """Sharded search phase 2 served from PQ codes (``cfg.use_pq``).
+
+    Per shard: ADC-scan the owned probed tiles' codes (``C * m`` bytes
+    per posting instead of ``C * d * 4``), then gather the local top
+    ``cfg.rerank_k`` candidates' float vectors for an exact rerank —
+    the shard-local form of ``search._pq_stage``.  The (small) versioned
+    codebooks are replicated, so every shard builds the same per-query
+    lookup tables.  Returns this shard's (scores, ids) candidate lists,
+    ready for the existing merge all-gather.
+    """
+    from ..quant import pq
+    Q = queries.shape[0]
+    M_local, C, d = state.vectors.shape
+    R = min(cfg.rerank_k, probe.shape[1] * C)
+    luts = pq.lookup_tables(state.pq_codebooks, queries)  # (Q, V, m, ksub)
+    adc = ops.pq_scan_gather(luts, state.codes, state.pq_posting_slot,
+                             state.slot_valid, vis, probe,
+                             backend=cfg.use_pallas)       # (Q, P, C)
+    adc = jnp.where(mine[..., None], adc, BIG)
+    neg, ridx = jax.lax.top_k(-adc.reshape(Q, -1), R)
+    adc_top = -neg
+    flat_all = (probe[:, :, None] * C
+                + jnp.arange(C, dtype=jnp.int32)[None, None, :])
+    cand = jnp.take_along_axis(flat_all.reshape(Q, -1), ridx, axis=1)
+    cand_vecs = state.vectors.reshape(M_local * C, d)[cand].astype(
+        jnp.float32)
+    exact = (jnp.sum(cand_vecs * cand_vecs, -1)
+             - 2.0 * jnp.einsum("qd,qrd->qr", queries, cand_vecs))
+    exact = jnp.where(adc_top < BIG / 2, exact, BIG)
+    cand_ids = jnp.where(adc_top < BIG / 2,
+                         state.ids.reshape(-1)[cand], -1)
+    return _local_topk(exact, cand_ids, min(k, R))
 
 
 def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
@@ -135,13 +171,20 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
         else:
             pid_cap, mine_cap = probe_pid, mine
         safe_pid = jnp.where(mine_cap, pid_cap, 0)
-        scores2 = ref.posting_scan_gather(
-            queries, state.vectors, state.slot_valid, vis, safe_pid)
-        scores2 = jnp.where(mine_cap[..., None], scores2, BIG)
-        ids2 = state.ids[safe_pid]
-        k_local = min(k, scores2.shape[1] * scores2.shape[2])
-        s2, i2 = _local_topk(scores2.reshape(Q, -1),
-                             ids2.reshape(Q, -1), k_local)
+        if cfg.use_pq:
+            # quant plane: serve phase 2 from the owned probes' CODES
+            # (ADC scan + per-shard exact rerank) instead of the float
+            # tiles — the sharded form of ``search._pq_stage``
+            s2, i2 = _pq_phase2(state, cfg, queries, safe_pid, mine_cap,
+                                vis, k)
+        else:
+            scores2 = ref.posting_scan_gather(
+                queries, state.vectors, state.slot_valid, vis, safe_pid)
+            scores2 = jnp.where(mine_cap[..., None], scores2, BIG)
+            ids2 = state.ids[safe_pid]
+            k_local = min(k, scores2.shape[1] * scores2.shape[2])
+            s2, i2 = _local_topk(scores2.reshape(Q, -1),
+                                 ids2.reshape(Q, -1), k_local)
         # cache scan: each shard takes a 1/S slice of the replicated
         # cache (or shard 0 scans everything when disabled)
         if shard_cache_scan:
@@ -184,15 +227,17 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
 
 
 def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
-    """Builds a jitted sharded insert round.
+    """Builds a jitted sharded insert round:
+    (state, vecs, ids, valid) -> (state, accepted (J,) bool).
 
     Each shard locates jobs against its local centroids; a global argmin
     routes each job to its owner shard, which runs the conflict-free
     batched append on its local state.  Blocked jobs (non-NORMAL status)
-    are *rejected* here — the vector cache is host-mediated in the
-    distributed driver (replicated cache writes would race).
+    are *rejected* here — the vector cache is host-mediated in
+    ``ShardedUBISDriver`` (replicated cache writes would race), which is
+    why the per-job accepted mask (not a count) comes back: the driver
+    owns the retry/park decision for every rejected lane.
     """
-    axes = mesh.axis_names
     jspec = P()     # jobs replicated: every shard sees all jobs
     st_specs = index_specs(cfg)
 
@@ -225,21 +270,71 @@ def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
         safe_ids = jnp.where(valid & any_won, ids, cfg.max_ids)
         id_loc = state.id_loc.at[safe_ids].set(
             flat_global.astype(jnp.int32), mode="drop")
-        accepted = jax.lax.psum(won.astype(jnp.int32), "model").sum()
-        rejected = jnp.sum(valid.astype(jnp.int32)) - accepted
         state = _dc.replace(
             state, id_loc=id_loc,
             global_version=state.global_version + jnp.uint32(1))
-        return state, accepted, rejected
+        return state, valid & any_won
 
     fn = shard_map(local, mesh, (st_specs, jspec, jspec, jspec),
-                   (st_specs, P(), P()))
+                   (st_specs, P()))
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def make_sharded_delete(cfg: UBISConfig, mesh: Mesh):
+    """Builds a jitted sharded delete round:
+    (state, del_ids, valid) -> (state, done (J,) bool).
+
+    Locations come from the replicated ``id_loc`` map, so routing is
+    free: the owner shard (flat location // local pool span) tombstones
+    its tiles and decrements its lengths; the cache and ``id_loc``
+    updates are computed identically on every shard from replicated
+    inputs, so the replicas stay in sync with zero collectives.
+    UBIS semantics only — the SPFresh lock model lives in the
+    single-device ``delete_round``.
+    """
+    jspec = P()
+    st_specs = index_specs(cfg)
+    C = cfg.capacity
+
+    def local(state: IndexState, del_ids, valid):
+        my = jax.lax.axis_index("model")
+        M_local = state.lengths.shape[0]
+        span = M_local * C
+        base = my.astype(jnp.int32) * span
+        safe = jnp.clip(del_ids, 0, cfg.max_ids - 1)
+        loc = state.id_loc[safe]
+        first = vm.first_occurrence_mask(safe) & valid
+        in_post = first & (loc >= 0)
+        in_cache = first & (loc <= -2)
+        # owner shard writes its tiles; other shards' lanes are masked
+        lloc = loc - base
+        mine = in_post & (lloc >= 0) & (lloc < span)
+        flat = oob(lloc, mine, span)
+        slot_valid = _flat_set(state.slot_valid, flat,
+                               jnp.zeros(loc.shape, jnp.bool_))
+        pid = oob(lloc // C, mine, M_local)
+        lengths = state.lengths.at[pid].add(-1, mode="drop")
+        # cache + id_loc are replicated: identical update on every shard
+        cslot = oob(-2 - loc, in_cache, cfg.cache_capacity)
+        cache_valid = state.cache_valid.at[cslot].set(False, mode="drop")
+        done = in_post | in_cache
+        id_loc = state.id_loc.at[oob(safe, done, cfg.max_ids)].set(
+            -1, mode="drop")
+        state = dataclasses_replace(
+            state, slot_valid=slot_valid, lengths=lengths,
+            cache_valid=cache_valid, id_loc=id_loc,
+            global_version=state.global_version + jnp.uint32(1))
+        return state, done
+
+    fn = shard_map(local, mesh, (st_specs, jspec, jspec), (st_specs, P()))
     return jax.jit(fn, donate_argnums=(0,))
 
 
 def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
-                            bg_ops: int = 8, reassign: bool = True):
-    """Builds a jitted sharded background tick: state -> (state, executed).
+                            bg_ops: int = 8, reassign: bool = True,
+                            gc_k: int = 64):
+    """Builds a jitted sharded background tick:
+    (state, gc_min_version) -> (state, executed, reclaimed).
 
     The SAME ``balance.background_round`` program runs on every model
     shard over the postings it owns — structural work is shard-local, so
@@ -262,11 +357,18 @@ def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
     The vector cache is replicated and therefore unwritable per shard:
     the round runs with ``use_cache=False`` (small-side spills fold back
     into child ``a`` instead — nothing is dropped).
+
+    Epoch GC rides in the same program: after the structural batch, each
+    shard reclaims up to ``gc_k`` of its own retired postings older than
+    ``gc_min_version`` (pass 0 to skip).  Structural ownership makes
+    this collective-free too; the per-shard successor sweep covers every
+    reference the sharded rounds themselves can create (they only link
+    same-shard successors).
     """
     st_specs = index_specs(cfg)
     C = cfg.capacity
 
-    def local(state: IndexState):
+    def local(state: IndexState, gc_min_version):
         my = jax.lax.axis_index("model")
         M_local = state.allocated.shape[0]
         base_pid = my.astype(jnp.int32) * M_local
@@ -286,16 +388,13 @@ def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
         kinds, pids = balance.select_candidates(state, cfg, bg_ops)
         # mark + execute in one program: atomic within this device call,
         # so the two-phase window collapses without a race window
-        split_like = (kinds == KIND_SPLIT) | (kinds == KIND_COMPACT)
-        rec_meta = vm.transition(state.rec_meta,
-                                 jnp.where(split_like, pids, -1),
-                                 STATUS_SPLITTING)
-        rec_meta = vm.transition(rec_meta,
-                                 jnp.where(kinds == KIND_MERGE, pids, -1),
-                                 STATUS_MERGING)
-        state = dataclasses_replace(state, rec_meta=rec_meta)
+        state = dataclasses_replace(
+            state, rec_meta=balance.mark_selected(state.rec_meta, kinds,
+                                                  pids))
         state, rr = balance.background_round(
             state, cfg, kinds, pids, reassign=reassign, use_cache=False)
+        # epoch GC on the shard's own retired postings, same device call
+        state, n_gc = balance.gc_round(state, cfg, gc_min_version, gc_k)
 
         # merge the replicated id map: rebase local tile flats to global
         base = my.astype(jnp.int32) * (M_local * C)
@@ -308,8 +407,9 @@ def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
         # canonical global stack, so return it fail-safe EMPTY — any
         # consumer that pops from it gets nothing instead of an aliased
         # live posting.  Each bg call re-derives its local view from
-        # ``allocated``; a gathered single-device state must run
-        # update.rebuild_free_stack() before driver/alloc/GC use.
+        # ``allocated``; a gathered single-device state must pass
+        # through update.ensure_free_stack (the ShardedUBISDriver
+        # snapshot path enforces this) before driver/alloc/GC use.
         succ_changed = state.rec_succ != succ_local0
         rec_succ = jnp.where(
             succ_changed,
@@ -319,7 +419,8 @@ def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
             state, id_loc=id_loc, free_top=jnp.int32(0), rec_succ=rec_succ,
             global_version=jax.lax.pmax(state.global_version, "model"))
         executed = jax.lax.psum(rr.executed, "model")
-        return state, executed
+        reclaimed = jax.lax.psum(jnp.asarray(n_gc, jnp.int32), "model")
+        return state, executed, reclaimed
 
-    fn = shard_map(local, mesh, (st_specs,), (st_specs, P()))
+    fn = shard_map(local, mesh, (st_specs, P()), (st_specs, P(), P()))
     return jax.jit(fn)

@@ -1,34 +1,72 @@
 """SPANN static baseline (paper III-B1): build once, search only.
 
 Table I: SPANN supports neither incremental nor streaming update — this
-wrapper simply refuses updates, which is exactly its role in the
-comparison (a quality ceiling for a freshly-built index).
+wrapper *refuses* updates, which is exactly its role in the comparison
+(a quality ceiling for a freshly-built index).  Refusals are reported
+through the ``StreamingIndex`` result types (every insert job counts as
+``rejected``, every delete as ``blocked``) instead of raising, so the
+engine rides the same comparison loop as the updatable engines and its
+staleness shows up honestly as recall decay against the stream.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from ..api.types import SearchResult, TickReport, UpdateResult
 from .driver import UBISDriver
 from .types import UBISConfig
 
 
 class SPANNStatic:
-    """Build-once cluster index (k-means seed + one bulk load)."""
+    """Build-once cluster index (k-means seed + one bulk load); a
+    ``StreamingIndex`` whose update surface always refuses."""
 
     def __init__(self, cfg: UBISConfig, vectors: np.ndarray,
-                 ids: np.ndarray):
+                 ids: np.ndarray, *, round_size: int = 1024,
+                 seed: int = 0):
         # bulk-load through the same machinery, then freeze
-        self._drv = UBISDriver(cfg, vectors)
+        self._drv = UBISDriver(cfg, vectors, round_size=round_size,
+                               seed=seed)
         self._drv.insert(vectors, ids)
         self._drv.flush()
         self.state = self._drv.state
         self.cfg = cfg
 
-    def search(self, queries, k: int):
-        return self._drv.search(queries, k)
+    def search(self, queries, k: int, nprobe=None) -> SearchResult:
+        return self._drv.search(queries, k, nprobe)
 
-    def insert(self, *a, **k):
-        raise NotImplementedError("SPANN is static (paper Table I); "
-                                  "use UBISDriver for updates")
+    def insert(self, vecs, ids, **_) -> UpdateResult:
+        return UpdateResult(rejected=len(np.asarray(ids)))
 
-    delete = insert
+    def delete(self, ids) -> UpdateResult:
+        return UpdateResult(blocked=len(np.asarray(ids)))
+
+    def tick(self) -> TickReport:
+        return TickReport()
+
+    def flush(self, max_ticks: int = 0) -> int:
+        return 0
+
+    # ---- StreamingIndex protocol surface ------------------------------
+
+    @property
+    def stats(self):
+        return self._drv.stats
+
+    def snapshot(self):
+        return self.state
+
+    def memory_bytes(self) -> int:
+        return self._drv.memory_bytes()
+
+    def exact(self, queries, k: int) -> SearchResult:
+        return self._drv.exact(queries, k)
+
+    def posting_lengths(self) -> np.ndarray:
+        return self._drv.posting_lengths()
+
+    def live_count(self) -> int:
+        return self._drv.live_count()
+
+    def throughput(self) -> dict:
+        return self._drv.throughput()

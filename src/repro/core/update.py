@@ -152,6 +152,31 @@ def rebuild_free_stack(state: IndexState) -> IndexState:
                                free_top=n_free)
 
 
+def ensure_free_stack(state: IndexState, check: bool = True) -> IndexState:
+    """Snapshot-path guard: rebuild the free stack and *assert* it is
+    canonical before any single-device reuse of a gathered state.
+
+    The sharded background/GC round returns ``free_list``/``free_top``
+    fail-safe EMPTY (per-shard local views cannot form one global
+    stack).  This is the encoded form of that contract: every gather ->
+    single-device hand-off (``ShardedUBISDriver.snapshot``) goes through
+    here, so a state whose stack would alias live postings can never
+    escape to the driver/alloc/GC free-stack consumers.
+    """
+    state = rebuild_free_stack(state)
+    if check:
+        import numpy as np
+        allocated = np.asarray(state.allocated)
+        top = int(state.free_top)
+        free = np.asarray(state.free_list)[:top]
+        assert top + int(allocated.sum()) == allocated.shape[0], \
+            "free stack disagrees with the allocated bitmap"
+        assert len(np.unique(free)) == top, "free stack holds duplicates"
+        assert not allocated[free].any(), \
+            "free stack aliases a live posting"
+    return state
+
+
 # ---------------------------------------------------------------------------
 # the conflict-free batched append (shared by every write path)
 # ---------------------------------------------------------------------------

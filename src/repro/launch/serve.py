@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import UBISConfig, UBISDriver, metrics as ubis_metrics
-from repro.core.search import brute_force
+from repro.api import make_index
+from repro.core import UBISConfig, metrics as ubis_metrics
 from repro.models import get_model
 from repro.models.layers import values
 
@@ -69,10 +69,13 @@ class EmbeddingServer:
 
 
 class RetrievalServer:
-    """Batched streaming retrieval endpoint over a UBIS index."""
+    """Batched streaming retrieval endpoint over any ``StreamingIndex``
+    engine (``repro.api.make_index``; default the single-device UBIS
+    driver, ``engine="ubis-sharded"`` for the pod-sharded one)."""
 
     def __init__(self, cfg: ServeConfig, index_cfg: Optional[UBISConfig]
-                 = None, seed_vectors: Optional[np.ndarray] = None):
+                 = None, seed_vectors: Optional[np.ndarray] = None,
+                 engine: str = "ubis", **engine_kw):
         self.cfg = cfg
         self.embedder = EmbeddingServer(cfg)
         if index_cfg is None:
@@ -82,7 +85,8 @@ class RetrievalServer:
         if seed_vectors is None:
             seed_vectors = np.random.default_rng(cfg.seed).normal(
                 size=(1024, index_cfg.dim)).astype(np.float32)
-        self.index = UBISDriver(index_cfg, seed_vectors)
+        self.index = make_index(engine, index_cfg, seed_vectors,
+                                **engine_kw)
         self._next_id = 0
         self.stats = {"ingested": 0, "queries": 0}
 
@@ -117,14 +121,15 @@ class RetrievalServer:
 
     def recall_check(self, vecs: np.ndarray, k: int = 10) -> float:
         found, _ = self.index.search(vecs, k)
-        true, _ = brute_force(self.index.state, self.index.cfg,
-                              jnp.asarray(vecs), k)
+        true, _ = self.index.exact(vecs, k)
         return ubis_metrics.recall_at_k(found, np.asarray(true))
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--engine", default="ubis",
+                    help="any repro.api.ENGINES name")
     ap.add_argument("--docs", type=int, default=2000)
     ap.add_argument("--queries", type=int, default=128)
     ap.add_argument("--seq", type=int, default=32)
@@ -132,7 +137,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = ServeConfig(arch=args.arch)
-    server = RetrievalServer(cfg)
+    server = RetrievalServer(cfg, engine=args.engine)
     rng = np.random.default_rng(0)
     vocab = server.embedder.model.cfg.vocab
     t0 = time.time()

@@ -1,0 +1,253 @@
+"""API-parity tests for the ``StreamingIndex`` front door.
+
+Three layers:
+  * contract churn — ONE mixed insert/delete/search/tick/flush workload
+    run through ``make_index`` for EVERY engine, asserting the shared
+    result shapes/types (no engine-specific branches in the loop);
+  * equivalence — ``ubis-sharded`` on a 1-shard mesh must end a mixed
+    workload with the *identical* live id->vector multiset as the
+    single-device driver, and (with exhaustive probing) identical
+    search results after ``flush()``;
+  * coverage — ``ShardedUBISDriver.tick()`` exercises the host cache
+    drain, the in-round GC, and the PQ codebook re-train; the
+    single-device ``fused_tick`` path converges like the host path.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (ENGINES, SearchResult, StreamingIndex, TickReport,
+                       UpdateResult, make_index)
+from repro.core import UBISConfig, UBISDriver, metrics
+from conftest import make_clustered
+
+DIM = 16
+
+
+def _cfg(**kw):
+    base = dict(dim=DIM, max_postings=256, capacity=96, l_min=10,
+                l_max=80, max_ids=1 << 14, use_pallas="off")
+    base.update(kw)
+    return UBISConfig(**base)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_contract_churn(engine):
+    """Every engine: same churn loop, same typed results, same shapes."""
+    data = make_clustered(1200, d=DIM, k=12, seed=7)
+    q = make_clustered(24, d=DIM, k=12, seed=8)
+    idx = make_index(engine, _cfg(), data[:400],
+                     seed_ids=np.arange(400), round_size=256,
+                     bg_ops_per_round=4, max_nodes=4096, beam=24)
+    assert isinstance(idx, StreamingIndex)
+
+    r = idx.insert(data[400:900], np.arange(400, 900))
+    assert isinstance(r, UpdateResult)
+    assert r.accepted + r.cached + r.rejected == 500
+    assert r["accepted"] == r.accepted      # legacy dict access
+
+    t = idx.tick()
+    assert isinstance(t, TickReport)
+    assert t.executed >= 0 and t["executed"] == t.executed
+
+    s = idx.search(q, 5)
+    assert isinstance(s, SearchResult)
+    assert s.ids.shape == (24, 5) and s.scores.shape == (24, 5)
+    assert np.issubdtype(s.ids.dtype, np.integer)
+    found, scores = s                        # legacy tuple unpacking
+    assert found is s.ids and scores is s.scores
+
+    d = idx.delete(np.arange(410, 430))
+    assert isinstance(d, UpdateResult)
+    assert d.deleted + d.blocked <= 20
+
+    n_ticks = idx.flush(max_ticks=30)
+    assert isinstance(n_ticks, int)
+    assert idx.snapshot() is not None
+    assert idx.memory_bytes() > 0
+    assert isinstance(idx.posting_lengths(), np.ndarray)
+    ex = idx.exact(q, 5)
+    assert ex.ids.shape == (24, 5)
+    assert isinstance(idx.live_count(), int)
+    assert float(idx.stats["queries"]) >= 24
+
+
+def test_spann_refuses_updates_as_counts():
+    """The static baseline reports refusals through the result types
+    (rejected/blocked), never raises — so it rides the comparison loop."""
+    data = make_clustered(600, d=DIM, seed=9)
+    idx = make_index("spann", _cfg(), data, seed_ids=np.arange(600))
+    r = idx.insert(data[:50], np.arange(1000, 1050))
+    assert (r.accepted, r.cached, r.rejected) == (0, 0, 50)
+    d = idx.delete(np.arange(10))
+    assert (d.deleted, d.blocked) == (0, 10)
+    # the seed corpus itself is searchable
+    found, _ = idx.search(data[:8], 1)
+    assert (found[:, 0] == np.arange(8)).all()
+
+
+def _churn(drv, data, seed=0):
+    """One deterministic mixed workload through the protocol surface."""
+    rng = np.random.default_rng(seed)
+    n = len(data)
+    third = n // 3
+    drv.insert(data[:third], np.arange(third))
+    drv.tick()
+    drv.insert(data[third:2 * third], np.arange(third, 2 * third))
+    dels = rng.choice(2 * third, size=third // 2, replace=False)
+    drv.delete(dels)
+    drv.tick()
+    drv.insert(data[2 * third:], np.arange(2 * third, n))
+    drv.flush(max_ticks=60)
+    return set(range(n)) - set(int(x) for x in dels)
+
+
+def _live_map(state, cfg):
+    """id -> vector bytes for every live slot (postings + cache)."""
+    from repro.core import version_manager as vm
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    vis = np.asarray(state.allocated) & (status != 3)
+    ids = np.asarray(state.ids)
+    sv = np.asarray(state.slot_valid)
+    vecs = np.asarray(state.vectors)
+    out = {}
+    for p in np.flatnonzero(vis):
+        for c in np.flatnonzero(sv[p]):
+            i = int(ids[p, c])
+            assert i not in out, f"duplicate id {i}"
+            out[i] = vecs[p, c].tobytes()
+    cv = np.asarray(state.cache_valid)
+    cids = np.asarray(state.cache_ids)
+    cvecs = np.asarray(state.cache_vecs)
+    for s in np.flatnonzero(cv):
+        i = int(cids[s])
+        assert i not in out, f"duplicate cached id {i}"
+        out[i] = cvecs[s].tobytes()
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_sharded_one_shard_matches_single_device(seed):
+    """Property: ubis-sharded on a 1-shard mesh ends the same mixed
+    workload with the single-device driver's live id->vector multiset,
+    and — probing every posting — identical search results."""
+    import jax
+    # nprobe = max_postings: search degenerates to exact over the live
+    # contents, so results depend on WHAT is indexed, not how the two
+    # drivers' different background schedules shaped the postings
+    cfg = _cfg(max_postings=128, nprobe=128, max_ids=1 << 13)
+    data = make_clustered(2200, d=DIM, k=10, seed=30 + seed)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    single = UBISDriver(cfg, data[:500], round_size=256,
+                        bg_ops_per_round=8, seed=seed)
+    sharded = make_index("ubis-sharded", cfg, data[:500], mesh=mesh,
+                         round_size=256, bg_ops_per_round=8, seed=seed)
+    live_expect = _churn(single, data, seed)
+    live_expect2 = _churn(sharded, data, seed)
+    assert live_expect == live_expect2
+
+    m_single = _live_map(single.state, cfg)
+    snap = sharded.snapshot()        # asserts the canonical free stack
+    m_sharded = _live_map(snap, cfg)
+    assert set(m_single) == live_expect, "single driver lost/kept ids"
+    assert m_single == m_sharded, (
+        f"multisets diverge: {len(m_single)} vs {len(m_sharded)} live, "
+        f"{sum(m_single[i] != m_sharded[i] for i in m_single if i in m_sharded)} vector mismatches")
+
+    q = make_clustered(48, d=DIM, k=10, seed=99)
+    fs, ss = single.search(q, 10)
+    fd, sd = sharded.search(q, 10)
+    np.testing.assert_allclose(ss, sd, rtol=1e-4, atol=1e-4)
+    for row_s, row_d in zip(fs, fd):
+        assert set(row_s.tolist()) == set(row_d.tolist())
+
+
+def test_sharded_tick_exercises_drain_gc_pq():
+    """Acceptance: ShardedUBISDriver.tick() = host cache drain + in-round
+    GC + PQ retrain, all observable."""
+    import jax
+    cfg = _cfg(max_postings=128, max_ids=1 << 13, use_pq=True,
+               pq_m=4, pq_ksub=16, pq_sample=512, rerank_k=256)
+    # a handful of clusters over ~3 seeded postings: tiles overflow
+    # fast, forcing rejects -> host cache; the follow-up splits retire
+    # parents, feeding the GC (clusters stay separated so the coarse
+    # m=4 codes still rank candidates sanely)
+    data = make_clustered(1400, d=DIM, k=4, seed=5, scale=10.0)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    drv = make_index("ubis-sharded", cfg, data[:200], mesh=mesh,
+                     round_size=256, bg_ops_per_round=8,
+                     insert_retries=0, gc_lag=2, pq_retrain_every=1)
+    drv.insert(data, np.arange(1400), tick_between=False)
+    assert drv.stats["host_cached"] > 0, \
+        "workload never parked a job in the host-mediated cache"
+    drained = gc = retrained = 0
+    for _ in range(40):
+        t = drv.tick()
+        drained += t.drained
+        gc += t.gc
+        retrained += t.pq_retrained
+        if (t.executed == 0
+                and not int(np.asarray(drv.state.cache_valid).sum())):
+            break
+    assert drained > 0, "cache drain never re-inserted a parked job"
+    assert gc > 0, "in-round GC never reclaimed a retired posting"
+    assert retrained > 0, "PQ retrain never ran on cadence"
+    # nothing lost: every streamed id is live exactly once
+    live = _live_map(drv.snapshot(), cfg)
+    assert set(live) == set(range(1400)), len(live)
+    # search still answers through the PQ phase-2 path
+    found, _ = drv.search(data[:8], 5)
+    rec = metrics.recall_at_k(
+        np.asarray(found), np.asarray(drv.exact(data[:8], 5).ids))
+    assert rec > 0.9, rec
+
+
+def test_fused_tick_matches_host_scheduling():
+    """The device-side mark path (fused_tick) converges the same churn
+    to the same live contents and a balanced index — without detect()
+    host reads."""
+    data = make_clustered(2000, d=DIM, k=12, seed=11)
+    live = {}
+    for fused in (False, True):
+        cfg = _cfg()
+        drv = UBISDriver(cfg, data[:400], round_size=256,
+                         bg_ops_per_round=8, fused_tick=fused)
+        expected = _churn(drv, data, seed=1)
+        lens = drv.posting_lengths()
+        assert (lens <= cfg.l_max).all(), lens.max()
+        assert drv.stats["bg_ops"] > 0
+        m = _live_map(drv.state, cfg)
+        assert set(m) == expected
+        live[fused] = m
+    assert live[False] == live[True]
+
+
+def test_freshdiskann_reinsert_is_upsert():
+    """Re-inserting a live external id retires the old node: deletes
+    and searches never resurrect a stale duplicate (the seed-corpus +
+    batch-0 overlap every streaming benchmark produces)."""
+    data = make_clustered(300, d=DIM, seed=17)
+    idx = make_index("freshdiskann", _cfg(), data[:100],
+                     seed_ids=np.arange(100), max_nodes=2048)
+    idx.insert(data[:100], np.arange(100))       # same ids again
+    assert idx.live_count() == 100, idx.live_count()
+    idx.delete(np.arange(40))
+    idx.flush()
+    found, _ = idx.search(data[:40], 3)
+    hits = set(int(f) for f in np.asarray(found).ravel() if f >= 0)
+    assert not (hits & set(range(40))), "deleted ids resurfaced"
+    assert idx.live_count() == 60
+
+
+def test_quickstart_example_runs_every_engine():
+    """The quickstart path (make_index + typed results + snapshot +
+    live_count) stays runnable for every updatable engine."""
+    data = make_clustered(800, d=DIM, seed=13)
+    for engine in ("ubis", "ubis-sharded", "freshdiskann"):
+        idx = make_index(engine, _cfg(), data[:200],
+                         seed_ids=np.arange(200), round_size=256,
+                         max_nodes=4096)
+        idx.insert(data, np.arange(800))
+        idx.flush(max_ticks=30)
+        assert idx.snapshot() is not None
+        assert idx.live_count() == 800, (engine, idx.live_count())

@@ -54,16 +54,68 @@ def test_sharded_ubis_matches_single_device():
         ins = make_sharded_insert(cfg, mesh)
         nv = (cents[r.integers(0, 12, 128)]
               + r.normal(size=(128, 16))).astype(np.float32)
-        st2, acc, rej = ins(st, jnp.asarray(nv),
-                            jnp.arange(2000, 2128, dtype=jnp.int32),
-                            jnp.ones(128, bool))
-        assert int(acc) + int(rej) == 128
-        assert int(acc) > 64
+        st2, accm = ins(st, jnp.asarray(nv),
+                        jnp.arange(2000, 2128, dtype=jnp.int32),
+                        jnp.ones(128, bool))
+        accm = np.asarray(accm)
+        assert accm.shape == (128,)
+        assert int(accm.sum()) > 64
         found2, _ = search(st2, jnp.asarray(nv[:32]))
         hits = sum(2000 + i in set(f.tolist())
                    for i, f in enumerate(np.asarray(found2)))
         assert hits >= 30, hits
         print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_search_pq_phase2():
+    """With cfg.use_pq, the sharded search's phase 2 is served from the
+    PQ codes (per-shard ADC scan + exact rerank); recall vs the float
+    brute force stays high and the float sharded path agrees."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp, dataclasses
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core import UBISConfig, UBISDriver, brute_force, metrics
+        from repro.core.sharded import index_specs, make_sharded_search
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = UBISConfig(dim=16, max_postings=256, capacity=96,
+                         max_ids=1 << 14, use_pallas="off", use_pq=True,
+                         pq_m=4, pq_ksub=32, rerank_k=128)
+        r = np.random.default_rng(2)
+        cents = r.normal(size=(10, 16)) * 6
+        data = (cents[r.integers(0, 10, 2500)]
+                + r.normal(size=(2500, 16))).astype(np.float32)
+        drv = UBISDriver(cfg, data[:500], round_size=256,
+                         bg_ops_per_round=8)
+        drv.insert(data, np.arange(2500)); drv.flush()
+        sh = jax.tree_util.tree_map(
+            lambda sp: NamedSharding(mesh, sp), index_specs(cfg),
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        st = jax.device_put(drv.state, sh)
+        q = (cents[r.integers(0, 10, 64)]
+             + r.normal(size=(64, 16))).astype(np.float32)
+        found_pq, _ = make_sharded_search(cfg, mesh, k=10)(
+            st, jnp.asarray(q))
+        true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
+        rec = metrics.recall_at_k(np.asarray(found_pq), np.asarray(true))
+        # apples to apples: the sharded ADC path must not trail the
+        # single-device ADC path (it reranks rerank_k PER SHARD, so it
+        # usually leads slightly); coarse m=4 codes cap both ~0.88
+        found_1, _ = drv.search(q, 10)
+        rec_1 = metrics.recall_at_k(np.asarray(found_1),
+                                    np.asarray(true))
+        assert rec >= rec_1 - 0.02, (rec, rec_1)
+        assert rec > 0.8, rec
+        # the float sharded path on the same state stays exact-grade
+        cfg_f = dataclasses.replace(cfg, use_pq=False)
+        found_f, _ = make_sharded_search(cfg_f, mesh, k=10)(
+            st, jnp.asarray(q))
+        rec_f = metrics.recall_at_k(np.asarray(found_f),
+                                    np.asarray(true))
+        assert rec_f > 0.95, rec_f
+        print("OK", rec, rec_1, rec_f)
     """)
     assert "OK" in out
 
@@ -100,7 +152,7 @@ def test_sharded_background_round_splits_and_stays_consistent():
         bg = make_sharded_background(cfg, mesh, bg_ops=8)
         total = 0
         for _ in range(12):
-            st, ex = bg(st)
+            st, ex, _gc = bg(st, jnp.uint32(0))
             total += int(ex)
             if int(ex) == 0:
                 break
@@ -108,7 +160,7 @@ def test_sharded_background_round_splits_and_stays_consistent():
         # a quiescent tick must round-trip rec_succ EXACTLY — the
         # entry-localize/exit-rebase may only rewrite words the round
         # touched (cross-shard successor pointers survive untouched)
-        st2, ex2 = bg(st)
+        st2, ex2, _gc2 = bg(st, jnp.uint32(0))
         assert int(ex2) == 0
         assert (np.asarray(jax.device_get(st).rec_succ)
                 == np.asarray(jax.device_get(st2).rec_succ)).all()
@@ -158,6 +210,62 @@ def test_sharded_background_round_splits_and_stays_consistent():
         assert not alloc[free].any()
         assert top + alloc.sum() == cfg.max_postings
         print("OK", total, "ops")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_driver_end_to_end_multishard():
+    """ShardedUBISDriver on a real 4-shard mesh: the full protocol
+    surface (insert with retries, sharded deletes, search, ticks with
+    in-round GC, flush, canonical snapshot) with an id->vector audit."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.api import ShardedUBISDriver
+        from repro.core import UBISConfig
+        from repro.core import version_manager as vm
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = UBISConfig(dim=16, max_postings=256, capacity=96,
+                         max_ids=1 << 14, use_pallas="off")
+        r = np.random.default_rng(3)
+        cents = r.normal(size=(12, 16)) * 5
+        data = (cents[r.integers(0, 12, 4000)]
+                + r.normal(size=(4000, 16))).astype(np.float32)
+        drv = ShardedUBISDriver(cfg, data[:500], mesh=mesh,
+                                round_size=256, bg_ops_per_round=8,
+                                gc_lag=4)
+        res = drv.insert(data, np.arange(4000))
+        assert res.accepted + res.cached == 4000, res
+        drv.delete(np.arange(0, 600))
+        drv.flush(max_ticks=40)
+        # everything streamed minus deletes is live, exactly once
+        st = drv.snapshot()       # asserts canonical free stack
+        status = np.asarray(vm.unpack_status(st.rec_meta))
+        vis = np.asarray(st.allocated) & (status != 3)
+        ids = np.asarray(st.ids); sv = np.asarray(st.slot_valid)
+        live = set()
+        for p in np.flatnonzero(vis):
+            for c in np.flatnonzero(sv[p]):
+                i = int(ids[p, c])
+                assert i not in live, f"dup id {i}"
+                live.add(i)
+        cv = np.asarray(st.cache_valid)
+        live |= {int(i) for i in np.asarray(st.cache_ids)[cv]}
+        assert live == set(range(600, 4000)), (
+            len(live), min(live), max(live))
+        # oversize postings all came down; GC reclaimed retirees
+        lens = np.asarray(st.lengths)
+        assert (lens[vis] <= cfg.l_max).all()
+        assert drv.stats["bg_gc"] > 0, "in-round GC never reclaimed"
+        # search quality vs exact truth over the live contents
+        from repro.core import metrics
+        q = (cents[r.integers(0, 12, 64)]
+             + r.normal(size=(64, 16))).astype(np.float32)
+        found, _ = drv.search(q, 10)
+        true, _ = drv.exact(q, 10)
+        rec = metrics.recall_at_k(np.asarray(found), np.asarray(true))
+        assert rec > 0.95, rec
+        print("OK", len(live), "live")
     """)
     assert "OK" in out
 
