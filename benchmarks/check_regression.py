@@ -26,13 +26,18 @@ import sys
 THRESHOLD = 0.20
 TIMING_THRESHOLD = 0.50
 ID_KEYS = ("figure", "mode", "dataset", "batch", "fg", "bg",
-           "balance_factor", "variant")
-# metric -> direction ("up" = larger is better)
+           "balance_factor", "variant", "stream", "rebalance", "shards")
+# metric -> direction ("up" = larger is better).  occ_spread is the
+# figskew per-shard occupancy ratio max/mean (bounded by the shard
+# count, unlike max/min which explodes on an empty shard) — it gets the
+# tight quality tolerance: a rebalance regression shows up as the
+# zipf/on spread creeping toward the zipf/off ceiling.
 METRICS = {"tps": "up", "qps": "up", "recall": "up", "final_recall": "up",
-           "small_frac": "down"}
+           "small_frac": "down", "occ_spread": "down"}
 TIMING_METRICS = {"tps", "qps"}
 # below this absolute scale, relative comparison is meaningless noise
-ABS_FLOOR = {"small_frac": 0.02, "recall": 0.05, "final_recall": 0.05}
+ABS_FLOOR = {"small_frac": 0.02, "recall": 0.05, "final_recall": 0.05,
+             "occ_spread": 0.0}
 
 
 def row_key(row: dict) -> tuple:
@@ -40,7 +45,12 @@ def row_key(row: dict) -> tuple:
 
 
 def compare(fresh: list, baseline: list, threshold: float = THRESHOLD,
-            timing_threshold: float = TIMING_THRESHOLD) -> int:
+            timing_threshold: float = TIMING_THRESHOLD,
+            min_matched: int = 0) -> int:
+    """``min_matched`` guards the *baseline coverage itself*: a check
+    whose identity keys silently stop matching (e.g. figskew rows keyed
+    by shard count when the fake-device flag stops taking effect) would
+    otherwise pass vacuously with 0 comparisons."""
     base = {row_key(r): r for r in baseline}
     failures, checked, matched = [], 0, 0
     for row in fresh:
@@ -70,6 +80,10 @@ def compare(fresh: list, baseline: list, threshold: float = THRESHOLD,
     print(f"regression check: {matched}/{len(fresh)} rows matched baseline, "
           f"{checked} metric comparisons, {len(failures)} regressions "
           f"(threshold {threshold:.0%}, timing {timing_threshold:.0%})")
+    if matched < min_matched:
+        print(f"VACUOUS: only {matched} rows matched the baseline "
+              f"(--min-matched {min_matched}) — identity keys drifted?")
+        return 1
     if failures:
         print("REGRESSIONS:")
         print("\n".join(failures))
@@ -87,6 +101,10 @@ def main(argv) -> int:
     ap.add_argument("--timing-threshold", type=float,
                     default=TIMING_THRESHOLD,
                     help="relative tolerance for tps/qps (CI noise)")
+    ap.add_argument("--min-matched", type=int, default=0,
+                    help="fail if fewer fresh rows match the baseline "
+                         "(guards against vacuous passes when identity "
+                         "keys drift)")
     args = ap.parse_args(argv[1:])
     try:
         with open(args.fresh) as f:
@@ -96,7 +114,8 @@ def main(argv) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"check_regression: cannot load inputs: {e}")
         return 2
-    return compare(fresh, baseline, args.threshold, args.timing_threshold)
+    return compare(fresh, baseline, args.threshold, args.timing_threshold,
+                   args.min_matched)
 
 
 if __name__ == "__main__":

@@ -206,6 +206,99 @@ def figengines_comparison(scale: BenchScale = QUICK) -> List[Dict]:
     return rows
 
 
+def figskew_skewed_stream(scale: BenchScale = QUICK) -> List[Dict]:
+    """Beyond the paper: the *pod-level* imbalanced-distribution axis.
+
+    Replays a hot-shard insert stream (Zipfian cluster popularity) on a
+    multi-shard ``ubis-sharded`` mesh and reports recall plus the
+    per-shard occupancy spread over time, with the cross-shard rebalance
+    stage on and off.  Three variants: ``uniform/on`` (the control),
+    ``zipf/on`` (the acceptance run: spread stays bounded, recall within
+    points of the control) and ``zipf/off`` (the failure mode the
+    rebalance stage closes — with contiguous seeding the whole index
+    stays wedged on shard 0).
+
+    Shards = however many local devices exist; rows carry the count so a
+    1-device run can never be diffed against a 4-shard baseline (run CI
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+    """
+    import time
+
+    import jax
+    from repro.api import make_index
+    from repro.core.metrics import occupancy_spread
+
+    n_dev = len(jax.devices())
+    if scale.max_postings % n_dev:
+        # skip, don't abort: figskew rides in the default figure list
+        # and run.py only writes --out after every figure completes
+        print(f"figskew: skipped — max_postings={scale.max_postings} "
+              f"does not divide the {n_dev}-device model axis")
+        return []
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    rng = np.random.default_rng(scale.seed)
+    K = 16
+    cents = (rng.normal(size=(K, scale.dim)) * 5).astype(np.float32)
+    queries = (cents[rng.integers(0, K, scale.queries)]
+               + rng.normal(size=(scale.queries, scale.dim))
+               ).astype(np.float32)
+
+    def draw(kind, n):
+        if kind == "uniform":
+            a = rng.integers(0, K, n)
+        else:
+            w = 1.0 / (np.arange(K) + 1) ** 1.5
+            a = rng.choice(K, size=n, p=w / w.sum())
+        return (cents[a] + rng.normal(size=(n, scale.dim))
+                ).astype(np.float32)
+
+    rows = []
+    per_batch = scale.n // (2 * scale.batches)
+    for stream_kind, rebalance in (("uniform", True), ("zipf", True),
+                                   ("zipf", False)):
+        batches = [draw(stream_kind, per_batch)
+                   for _ in range(scale.batches)]
+        # built directly (not via make_driver): the mesh must be the
+        # explicit (1, n_dev) one above, or default_mesh silently drops
+        # shards on awkward device counts and mislabels every row
+        drv = make_index("ubis-sharded", make_cfg(scale, "ubis"),
+                         batches[0], seed=scale.seed, mesh=mesh,
+                         round_size=512, bg_ops_per_round=8,
+                         rebalance=rebalance)
+        assert drv.n_shards == n_dev, (drv.n_shards, n_dev)
+        drv.search(queries[:8], scale.k)     # warm compile
+        nid = 0
+        seen_v, seen_i = [], []
+        for bi, b in enumerate(batches):
+            ids = np.arange(nid, nid + len(b))
+            nid += len(b)
+            seen_v.append(b)
+            seen_i.append(ids)
+            t0 = time.perf_counter()
+            r = drv.insert(b, ids)
+            drv.flush(max_ticks=8)
+            t_upd = time.perf_counter() - t0
+            recall = eval_recall(drv, queries, scale.k,
+                                 np.concatenate(seen_v),
+                                 np.concatenate(seen_i))
+            spread = occupancy_spread(drv.shard_occupancy())
+            rows.append({
+                "figure": "figskew", "stream": stream_kind,
+                "rebalance": "on" if rebalance else "off",
+                "shards": drv.n_shards, "batch": bi,
+                "recall": round(recall, 4),
+                "tps": round((r.accepted + r.cached) / t_upd, 1),
+                "cached": r.cached, "rejected": r.rejected,
+                "migrated": int(drv.stats["migrated"]),
+                "occ_min": spread["occ_min"],
+                "occ_max": spread["occ_max"],
+                "occ_ratio": round(spread["occ_ratio"], 3),
+                "occ_spread": round(spread["occ_spread"], 3),
+            })
+        rows[-1]["final_recall"] = rows[-1]["recall"]
+    return rows
+
+
 def fig9_balance_factor(scale: BenchScale = QUICK) -> List[Dict]:
     """Paper Fig. 9: balance-factor sweep (recall up, QPS down)."""
     import time

@@ -21,7 +21,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--figures",
                     default="fig5,fig6,fig7,table4,fig8,fig9,figpq,"
-                            "figengines")
+                            "figengines,figskew")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
@@ -38,6 +38,7 @@ def main(argv=None) -> None:
         "fig9": figures.fig9_balance_factor,
         "figpq": figures.figpq_memory_recall,
         "figengines": figures.figengines_comparison,
+        "figskew": figures.figskew_skewed_stream,
     }
     wanted = [f.strip() for f in args.figures.split(",") if f.strip()]
     all_rows = []
@@ -60,6 +61,8 @@ def main(argv=None) -> None:
 
 def _headline(name: str, rows) -> str:
     """One derived number per figure — the paper's comparison axis."""
+    if not rows:
+        return "skipped"
     by_mode = {}
     for r in rows:
         by_mode.setdefault(r.get("mode", r.get("balance_factor",
@@ -100,6 +103,12 @@ def _headline(name: str, rows) -> str:
         if name == "figengines":
             return " ".join(f"{r['mode']}={r['final_recall']:.3f}"
                             for r in rows)
+        if name == "figskew":
+            last = {(r["stream"], r["rebalance"]): r for r in rows}
+            on = last[("zipf", "on")]
+            off = last[("zipf", "off")]
+            return (f"zipf occ_ratio on={on['occ_ratio']} "
+                    f"off={off['occ_ratio']} recall on={on['recall']}")
     except Exception as e:  # pragma: no cover
         return f"derived-error:{e}"
     return ""

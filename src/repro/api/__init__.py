@@ -20,7 +20,8 @@ from .types import (SearchResult, StreamingIndex, TickReport,  # noqa: F401
                     UpdateResult)
 
 __all__ = ["StreamingIndex", "SearchResult", "UpdateResult", "TickReport",
-           "make_index", "ENGINES", "ShardedUBISDriver"]
+           "make_index", "ENGINES", "ShardedUBISDriver",
+           "RebalancePlanner"]
 
 
 def __getattr__(name):
@@ -30,4 +31,7 @@ def __getattr__(name):
     if name == "ShardedUBISDriver":
         from .sharded_driver import ShardedUBISDriver
         return ShardedUBISDriver
+    if name == "RebalancePlanner":
+        from .rebalance import RebalancePlanner
+        return RebalancePlanner
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

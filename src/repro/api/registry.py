@@ -32,7 +32,9 @@ _DRIVER_KW = {"seed", "round_size", "bg_ops_per_round", "drain_per_tick",
               "insert_retries", "gc_lag", "reassign_after_split",
               "pq_retrain_every"}
 _UBIS_KW = _DRIVER_KW | {"fused_tick"}
-_SHARDED_KW = _DRIVER_KW | {"mesh", "shard_cache_scan"}
+_SHARDED_KW = _DRIVER_KW | {"mesh", "shard_cache_scan", "rebalance",
+                            "rebalance_watermark", "rebalance_ratio",
+                            "migrate_per_tick"}
 _SPANN_KW = {"seed", "round_size"}
 _GRAPH_KW = {"max_nodes", "degree", "beam", "alpha", "consolidate_every"}
 

@@ -14,8 +14,23 @@ mesh:
   * **search** — ``make_sharded_search`` per (k, nprobe), queries padded
     to the data-axis multiple;
   * **tick**  — ONE ``make_sharded_background`` call (per-shard select →
-    mark → execute → epoch GC, collective-free), then the host cache
-    drain, then the PQ codebook re-train on cadence.
+    mark → execute → epoch GC, collective-free, reporting per-shard
+    pressure rows), then the **cross-shard rebalance** stage (below),
+    then the host cache drain, then the PQ codebook re-train on cadence.
+
+**Cross-shard rebalance.**  Structural ownership makes every background
+op shard-local — which is exactly why a skewed stream can saturate one
+shard's sub-pool (splits defer until epoch GC frees a local slot,
+inserts park in the cache) while cold shards sit on free capacity; with
+contiguous pid seeding, a fresh index even starts with EVERY posting on
+shard 0.  The tick's pressure rows feed a host-side
+``rebalance.RebalancePlanner``; when a shard crosses the saturation
+watermark (or the live-vector spread exceeds ``rebalance_ratio``), the
+planner picks donor→receiver posting moves and ONE
+``make_sharded_migrate`` round executes them (owner extraction,
+free-stack-granted installation, replicated id-map rewrite).  The
+background program itself stays collective-free — pressure rides out
+through the sharded output layout, and migration is its own round.
 
 **Host-mediated vector cache.**  The cache arrays are *replicated*
 across model shards, so no shard may write them inside an SPMD program
@@ -44,12 +59,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import update
+from ..core import version_manager as vm
 from ..core.build import initial_state
 from ..core.sharded import (index_specs, make_sharded_background,
-                            make_sharded_delete, make_sharded_insert,
+                            make_sharded_delete, make_sharded_exact,
+                            make_sharded_insert, make_sharded_migrate,
                             make_sharded_search)
-from ..core.search import brute_force
-from ..core.types import IndexState, UBISConfig
+from ..core.types import STATUS_NORMAL, IndexState, UBISConfig
+from .rebalance import RebalancePlanner
 from .types import SearchResult, TickReport, UpdateResult
 
 
@@ -72,7 +89,11 @@ class ShardedUBISDriver:
                  drain_per_tick: int = 256, insert_retries: int = 2,
                  gc_lag: int = 16, reassign_after_split: bool = True,
                  pq_retrain_every: int = 32,
-                 shard_cache_scan: bool = True):
+                 shard_cache_scan: bool = True,
+                 rebalance: bool = True,
+                 rebalance_watermark: float = 0.85,
+                 rebalance_ratio: float = 1.2,
+                 migrate_per_tick: int = 8):
         if not cfg.is_ubis:
             raise ValueError("ShardedUBISDriver is UBIS-mode only "
                              "(SPFresh's lock model is single-device)")
@@ -106,8 +127,23 @@ class ShardedUBISDriver:
         self._background_fn = make_sharded_background(
             cfg, self.mesh, bg_ops=self.bg_ops,
             reassign=reassign_after_split)
+        # cross-shard rebalance: host planner + one jitted migrate round
+        self.n_shards = int(self.mesh.shape["model"])
+        self.rebalance = bool(rebalance) and self.n_shards > 1
+        self._pressure = None
+        self.planner = RebalancePlanner(
+            self.n_shards, cfg.max_postings // self.n_shards,
+            watermark=rebalance_watermark, ratio_target=rebalance_ratio,
+            max_moves=int(migrate_per_tick), min_gap=cfg.l_max)
+        # built for every multi-shard mesh (compile is lazy), so
+        # toggling ``self.rebalance`` after construction — as figskew's
+        # on/off comparison does — can never hit a missing attribute
+        if self.n_shards > 1:
+            self._migrate_fn = make_sharded_migrate(
+                cfg, self.mesh, jobs=int(migrate_per_tick))
         self._shard_cache_scan = shard_cache_scan
         self._search_fns = {}
+        self._exact_fns = {}
         # queries shard over the data axes: batches pad to this multiple
         axes = self.mesh.axis_names
         qaxes = ("pod", "data") if "pod" in axes else ("data",)
@@ -136,9 +172,9 @@ class ShardedUBISDriver:
             raise ValueError("ids out of range for cfg.max_ids")
         t0 = time.perf_counter()
         n_acc = 0
-        pending = (vecs, ids)
+        pending, rej_t = (vecs, ids), None
         for attempt in range(self.retries + 1):
-            acc, rej_v, rej_i = self._insert_rounds(*pending)
+            acc, rej_v, rej_i, rej_t = self._insert_rounds(*pending)
             n_acc += acc
             if rej_i is None:
                 pending = None
@@ -148,7 +184,7 @@ class ShardedUBISDriver:
                 self.tick()
         n_cache = n_rej = 0
         if pending is not None:
-            n_cache = self._cache_put(*pending)
+            n_cache = self._cache_put(*pending, targets=rej_t)
             n_rej = len(pending[1]) - n_cache
         jax.block_until_ready(self.state.lengths)
         dt = time.perf_counter() - t0
@@ -160,10 +196,13 @@ class ShardedUBISDriver:
 
     def _insert_rounds(self, vecs, ids):
         """One pass of padded sharded insert rounds.  Returns
-        (n_accepted, rej_vecs | None, rej_ids | None)."""
+        (n_accepted, rej_vecs | None, rej_ids | None, rej_targets | None)
+        — ``rej_targets`` is the global pid each rejected job was routed
+        to (-1 if nothing insertable), carried into the cache so the
+        pressure stats can attribute the parked backlog to its shard."""
         J = self.round_size
         n_acc = 0
-        rej_v, rej_i = [], []
+        rej_v, rej_i, rej_t = [], [], []
         for off in range(0, len(ids), J):
             cv, ci = vecs[off:off + J], ids[off:off + J]
             n = len(ci)
@@ -172,7 +211,7 @@ class ShardedUBISDriver:
             cv = np.concatenate([cv, np.zeros((pad, self.cfg.dim),
                                               np.float32)])
             ci = np.concatenate([ci, np.zeros(pad, np.int32)])
-            self.state, accm = self._insert_fn(
+            self.state, accm, routed = self._insert_fn(
                 self.state, jnp.asarray(cv), jnp.asarray(ci),
                 jnp.asarray(valid))
             accm = np.asarray(accm)[:n]
@@ -180,9 +219,11 @@ class ShardedUBISDriver:
             if not accm.all():
                 rej_v.append(cv[:n][~accm])
                 rej_i.append(ci[:n][~accm])
+                rej_t.append(np.asarray(routed)[:n][~accm])
         if not rej_i:
-            return n_acc, None, None
-        return n_acc, np.concatenate(rej_v), np.concatenate(rej_i)
+            return n_acc, None, None, None
+        return (n_acc, np.concatenate(rej_v), np.concatenate(rej_i),
+                np.concatenate(rej_t))
 
     def delete(self, ids) -> UpdateResult:
         ids = np.asarray(ids, np.int64).astype(np.int32)
@@ -232,15 +273,18 @@ class ShardedUBISDriver:
 
     def tick(self) -> TickReport:
         """One background round: the collective-free sharded
-        select/mark/execute/GC program, then the host cache drain, then
-        the PQ re-train on cadence."""
+        select/mark/execute/GC program (which also reports per-shard
+        pressure), then the cross-shard rebalance stage, then the host
+        cache drain, then the PQ re-train on cadence."""
         t0 = time.perf_counter()
         ver = int(jax.device_get(self.state.global_version))
         gc_min = ver - self.gc_lag if ver > self.gc_lag else 0
-        self.state, ex, gc = self._background_fn(self.state,
-                                                 jnp.uint32(gc_min))
+        self.state, ex, gc, press = self._background_fn(self.state,
+                                                        jnp.uint32(gc_min))
         executed, reclaimed = int(ex), int(gc)
+        self._pressure = np.asarray(press)
         self.stats["bg_exec_time"] += time.perf_counter() - t0
+        migrated = self._rebalance() if self.rebalance else 0
         drained = self._drain_cache()
         retrained = self._pq_retrain()
         dt = time.perf_counter() - t0
@@ -252,27 +296,71 @@ class ShardedUBISDriver:
         # count — quiescence is executed == 0 (+ empty cache), and a
         # caller porting UBISDriver's flush check gets exactly that
         return TickReport(executed=executed, drained=drained,
-                          gc=reclaimed, pq_retrained=retrained,
-                          seconds=dt)
+                          migrated=migrated, gc=reclaimed,
+                          pq_retrained=retrained, seconds=dt)
 
     def flush(self, max_ticks: int = 200) -> int:
-        """Tick until quiescent (no structural work, cache empty)."""
+        """Tick until quiescent (no structural work, no migrations left
+        to plan, cache empty)."""
         for i in range(max_ticks):
             r = self.tick()
             cache_n = int(np.asarray(self.state.cache_valid).sum())
-            if r.executed == 0 and cache_n == 0:
+            if r.executed == 0 and r.migrated == 0 and cache_n == 0:
                 return i + 1
         return max_ticks
+
+    # ---- cross-shard rebalance ----------------------------------------
+
+    def _rebalance(self) -> int:
+        """Plan + execute one migration round when the tick's pressure
+        rows cross a trigger.  The planner's cheap ``needs`` gate keeps
+        quiescent ticks free of the (M,)-sized host reads."""
+        press = self._pressure
+        if press is None or not self.planner.needs(press):
+            return 0
+        lengths = np.asarray(self.state.lengths)
+        status = np.asarray(vm.unpack_status(self.state.rec_meta))
+        movable = (np.asarray(self.state.allocated)
+                   & (status == STATUS_NORMAL))
+        src, dst = self.planner.plan(press, lengths, movable)
+        if len(src) == 0:
+            return 0
+        B = self.planner.max_moves
+        pad = B - len(src)
+        valid = np.concatenate([np.ones(len(src), bool),
+                                np.zeros(pad, bool)])
+        src = np.concatenate([src, np.full(pad, -1, np.int32)])
+        dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+        self.state, mig = self._migrate_fn(
+            self.state, jnp.asarray(src), jnp.asarray(dst),
+            jnp.asarray(valid))
+        n = int(np.asarray(mig).sum())
+        self.stats["migrated"] += n
+        return n
+
+    def shard_pressure(self) -> Optional[np.ndarray]:
+        """Last tick's (S, 4) pressure rows — ``(live_postings,
+        free_slots, cache_backlog, live_vectors)`` per shard — or None
+        before the first tick."""
+        return self._pressure
+
+    def shard_occupancy(self) -> np.ndarray:
+        """Live vectors per posting-pool shard, computed host-side (no
+        tick required) — the ``figskew`` spread metric."""
+        from ..core.metrics import shard_live_vectors
+        return shard_live_vectors(self.state, self.n_shards)
 
     # ---- host-mediated vector cache -----------------------------------
 
     def _replicate(self, x):
         return jax.device_put(jnp.asarray(x), self._rep)
 
-    def _cache_put(self, vecs, ids) -> int:
+    def _cache_put(self, vecs, ids, targets=None) -> int:
         """Park jobs in the replicated cache from the host (every
         replica receives identical bytes; id_loc takes the ``-2 - slot``
-        encoding, so the entries are searchable and deletable)."""
+        encoding, so the entries are searchable and deletable).
+        ``targets`` carries the routed global pid per job — the pressure
+        stats' backlog attribution (-1 when unknown)."""
         cval = np.array(self.state.cache_valid)
         free = np.flatnonzero(~cval)
         n = min(len(free), len(ids))
@@ -285,7 +373,7 @@ class ShardedUBISDriver:
         iloc = np.array(self.state.id_loc)
         cvecs[slots] = vecs[:n]
         cids[slots] = ids[:n]
-        ctgt[slots] = -1
+        ctgt[slots] = -1 if targets is None else targets[:n]
         cval[slots] = True
         iloc[ids[:n]] = -2 - slots
         self.state = dataclasses.replace(
@@ -309,9 +397,9 @@ class ShardedUBISDriver:
         cval[slots] = False
         self.state = dataclasses.replace(
             self.state, cache_valid=self._replicate(cval))
-        n_acc, rej_v, rej_i = self._insert_rounds(vecs, ids)
+        n_acc, rej_v, rej_i, rej_t = self._insert_rounds(vecs, ids)
         if rej_i is not None:
-            self._cache_put(rej_v, rej_i)
+            self._cache_put(rej_v, rej_i, targets=rej_t)
         return n_acc
 
     def _pq_retrain(self) -> int:
@@ -346,16 +434,19 @@ class ShardedUBISDriver:
         return state_memory_bytes(self.state)
 
     def exact(self, queries, k: int) -> SearchResult:
-        """Exact top-k over live contents (recall oracle).
-
-        Runs on the GATHERED snapshot, not through GSPMD over the
-        sharded state: XLA may keep the replicated id row in a
-        partial-sum representation across the data axis there, which
-        silently scales the returned ids (observed: exactly x data-axis
-        ids).  The oracle is eval-only, so the gather cost is fine.
-        """
-        found, scores = brute_force(self.snapshot(), self.cfg,
-                                    jnp.asarray(queries, jnp.float32), k)
+        """Exact top-k over live contents (recall oracle) — a
+        ``shard_map``'d brute force: each shard scans only the postings
+        and cache slice it owns against ITS OWN id rows, so the
+        replicated-id-row partial-sum hazard of a plain GSPMD
+        ``brute_force`` (ids silently scaled by the data-axis size)
+        cannot arise, and the oracle no longer gathers the whole index
+        to one device per call."""
+        fn = self._exact_fns.get(k)
+        if fn is None:
+            fn = self._exact_fns[k] = make_sharded_exact(self.cfg,
+                                                         self.mesh, k)
+        found, scores = fn(self.state,
+                           jnp.asarray(queries, jnp.float32))
         return SearchResult(ids=np.asarray(found),
                             scores=np.asarray(scores))
 

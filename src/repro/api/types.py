@@ -62,11 +62,16 @@ class UpdateResult:
 
 @dataclasses.dataclass
 class TickReport:
-    """Outcome of one background tick."""
+    """Outcome of one background tick.
+
+    ``migrated`` counts cross-shard posting migrations (the sharded
+    driver's rebalance stage); single-device engines leave it 0.
+    """
 
     executed: int = 0
     drained: int = 0
     marked: int = 0
+    migrated: int = 0
     gc: int = 0
     pq_retrained: int = 0
     seconds: float = 0.0

@@ -53,6 +53,35 @@ def detect(state: IndexState, cfg: UBISConfig):
 
 
 # ---------------------------------------------------------------------------
+# pool pressure (the saturation signal behind cross-shard rebalance)
+# ---------------------------------------------------------------------------
+
+def shard_pressure(state: IndexState, cfg: UBISConfig, base_pid=0):
+    """Pressure stats for ONE posting pool: ``(live_postings, free_slots,
+    cache_backlog, live_vectors)`` as a (4,) int32 vector.
+
+    ``base_pid`` is the pool's global pid offset: cache targets are
+    stored as global pids, so the backlog column counts parked jobs
+    bound for THIS pool's postings.  Shared by the sharded background
+    round (per shard, local state under ``shard_map``) and the
+    single-device ``UBISDriver.shard_pressure`` (base 0, whole pool) so
+    both planes report the same saturation signal in the same format.
+    Pure local computation — contributes zero collectives to the round
+    it rides in.
+    """
+    M_local = state.allocated.shape[0]
+    status = vm.unpack_status(state.rec_meta)
+    alive = state.allocated & (status != STATUS_DELETED)
+    live = jnp.sum(alive)
+    free = jnp.sum(~state.allocated)
+    t = state.cache_target
+    lo = jnp.asarray(base_pid, jnp.int32)
+    backlog = jnp.sum(state.cache_valid & (t >= lo) & (t < lo + M_local))
+    live_vecs = jnp.sum(jnp.where(alive, state.lengths, 0))
+    return jnp.stack([live, free, backlog, live_vecs]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # masked 2-means (the split clustering step)
 # ---------------------------------------------------------------------------
 

@@ -27,11 +27,37 @@ def live_posting_lengths(state) -> np.ndarray:
     """Live lengths of visible postings (posting-CDF statistics) —
     shared by the single-device and sharded drivers so their benchmark
     metrics can never diverge."""
+    from .types import STATUS_DELETED
     from .version_manager import unpack_status
     status = np.asarray(unpack_status(state.rec_meta))
-    alive = np.asarray(state.allocated) & (status != 3)
+    alive = np.asarray(state.allocated) & (status != STATUS_DELETED)
     lens = np.asarray(state.lengths)[alive]
     return lens[lens > 0]
+
+
+def shard_live_vectors(state, n_shards: int) -> np.ndarray:
+    """Live vectors per posting-pool shard (contiguous pid blocks over
+    the ``model`` axis).  The occupancy signal behind ``figskew`` and
+    the rebalance acceptance ratio — shared by the sharded driver and
+    the benchmarks so the spread metric cannot drift."""
+    from .types import STATUS_DELETED
+    from .version_manager import unpack_status
+    status = np.asarray(unpack_status(state.rec_meta))
+    alive = np.asarray(state.allocated) & (status != STATUS_DELETED)
+    lens = np.where(alive, np.asarray(state.lengths), 0)
+    return lens.reshape(n_shards, -1).sum(axis=1)
+
+
+def occupancy_spread(occ) -> dict:
+    """Spread statistics over per-shard occupancy: ``occ_ratio`` is the
+    acceptance metric max/min (min clamped to 1 so an empty shard reads
+    as a huge, not infinite, ratio); ``occ_spread`` = max/mean is the
+    bounded form the regression check pins."""
+    occ = np.asarray(occ, float)
+    mx, mn, mean = occ.max(), occ.min(), occ.mean()
+    return {"occ_min": int(mn), "occ_max": int(mx),
+            "occ_ratio": float(mx / max(mn, 1.0)),
+            "occ_spread": float(mx / max(mean, 1.0))}
 
 
 def throughput_from_stats(stats) -> dict:

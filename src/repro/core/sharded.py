@@ -32,8 +32,9 @@ from ..distributed.sharding import axis_size as _axis_size, shard_map
 from ..kernels import ops, ref
 from ..kernels.posting_scan import BIG
 from . import balance, version_manager as vm
-from .types import NO_SUCC, IndexState, UBISConfig
-from .update import (_flat_set, dataclasses_replace, oob,
+from .types import (NO_SUCC, STATUS_DELETED, STATUS_NORMAL, IndexState,
+                    UBISConfig)
+from .update import (apply_tombstones, dataclasses_replace, oob,
                      rebuild_free_stack)
 
 
@@ -62,6 +63,25 @@ def index_specs(cfg: UBISConfig):
 def _local_topk(scores, ids, k):
     neg, idx = jax.lax.top_k(-scores, k)
     return -neg, jnp.take_along_axis(ids, idx, axis=-1)
+
+
+def _owned_cache_slice(state: IndexState, my, n_shard):
+    """This shard's 1/S slice of the replicated vector cache:
+    (vecs, valid, ids) with the clamp-overlap rows masked OUT of
+    ``valid``.  Ceil-div slices of a non-divisible capacity overlap at
+    the end of the pool (the ``start`` clamp); the ownership mask keeps
+    every cache slot scanned by exactly one shard, so the merge
+    all-gather can never double-count an entry.  Shared by the sharded
+    search and the ``make_sharded_exact`` oracle — the two scans must
+    agree on this discipline or recall metrics lie."""
+    K_all = state.cache_vecs.shape[0]
+    Ks = -(-K_all // n_shard)
+    start = jnp.minimum(my * Ks, K_all - Ks)
+    cvs = jax.lax.dynamic_slice_in_dim(state.cache_vecs, start, Ks, 0)
+    cval = jax.lax.dynamic_slice_in_dim(state.cache_valid, start, Ks, 0)
+    cid = jax.lax.dynamic_slice_in_dim(state.cache_ids, start, Ks, 0)
+    own = (jnp.arange(Ks) + start) >= my * Ks
+    return cvs, cval & own, cid
 
 
 def _rebase_succ(rec_succ, offset, limit):
@@ -188,20 +208,9 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
         # cache scan: each shard takes a 1/S slice of the replicated
         # cache (or shard 0 scans everything when disabled)
         if shard_cache_scan:
-            K_all = state.cache_vecs.shape[0]
-            Ks = -(-K_all // n_shard)
-            start = jnp.minimum(my * Ks, K_all - Ks)
-            cvs = jax.lax.dynamic_slice_in_dim(state.cache_vecs, start,
-                                               Ks, axis=0)
-            cval = jax.lax.dynamic_slice_in_dim(state.cache_valid, start,
-                                                Ks, axis=0)
-            cid = jax.lax.dynamic_slice_in_dim(state.cache_ids, start,
-                                               Ks, axis=0)
-            # overlap rows (from the clamp) deduplicate in the final
-            # top-k merge only if scores tie; mask non-owned overlap:
-            own = (jnp.arange(Ks) + start) >= my * Ks
+            cvs, cval_own, cid = _owned_cache_slice(state, my, n_shard)
             csc = ref.centroid_score(queries, cvs)
-            csc = jnp.where((cval & own)[None, :], csc, BIG)
+            csc = jnp.where(cval_own[None, :], csc, BIG)
             ck = min(k, csc.shape[1])
             s3, i3 = _local_topk(csc, jnp.broadcast_to(
                 cid[None, :], csc.shape), ck)
@@ -228,7 +237,8 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
 
 def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
     """Builds a jitted sharded insert round:
-    (state, vecs, ids, valid) -> (state, accepted (J,) bool).
+    (state, vecs, ids, valid) -> (state, accepted (J,) bool,
+    routed (J,) int32).
 
     Each shard locates jobs against its local centroids; a global argmin
     routes each job to its owner shard, which runs the conflict-free
@@ -236,7 +246,11 @@ def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
     are *rejected* here — the vector cache is host-mediated in
     ``ShardedUBISDriver`` (replicated cache writes would race), which is
     why the per-job accepted mask (not a count) comes back: the driver
-    owns the retry/park decision for every rejected lane.
+    owns the retry/park decision for every rejected lane.  ``routed``
+    is the GLOBAL pid the round located for each job (-1 when nothing
+    was insertable): parked jobs carry it as their cache target, which
+    is what lets the background plane's pressure stats attribute the
+    parked backlog to the saturated shard.
     """
     jspec = P()     # jobs replicated: every shard sees all jobs
     st_specs = index_specs(cfg)
@@ -256,6 +270,14 @@ def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
         all_best = jax.lax.all_gather(best_local, "model", axis=0)  # (S, J)
         owner = jnp.argmin(all_best, axis=0).astype(jnp.int32)
         mine = valid & (owner == my) & (best_local < BIG / 2)
+        # routed GLOBAL pid per job (one-hot psum: exactly one shard is
+        # the argmin owner) — the cache-target hint for parked jobs
+        claim = (owner == my) & (best_local < BIG / 2)
+        routed = jax.lax.psum(
+            jnp.where(claim, best_pid + my.astype(jnp.int32) * M_local, 0),
+            "model")
+        routable = jax.lax.psum(claim.astype(jnp.int32), "model") > 0
+        routed = jnp.where(valid & routable, routed, -1)
         state, ok, flat_local = batched_append(
             state, cfg, vecs, ids, jnp.where(mine, best_pid, -1), mine,
             update_id_loc=False)
@@ -273,10 +295,10 @@ def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
         state = _dc.replace(
             state, id_loc=id_loc,
             global_version=state.global_version + jnp.uint32(1))
-        return state, valid & any_won
+        return state, valid & any_won, routed
 
     fn = shard_map(local, mesh, (st_specs, jspec, jspec, jspec),
-                   (st_specs, P()))
+                   (st_specs, P(), P()))
     return jax.jit(fn, donate_argnums=(0,))
 
 
@@ -288,9 +310,11 @@ def make_sharded_delete(cfg: UBISConfig, mesh: Mesh):
     free: the owner shard (flat location // local pool span) tombstones
     its tiles and decrements its lengths; the cache and ``id_loc``
     updates are computed identically on every shard from replicated
-    inputs, so the replicas stay in sync with zero collectives.
-    UBIS semantics only — the SPFresh lock model lives in the
-    single-device ``delete_round``.
+    inputs, so the replicas stay in sync with zero collectives.  The
+    tombstone writes themselves are ``update.apply_tombstones`` — ONE
+    kernel parameterized by the owner span, shared with the single-device
+    ``delete_round`` (base 0) so the two paths cannot drift.  UBIS
+    semantics only — the SPFresh lock model lives in ``delete_round``.
     """
     jspec = P()
     st_specs = index_specs(cfg)
@@ -299,31 +323,14 @@ def make_sharded_delete(cfg: UBISConfig, mesh: Mesh):
     def local(state: IndexState, del_ids, valid):
         my = jax.lax.axis_index("model")
         M_local = state.lengths.shape[0]
-        span = M_local * C
-        base = my.astype(jnp.int32) * span
+        base = my.astype(jnp.int32) * (M_local * C)
         safe = jnp.clip(del_ids, 0, cfg.max_ids - 1)
         loc = state.id_loc[safe]
         first = vm.first_occurrence_mask(safe) & valid
         in_post = first & (loc >= 0)
         in_cache = first & (loc <= -2)
-        # owner shard writes its tiles; other shards' lanes are masked
-        lloc = loc - base
-        mine = in_post & (lloc >= 0) & (lloc < span)
-        flat = oob(lloc, mine, span)
-        slot_valid = _flat_set(state.slot_valid, flat,
-                               jnp.zeros(loc.shape, jnp.bool_))
-        pid = oob(lloc // C, mine, M_local)
-        lengths = state.lengths.at[pid].add(-1, mode="drop")
-        # cache + id_loc are replicated: identical update on every shard
-        cslot = oob(-2 - loc, in_cache, cfg.cache_capacity)
-        cache_valid = state.cache_valid.at[cslot].set(False, mode="drop")
-        done = in_post | in_cache
-        id_loc = state.id_loc.at[oob(safe, done, cfg.max_ids)].set(
-            -1, mode="drop")
-        state = dataclasses_replace(
-            state, slot_valid=slot_valid, lengths=lengths,
-            cache_valid=cache_valid, id_loc=id_loc,
-            global_version=state.global_version + jnp.uint32(1))
+        state, done = apply_tombstones(state, cfg, safe, loc, in_post,
+                                       in_cache, base=base)
         return state, done
 
     fn = shard_map(local, mesh, (st_specs, jspec, jspec), (st_specs, P()))
@@ -334,7 +341,15 @@ def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
                             bg_ops: int = 8, reassign: bool = True,
                             gc_k: int = 64):
     """Builds a jitted sharded background tick:
-    (state, gc_min_version) -> (state, executed, reclaimed).
+    (state, gc_min_version) -> (state, executed, reclaimed, pressure).
+
+    ``pressure`` is the (S, 4) int32 per-shard saturation report —
+    ``balance.shard_pressure`` rows ``(live_postings, free_slots,
+    cache_backlog, live_vectors)`` computed AFTER the structural batch
+    and GC.  Each shard writes its own row through the ``P("model")``
+    output layout, so the stats ride out of the same program with zero
+    added collectives; the host-side ``RebalancePlanner`` reads them to
+    pick donor->receiver migrations for ``make_sharded_migrate``.
 
     The SAME ``balance.background_round`` program runs on every model
     shard over the postings it owns — structural work is shard-local, so
@@ -420,7 +435,223 @@ def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
             global_version=jax.lax.pmax(state.global_version, "model"))
         executed = jax.lax.psum(rr.executed, "model")
         reclaimed = jax.lax.psum(jnp.asarray(n_gc, jnp.int32), "model")
-        return state, executed, reclaimed
+        # per-shard pressure row (pure local math; the P("model") output
+        # layout stacks the rows — no collective)
+        pressure = balance.shard_pressure(state, cfg, base_pid=base_pid)
+        return state, executed, reclaimed, pressure[None]
 
-    fn = shard_map(local, mesh, (st_specs, P()), (st_specs, P(), P()))
+    fn = shard_map(local, mesh, (st_specs, P()),
+                   (st_specs, P(), P(), P("model")))
+    return jax.jit(fn)
+
+
+def make_sharded_migrate(cfg: UBISConfig, mesh: Mesh, jobs: int = 8):
+    """Builds a jitted cross-shard posting migration round:
+    (state, src_pids (B,), dst_shards (B,), valid (B,)) ->
+    (state, migrated (B,) bool).
+
+    The rebalance data plane (the paper's "imbalanced distribution"
+    countermeasure lifted to the pod level): a saturated shard's hot
+    sub-pool hands whole postings to shards with free capacity, picked
+    host-side by ``api.rebalance.RebalancePlanner`` from the pressure
+    stats the background round reports.  One round, three phases:
+
+      * **extraction** — the owner shard gathers each migrating tile
+        (vectors, ids, slot validity, lengths, centroid, PQ codes +
+        pinned codebook slot) and replicates it with a one-hot psum
+        (exactly one shard contributes per job, the same discipline as
+        the insert round's id-map merge).  Only postings that are
+        allocated + NORMAL move — a posting the background round marked
+        or retired in the meantime is silently skipped.  The neighbour
+        row is NOT carried: its pids are shard-local (the sharded
+        background rounds write local ids), so on the receiver they
+        would alias unrelated postings — the landed posting starts with
+        an empty row, like the NO_SUCC treatment of its recorder word;
+      * **installation** — the receiver shard admits jobs through the
+        same sequential free-stack grant scan the background round uses
+        (jobs granted in batch order while local slots last), writes the
+        tile verbatim into the popped slot (no repacking: PQ codes stay
+        byte-identical to their pinned-slot encode), and claims the
+        recorder word at the round's version;
+      * **hand-off** — the donor retires its copy (DELETED at this
+        version, NO successors: ``id_loc`` is repointed in this same
+        program, and cross-shard successor pointers would break the
+        per-shard GC sweep's locality contract), and every shard
+        computes the identical ``id_loc`` rewrite from the replicated
+        payload — the ``make_sharded_delete`` replica discipline, so the
+        id map needs no extra merge.
+
+    Tiles move through psums sized (B, C, d) etc. with B = ``jobs`` —
+    a few postings per tick, independent of pool size.  The free stack
+    returns fail-safe EMPTY per the sharded-state contract.
+    """
+    st_specs = index_specs(cfg)
+    C = cfg.capacity
+
+    def local(state: IndexState, src_pids, dst_shards, valid):
+        my = jax.lax.axis_index("model").astype(jnp.int32)
+        n_shard = _axis_size("model")
+        M_local = state.lengths.shape[0]
+        base_pid = my * M_local
+        ver = state.global_version + jnp.uint32(1)
+        B = src_pids.shape[0]
+        src_pids = jnp.asarray(src_pids, jnp.int32)
+        dst_shards = jnp.asarray(dst_shards, jnp.int32)
+
+        # local free view (same entry discipline as the background round)
+        state = rebuild_free_stack(state)
+
+        # replicated job sanity: in-range, deduped, actually cross-shard
+        src_shard = src_pids // M_local
+        job_ok = (valid & (src_pids >= 0)
+                  & (src_pids < n_shard * M_local)
+                  & vm.first_occurrence_mask(src_pids)
+                  & (dst_shards >= 0) & (dst_shards < n_shard)
+                  & (dst_shards != src_shard))
+
+        # ---- donor extraction: one-hot psum replicates each payload ---
+        src_local = src_pids - base_pid
+        sl = jnp.clip(src_local, 0, M_local - 1)
+        status = vm.unpack_status(state.rec_meta)
+        donate = (job_ok & (src_local >= 0) & (src_local < M_local)
+                  & state.allocated[sl] & (status[sl] == STATUS_NORMAL))
+
+        def rep(x, mask):
+            contrib = jnp.where(mask.reshape((B,) + (1,) * (x.ndim - 1)),
+                                x, jnp.zeros((), x.dtype))
+            return jax.lax.psum(contrib, "model")
+
+        vec_b = rep(state.vectors[sl], donate)
+        ids_b = rep(state.ids[sl], donate)
+        sv_b = rep(state.slot_valid[sl].astype(jnp.int32), donate) > 0
+        used_b = rep(state.used[sl], donate)
+        len_b = rep(state.lengths[sl], donate)
+        cent_b = rep(state.centroids[sl], donate)
+        codes_b = rep(state.codes[sl].astype(jnp.int32),
+                      donate).astype(jnp.uint8)
+        pslot_b = rep(state.pq_posting_slot[sl], donate)
+        movable = jax.lax.psum(donate.astype(jnp.int32), "model") > 0
+
+        # ---- receiver admission: sequential free-stack grant scan -----
+        want = movable & (dst_shards == my)
+
+        def grant_step(off, w):
+            g = w & (off < state.free_top)
+            return off + g.astype(jnp.int32), (g, off)
+
+        _, (grant_l, starts) = jax.lax.scan(grant_step, jnp.int32(0), want)
+        idx = state.free_top - 1 - starts
+        new_local = jnp.where(
+            grant_l, state.free_list[jnp.clip(idx, 0, M_local - 1)], -1)
+        # replicate the landing pid (one-hot psum from the receiver)
+        new_global = jax.lax.psum(
+            jnp.where(grant_l, new_local + base_pid, 0), "model")
+        migrated = jax.lax.psum(grant_l.astype(jnp.int32), "model") > 0
+        new_global = jnp.where(migrated, new_global, -1)
+
+        # ---- install on the receiver ----------------------------------
+        tgt = oob(new_local, grant_l, M_local)
+        vectors = state.vectors.at[tgt].set(vec_b, mode="drop")
+        ids_arr = state.ids.at[tgt].set(ids_b, mode="drop")
+        slot_valid = state.slot_valid.at[tgt].set(sv_b, mode="drop")
+        used = state.used.at[tgt].set(used_b, mode="drop")
+        lengths = state.lengths.at[tgt].set(len_b, mode="drop")
+        centroids = state.centroids.at[tgt].set(cent_b, mode="drop")
+        # fresh empty neighbour row: the donor's row holds shard-LOCAL
+        # pids, meaningless (aliasing) in the receiver's pool
+        nbrs = state.nbrs.at[tgt].set(
+            jnp.full((B, state.nbrs.shape[1]), -1, jnp.int32),
+            mode="drop")
+        codes = state.codes.at[tgt].set(codes_b, mode="drop")
+        pq_posting_slot = state.pq_posting_slot.at[tgt].set(pslot_b,
+                                                            mode="drop")
+        rec_meta = state.rec_meta.at[tgt].set(
+            vm.pack_meta(jnp.uint32(STATUS_NORMAL), ver), mode="drop")
+        rec_succ = state.rec_succ.at[tgt].set(
+            jnp.uint32((NO_SUCC << 16) | NO_SUCC), mode="drop")
+        allocated = state.allocated.at[tgt].set(True, mode="drop")
+
+        # ---- donor retirement (no successors: id_loc is already new) --
+        retire = donate & migrated
+        rec_meta = vm.transition(rec_meta, jnp.where(retire, sl, -1),
+                                 STATUS_DELETED,
+                                 jnp.broadcast_to(ver, (B,)))
+        rec_succ = vm.set_successors(rec_succ, jnp.where(retire, sl, -1),
+                                     jnp.full((B,), -1, jnp.int32),
+                                     jnp.full((B,), -1, jnp.int32))
+
+        # ---- replicated id map: identical rewrite on every shard ------
+        ids_flat = ids_b.reshape(B * C)
+        live_flat = ((sv_b & migrated[:, None]).reshape(B * C)
+                     & (ids_flat >= 0))
+        new_flat = (new_global[:, None] * C
+                    + jnp.arange(C, dtype=jnp.int32)[None, :]).reshape(-1)
+        id_loc = state.id_loc.at[
+            oob(jnp.clip(ids_flat, 0, cfg.max_ids - 1), live_flat,
+                cfg.max_ids)].set(new_flat, mode="drop")
+
+        state = dataclasses_replace(
+            state, vectors=vectors, ids=ids_arr, slot_valid=slot_valid,
+            used=used, lengths=lengths, centroids=centroids, nbrs=nbrs,
+            codes=codes, pq_posting_slot=pq_posting_slot,
+            rec_meta=rec_meta, rec_succ=rec_succ, allocated=allocated,
+            id_loc=id_loc, free_top=jnp.int32(0),  # fail-safe EMPTY
+            global_version=ver)
+        return state, migrated
+
+    fn = shard_map(local, mesh, (st_specs, P(), P(), P()),
+                   (st_specs, P()))
+    jfn = jax.jit(fn, donate_argnums=(0,))
+
+    def checked(state, src_pids, dst_shards, valid):
+        # the batch width is baked into the compiled program; a caller
+        # passing a different width would silently recompile per shape
+        if src_pids.shape[0] != jobs:
+            raise ValueError(f"migrate round built for jobs={jobs}, "
+                             f"got batch of {src_pids.shape[0]}")
+        return jfn(state, src_pids, dst_shards, valid)
+
+    return checked
+
+
+def make_sharded_exact(cfg: UBISConfig, mesh: Mesh, k: int):
+    """Builds a jitted exact top-k oracle over the sharded live contents:
+    (state, queries) -> (ids, scores) — the ``shard_map``'d form of
+    ``search.brute_force``.
+
+    Each shard brute-force scans the posting slots it owns (full
+    slot-validity + visibility masking) plus its 1/S slice of the
+    replicated vector cache, takes a local top-k FROM ITS OWN id rows
+    (no take-along-axis on a replicated row under GSPMD — the
+    partial-sum id-scaling trap this replaces), and one all-gather +
+    merge produces the global result.  Queries are replicated: the
+    oracle is eval-only, so data-axis padding buys nothing.
+    """
+    st_specs = index_specs(cfg)
+
+    def local(state: IndexState, queries):
+        n_shard = _axis_size("model")
+        my = jax.lax.axis_index("model")
+        queries = queries.astype(jnp.float32)
+        vis = vm.visible(state.rec_meta, state.allocated,
+                         state.global_version)
+        valid = state.slot_valid & vis[:, None]
+        s = ref.posting_scan(queries, state.vectors, valid)  # (Q, M_local*C)
+        ids_row = state.ids.reshape(-1)
+        # cache slice: the same ownership split as the sharded search
+        cvs, cval_own, cid = _owned_cache_slice(state, my, n_shard)
+        cs = ref.centroid_score(queries, cvs)
+        cs = jnp.where(cval_own[None, :], cs, BIG)
+        scores = jnp.concatenate([s, cs], axis=1)
+        flat = jnp.concatenate([ids_row, cid])
+        ids2d = jnp.broadcast_to(flat[None, :],
+                                 (queries.shape[0], flat.shape[0]))
+        kl = min(k, scores.shape[1])
+        s_loc, i_loc = _local_topk(scores, ids2d, kl)
+        s_all = jax.lax.all_gather(s_loc, "model", axis=1, tiled=True)
+        i_all = jax.lax.all_gather(i_loc, "model", axis=1, tiled=True)
+        sf, idf = _local_topk(s_all, i_all, k)
+        return jnp.where(sf < BIG / 2, idf, -1), sf
+
+    fn = shard_map(local, mesh, (st_specs, P()), (P(), P()))
     return jax.jit(fn)

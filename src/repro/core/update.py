@@ -327,6 +327,43 @@ def insert_round(state: IndexState, cfg: UBISConfig, vecs, ids, valid,
     return state, result, touched
 
 
+def apply_tombstones(state: IndexState, cfg: UBISConfig, safe_ids, loc,
+                     in_post, in_cache, *, base=0):
+    """The shared delete kernel (UBIS semantics), parameterized by the
+    caller's owner span.
+
+    ``loc`` carries GLOBAL flat tile locations; only locations inside
+    ``[base, base + span)`` (``span`` = this state's local pool in flat
+    slots) are written to the tile arrays — the owner-span masking the
+    sharded round needs, a no-op for the single-device caller
+    (``base=0``, span = the whole pool).  The cache and ``id_loc``
+    updates are computed from the (replicated) inputs unconditionally,
+    which is what keeps the sharded replicas in sync with zero
+    collectives.  Used by both ``delete_round`` and
+    ``sharded.make_sharded_delete`` so the two cannot drift.
+    """
+    C = cfg.capacity
+    M_local = state.lengths.shape[0]
+    span = M_local * C
+    lloc = loc - base
+    mine = in_post & (lloc >= 0) & (lloc < span)
+    flat = oob(lloc, mine, span)
+    slot_valid = _flat_set(state.slot_valid, flat,
+                           jnp.zeros(loc.shape, jnp.bool_))
+    pid = oob(lloc // C, mine, M_local)
+    lengths = state.lengths.at[pid].add(-1, mode="drop")
+    cslot = oob(-2 - loc, in_cache, cfg.cache_capacity)
+    cache_valid = state.cache_valid.at[cslot].set(False, mode="drop")
+    done = in_post | in_cache
+    id_loc = state.id_loc.at[oob(safe_ids, done, cfg.max_ids)].set(
+        -1, mode="drop")
+    state = dataclasses_replace(
+        state, slot_valid=slot_valid, lengths=lengths,
+        cache_valid=cache_valid, id_loc=id_loc,
+        global_version=state.global_version + jnp.uint32(1))
+    return state, done
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def delete_round(state: IndexState, cfg: UBISConfig, del_ids, valid):
     """Mark a padded batch of external ids as deleted (tombstones)."""
@@ -346,20 +383,7 @@ def delete_round(state: IndexState, cfg: UBISConfig, del_ids, valid):
     else:
         blocked = jnp.zeros_like(valid)
 
-    MC = cfg.max_postings * C
-    flat = oob(loc, in_post, MC)
-    slot_valid = _flat_set(state.slot_valid, flat,
-                           jnp.zeros(loc.shape, jnp.bool_))
-    pid = oob(loc // C, in_post, cfg.max_postings)
-    lengths = state.lengths.at[pid].add(-1, mode="drop")
-    cslot = oob(-2 - loc, in_cache, cfg.cache_capacity)
-    cache_valid = state.cache_valid.at[cslot].set(False, mode="drop")
-    done = in_post | in_cache
-    id_loc = state.id_loc.at[oob(safe, done, cfg.max_ids)].set(-1, mode="drop")
-    state = dataclasses_replace(
-        state, slot_valid=slot_valid, lengths=lengths,
-        cache_valid=cache_valid, id_loc=id_loc,
-        global_version=state.global_version + jnp.uint32(1))
+    state, done = apply_tombstones(state, cfg, safe, loc, in_post, in_cache)
     return state, done, blocked
 
 

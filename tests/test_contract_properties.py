@@ -1,0 +1,85 @@
+"""Property tests for the ``StreamingIndex`` engine contract.
+
+One differential harness (``contract_harness.run_program``) drives a
+seed-deterministic random interleaving of insert / delete / search /
+tick / flush through EVERY ``make_index`` engine — the 1-shard-mesh
+sharded driver included — asserting live-multiset equality against a
+pure-Python oracle and a recall@k floor vs the engine's own ``exact()``
+after every tick.  The quick suite runs one program per engine; with
+``hypothesis`` installed a slow-marked fuzz layer draws more
+(engine, seed) pairs from the same generator.
+
+The multi-shard form of the same program (where the interleaving also
+exercises the cross-shard migrate round) lives in ``test_rebalance.py``
+— it needs a fake multi-device platform, hence a subprocess.
+"""
+import numpy as np
+import pytest
+
+from repro.api import ENGINES, make_index
+from repro.core import UBISConfig
+
+from contract_harness import make_clustered, run_program
+
+DIM = 16
+N_DATA = 2600
+
+
+def _cfg(**kw):
+    # nprobe = max_postings: searches probe everything, so the recall
+    # floor measures the update plane's integrity, not probe luck
+    base = dict(dim=DIM, max_postings=128, capacity=96, l_min=10,
+                l_max=80, nprobe=128, max_ids=1 << 13,
+                cache_capacity=2048, use_pallas="off")
+    base.update(kw)
+    return UBISConfig(**base)
+
+
+def _build(engine, data, seed):
+    import jax
+    n_seed = 300
+    kw = dict(seed_ids=np.arange(n_seed), round_size=256,
+              bg_ops_per_round=8, insert_retries=4, seed=seed,
+              max_nodes=1 << 13, beam=24)
+    if engine == "ubis-sharded":
+        kw["mesh"] = jax.make_mesh((1, 1), ("data", "model"))
+    idx = make_index(engine, _cfg(), data[:n_seed], **kw)
+    seed_ids = (np.arange(n_seed)
+                if engine in ("spann", "freshdiskann") else None)
+    return idx, seed_ids
+
+
+def _run(engine, seed):
+    data = make_clustered(N_DATA, d=DIM, k=10, seed=100 + seed)
+    idx, seed_ids = _build(engine, data, seed)
+    oracle, stats = run_program(engine, idx, data, seed,
+                                seed_ids=seed_ids)
+    return stats
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_contract_random_interleaving(engine):
+    stats = _run(engine, seed=0)
+    assert stats["inserted"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", [1, 2])
+def test_contract_random_interleaving_more_seeds(engine, seed):
+    _run(engine, seed)
+
+
+# ---- hypothesis layer (skips gracefully when not installed) ----------
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @pytest.mark.slow
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(engine=st.sampled_from(ENGINES), seed=st.integers(3, 2 ** 12))
+    def test_contract_random_interleaving_fuzz(engine, seed):
+        _run(engine, seed)
+except ImportError:  # pragma: no cover - hypothesis is optional
+    pass

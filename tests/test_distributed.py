@@ -54,12 +54,15 @@ def test_sharded_ubis_matches_single_device():
         ins = make_sharded_insert(cfg, mesh)
         nv = (cents[r.integers(0, 12, 128)]
               + r.normal(size=(128, 16))).astype(np.float32)
-        st2, accm = ins(st, jnp.asarray(nv),
-                        jnp.arange(2000, 2128, dtype=jnp.int32),
-                        jnp.ones(128, bool))
+        st2, accm, routed = ins(st, jnp.asarray(nv),
+                                jnp.arange(2000, 2128, dtype=jnp.int32),
+                                jnp.ones(128, bool))
         accm = np.asarray(accm)
+        routed = np.asarray(routed)
         assert accm.shape == (128,)
         assert int(accm.sum()) > 64
+        # routed pids are GLOBAL and in range wherever a job landed
+        assert ((routed[accm] >= 0) & (routed[accm] < 256)).all()
         found2, _ = search(st2, jnp.asarray(nv[:32]))
         hits = sum(2000 + i in set(f.tolist())
                    for i, f in enumerate(np.asarray(found2)))
@@ -152,15 +155,20 @@ def test_sharded_background_round_splits_and_stays_consistent():
         bg = make_sharded_background(cfg, mesh, bg_ops=8)
         total = 0
         for _ in range(12):
-            st, ex, _gc = bg(st, jnp.uint32(0))
+            st, ex, _gc, press = bg(st, jnp.uint32(0))
             total += int(ex)
             if int(ex) == 0:
                 break
         assert total > 0
+        # pressure rows: one per shard, live+free bounded by the pool
+        press = np.asarray(press)
+        assert press.shape == (4, 4)
+        assert (press[:, 0] + press[:, 1] <= 64).all()
+        assert press[:, 0].sum() > 0
         # a quiescent tick must round-trip rec_succ EXACTLY — the
         # entry-localize/exit-rebase may only rewrite words the round
         # touched (cross-shard successor pointers survive untouched)
-        st2, ex2, _gc2 = bg(st, jnp.uint32(0))
+        st2, ex2, _gc2, _p2 = bg(st, jnp.uint32(0))
         assert int(ex2) == 0
         assert (np.asarray(jax.device_get(st).rec_succ)
                 == np.asarray(jax.device_get(st2).rec_succ)).all()

@@ -1,0 +1,373 @@
+"""Cross-shard rebalance property tests (multi-device, subprocess).
+
+Four layers over a real fake-CPU pod mesh:
+  * migrate-round invariants — after ``make_sharded_migrate`` no id is
+    lost or duplicated across shards, ``id_loc`` stays replica-identical
+    on every device, PQ codes still satisfy
+    ``codes == encode(codebooks[slot], vectors)`` on migrated postings,
+    donors retire with NO successor pointers, and garbage jobs
+    (out-of-range, dst==src, non-NORMAL donors) are exact no-ops;
+  * saturated-donor convergence — a hot stream that saturates one
+    shard's sub-pool drops below the planner watermark once rebalance
+    ticks run, with the live multiset intact;
+  * the acceptance criterion — a Zipfian-routed stream keeps max/min
+    shard occupancy <= 1.5 and recall@10 within 2 points of the
+    uniform-stream run;
+  * the engine-contract differential program (contract_harness) on a
+    real 4-shard mesh, where the interleaving exercises the migrate
+    round alongside every other op.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(ROOT, "src"),
+                    os.path.join(ROOT, "tests")]),
+               TF_CPP_MIN_LOG_LEVEL="2")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=540)
+    assert r.returncode == 0, f"STDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_planner_vector_mode_cannot_ping_pong():
+    """Pure-numpy planner properties (no devices needed): a vector-mode
+    move must fit HALF the gap to the shard actually receiving — not
+    the global min, which may be ineligible — so a move can never push
+    the receiver past the donor, and repeated planning over a simulated
+    state always reaches an empty plan (convergence)."""
+    import numpy as np
+    from repro.api.rebalance import RebalancePlanner
+
+    pool = 64
+    pl = RebalancePlanner(3, pool, max_moves=8, min_gap=80)
+    # shard 2 is lightest but has NO free slot; shard 1 receives.  The
+    # 0->1 gap is 101, so only postings of length <= 50 may move — and
+    # shard 0 only has length-77 postings: the plan must be EMPTY
+    # (moving 77 would overshoot shard 1 past shard 0 and churn forever)
+    press = np.array([[13, 51, 0, 1001], [12, 52, 0, 900], [1, 0, 0, 100]])
+    lengths = np.zeros(3 * pool, np.int32)
+    movable = np.zeros(3 * pool, bool)
+    lengths[:13] = 77
+    movable[:13] = True
+    src, dst = pl.plan(press, lengths, movable)
+    assert len(src) == 0
+    # widen the 0->1 gap: now a 77 fits half of it (77 <= 82); ONE move
+    # ships the longest fitting posting to shard 1, the shrunken gap
+    # (964-77 vs 800+77: gap 10) admits nothing more
+    lengths[12] = 40
+    press[0, 3] = 12 * 77 + 40
+    press[1, 3] = 800
+    src, dst = pl.plan(press, lengths, movable)
+    assert list(dst) == [1] and len(src) == 1
+    assert lengths[src[0]] <= (964 - 800) / 2
+
+    # parked-cache backlog counts toward saturation: a shard whose live
+    # postings sit below the watermark but with a deep parked backlog
+    # (pressure column 2) must still shed postings
+    pl2 = RebalancePlanner(2, pool, watermark=0.85, min_gap=80,
+                           max_moves=4)
+    live0 = int(0.7 * pool)                 # below watermark on its own
+    press2 = np.array([[live0, pool - live0, 40 * 80, live0 * 60],
+                       [4, pool - 4, 0, 240]])
+    assert pl2.needs(press2)
+    lengths2 = np.zeros(2 * pool, np.int32)
+    movable2 = np.zeros(2 * pool, bool)
+    lengths2[:live0] = 60
+    movable2[:live0] = True
+    src2, dst2 = pl2.plan(press2, lengths2, movable2)
+    assert len(src2) > 0 and set(dst2) == {1}
+    # without the backlog the same rows are quiet (gap below ratio gate
+    # is irrelevant here: saturation was the only trigger)
+    press2[0, 2] = 0
+    press2[1, 3] = press2[0, 3]             # no vector gap either
+    assert not pl2.needs(press2)
+
+    # convergence: repeatedly apply the plan to a simulated skewed pool;
+    # the planner must go quiet, and within a bounded number of rounds
+    rng = np.random.default_rng(0)
+    S = 4
+    pl = RebalancePlanner(S, pool, max_moves=8, min_gap=80)
+    lengths = np.zeros(S * pool, np.int32)
+    movable = np.zeros(S * pool, bool)
+    lengths[:50] = rng.integers(10, 80, 50)     # all mass on shard 0
+    movable[:50] = True
+    for rounds in range(64):
+        live = np.array([(movable[s * pool:(s + 1) * pool]).sum()
+                         for s in range(S)])
+        occ = np.array([lengths[s * pool:(s + 1) * pool][
+            movable[s * pool:(s + 1) * pool]].sum() for s in range(S)])
+        press = np.stack([live, pool - live, 0 * live, occ], axis=1)
+        src, dst = pl.plan(press, lengths, movable)
+        if len(src) == 0:
+            break
+        for p, r in zip(src, dst):
+            free = r * pool + np.flatnonzero(
+                ~movable[r * pool:(r + 1) * pool])[0]
+            lengths[free], movable[free] = lengths[p], True
+            lengths[p], movable[p] = 0, False
+    else:
+        pytest.fail("planner never converged")
+    occ = np.array([lengths[s * pool:(s + 1) * pool].sum()
+                    for s in range(S)])
+    assert occ.max() - occ.min() <= 80 or (
+        occ.max() <= max(occ.min(), 1) * 1.2), occ
+    assert rounds < 32, rounds
+
+
+@pytest.mark.slow
+def test_migrate_round_invariants():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core import UBISConfig, UBISDriver
+        from repro.core import version_manager as vm
+        from repro.core.sharded import index_specs, make_sharded_migrate
+        from repro.quant import pq
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = UBISConfig(dim=16, max_postings=256, capacity=96,
+                         max_ids=1 << 14, use_pallas="off", use_pq=True,
+                         pq_m=4, pq_ksub=16, rerank_k=128)
+        r = np.random.default_rng(7)
+        cents = r.normal(size=(10, 16)) * 6
+        data = (cents[r.integers(0, 10, 2500)]
+                + r.normal(size=(2500, 16))).astype(np.float32)
+        drv = UBISDriver(cfg, data[:500], round_size=256,
+                         bg_ops_per_round=8)
+        drv.insert(data, np.arange(2500)); drv.flush()
+
+        def audit(full):
+            status = np.asarray(vm.unpack_status(full.rec_meta))
+            vis = np.asarray(full.allocated) & (status != 3)
+            ids = np.asarray(full.ids); sv = np.asarray(full.slot_valid)
+            where = {}
+            for p in np.flatnonzero(vis):
+                for c in np.flatnonzero(sv[p]):
+                    i = int(ids[p, c])
+                    assert i not in where, f"dup id {i}"
+                    where[i] = p * cfg.capacity + c
+            cv = np.asarray(full.cache_valid)
+            ci = np.asarray(full.cache_ids)
+            for s in np.flatnonzero(cv):
+                where[int(ci[s])] = -2 - s
+            il = np.asarray(full.id_loc)
+            tracked = {int(i): int(il[i])
+                       for i in np.flatnonzero(il != -1)}
+            assert tracked == where, (len(tracked), len(where))
+            return where
+
+        sh = jax.tree_util.tree_map(
+            lambda sp: NamedSharding(mesh, sp), index_specs(cfg),
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        st = jax.device_put(drv.state, sh)
+        before = audit(jax.device_get(st))
+
+        # everything seeded on shard 0 (contiguous pids): migrate 4 live
+        # postings to shards 1..3, plus garbage lanes that must no-op
+        lens = np.asarray(drv.state.lengths)
+        status = np.asarray(vm.unpack_status(drv.state.rec_meta))
+        live = np.flatnonzero(np.asarray(drv.state.allocated)
+                              & (status == 0) & (lens > 0))
+        live = live[live < 64]            # shard-0 donors
+        assert len(live) >= 7, len(live)
+        B = 8
+        src = np.full(B, -1, np.int32); dst = np.zeros(B, np.int32)
+        valid = np.zeros(B, bool)
+        src[:4] = live[:4]; dst[:4] = [1, 2, 3, 1]; valid[:4] = True
+        src[4], dst[4], valid[4] = live[0], 2, True    # dup src: no-op
+        src[5], dst[5], valid[5] = live[5], 0, True    # dst == src shard
+        src[6], dst[6], valid[6] = 9999, 1, True       # out of range
+        src[7], dst[7], valid[7] = live[6], 2, True    # valid extra move
+        mig = make_sharded_migrate(cfg, mesh, jobs=B)
+        st, moved = mig(st, jnp.asarray(src), jnp.asarray(dst),
+                        jnp.asarray(valid))
+        moved = np.asarray(moved)
+        assert moved[:4].all() and moved[7], moved
+        assert not moved[4] and not moved[5] and not moved[6], moved
+
+        # a retired donor (now DELETED) must be an exact no-op
+        il_before = np.asarray(jax.device_get(st.id_loc))
+        st, again = mig(st, jnp.asarray(src[:1].repeat(B)),
+                        jnp.asarray(np.full(B, 3, np.int32)),
+                        jnp.asarray(np.ones(B, bool)))
+        assert not np.asarray(again).any()
+        assert (np.asarray(jax.device_get(st.id_loc)) == il_before).all()
+
+        # id_loc replica-identical on EVERY device
+        ref = None
+        for s in st.id_loc.addressable_shards:
+            d = np.asarray(s.data)
+            ref = d if ref is None else ref
+            assert (d == ref).all(), "id_loc replicas diverged"
+
+        full = jax.device_get(st)
+        after = audit(full)
+        assert set(after) == set(before), "ids lost or fabricated"
+        # moved postings landed on their target shards, donors retired
+        # with NO successors
+        status = np.asarray(vm.unpack_status(full.rec_meta))
+        s1, s2 = (np.asarray(x) for x in vm.succ_ids(full.rec_succ))
+        for j in np.flatnonzero(moved):
+            p = src[j]
+            assert status[p] == 3, f"donor {p} not retired"
+            assert s1[p] == -1 and s2[p] == -1, "migrate set successors"
+        nbrs = np.asarray(full.nbrs)
+        for j in np.flatnonzero(moved):
+            tids = np.asarray(full.ids)[src[j]]
+            tsv = np.asarray(full.slot_valid)[src[j]]
+            for i in tids[tsv]:
+                new_pid = after[int(i)] // cfg.capacity
+                assert new_pid // 64 == dst[j], (j, int(i), new_pid)
+                # landed postings start with an EMPTY neighbour row —
+                # the donor's row held shard-local pids that would
+                # alias unrelated postings in the receiver's pool
+                assert (nbrs[new_pid] == -1).all(), nbrs[new_pid]
+        # PQ invariant on every live posting (migrated included):
+        # codes == encode(codebooks[pinned slot], stored vectors)
+        vis = np.asarray(full.allocated) & (status != 3)
+        for p in np.flatnonzero(vis):
+            slot = int(np.asarray(full.pq_posting_slot)[p])
+            want = np.asarray(pq.encode_tiles(
+                jnp.asarray(full.pq_codebooks)[slot],
+                jnp.asarray(full.vectors)[p][None].astype(jnp.float32)))[0]
+            sv = np.asarray(full.slot_valid)[p]
+            got = np.asarray(full.codes)[p]
+            assert (got[:, sv] == want[:, sv]).all(), f"pq drift at {p}"
+        print("OK", int(moved.sum()), "moved")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_saturated_donor_converges_below_watermark():
+    out = _run("""
+        import numpy as np, jax
+        from repro.api import ShardedUBISDriver
+        from repro.core import UBISConfig
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = UBISConfig(dim=16, max_postings=256, capacity=96,
+                         max_ids=1 << 14, use_pallas="off")
+        r = np.random.default_rng(11)
+        # ONE tight cluster family: every insert routes to the seed
+        # shard, the canonical saturated-donor stream
+        cents = r.normal(size=(4, 16)) * 4
+        data = (cents[r.integers(0, 4, 5000)]
+                + r.normal(size=(5000, 16))).astype(np.float32)
+        drv = ShardedUBISDriver(cfg, data[:400], mesh=mesh,
+                                round_size=256, bg_ops_per_round=8,
+                                gc_lag=4, rebalance_watermark=0.8)
+        rej = 0
+        for off in range(0, 5000, 1000):
+            rej += drv.insert(data[off:off + 1000],
+                              np.arange(off, off + 1000)).rejected
+            drv.flush(max_ticks=20)
+        assert rej == 0, rej
+        drv.flush(max_ticks=60)
+        press = drv.shard_pressure()
+        frac = press[:, 0] / 64.0
+        assert (frac <= 0.8 + 1e-9).all(), frac
+        occ = drv.shard_occupancy()
+        ratio = occ.max() / max(occ.min(), 1)
+        assert ratio <= 1.5, (ratio, occ)
+        assert drv.stats["migrated"] > 0
+        assert drv.live_count() == 5000
+        print("OK", occ.tolist(), drv.stats["migrated"])
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_zipf_stream_matches_uniform_acceptance():
+    """Acceptance: Zipfian-routed inserts on a multi-shard mesh keep
+    max/min occupancy <= 1.5 and recall@10 within 2 points of the
+    uniform-stream run."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.api import ShardedUBISDriver
+        from repro.core import UBISConfig, metrics
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = UBISConfig(dim=16, max_postings=256, capacity=96,
+                         max_ids=1 << 14, use_pallas="off")
+        r = np.random.default_rng(5)
+        K = 12
+        cents = r.normal(size=(K, 16)) * 5
+
+        def stream(kind, n=4000):
+            if kind == "uniform":
+                a = r.integers(0, K, n)
+            else:
+                w = 1.0 / (np.arange(K) + 1) ** 1.5
+                a = r.choice(K, size=n, p=w / w.sum())
+            return (cents[a] + r.normal(size=(n, 16))).astype(np.float32)
+
+        results = {}
+        for kind in ("uniform", "zipf"):
+            data = stream(kind)
+            drv = ShardedUBISDriver(cfg, data[:400], mesh=mesh,
+                                    round_size=256, bg_ops_per_round=8,
+                                    gc_lag=4)
+            for off in range(0, 4000, 1000):
+                drv.insert(data[off:off + 1000],
+                           np.arange(off, off + 1000))
+                drv.flush(max_ticks=20)
+            drv.flush(max_ticks=60)
+            q = stream(kind, 64)
+            found, _ = drv.search(q, 10)
+            true, _ = drv.exact(q, 10)
+            occ = drv.shard_occupancy()
+            results[kind] = dict(
+                recall=metrics.recall_at_k(np.asarray(found),
+                                           np.asarray(true)),
+                ratio=occ.max() / max(occ.min(), 1),
+                occ=occ.tolist(),
+                migrated=int(drv.stats["migrated"]))
+        print(results)
+        assert results["zipf"]["ratio"] <= 1.5, results
+        assert results["zipf"]["migrated"] > 0
+        assert (results["zipf"]["recall"]
+                >= results["uniform"]["recall"] - 0.02), results
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_contract_program_on_multishard_mesh():
+    """The engine-contract differential program (contract_harness) on a
+    real 4-shard mesh: the random interleaving runs over the sharded
+    driver with rebalance enabled, so ticks exercise the migrate round
+    alongside insert/delete/search/flush — and the live multiset must
+    still match the pure-Python oracle exactly."""
+    out = _run("""
+        import numpy as np, jax
+        from contract_harness import make_clustered, run_program
+        from repro.api import make_index
+        from repro.core import UBISConfig
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = UBISConfig(dim=16, max_postings=256, capacity=96,
+                         l_min=10, l_max=80, nprobe=256, max_ids=1 << 13,
+                         cache_capacity=2048, use_pallas="off")
+        data = make_clustered(2600, d=16, k=10, seed=104)
+        idx = make_index("ubis-sharded", cfg, data[:300], mesh=mesh,
+                         round_size=256, bg_ops_per_round=8,
+                         insert_retries=4, seed=4)
+        oracle, stats = run_program("ubis-sharded", idx, data, seed=4)
+        assert idx.stats["migrated"] > 0, "program never migrated"
+        print("OK", stats, int(idx.stats["migrated"]))
+    """)
+    assert "OK" in out
