@@ -31,13 +31,17 @@ ID_KEYS = ("figure", "mode", "dataset", "batch", "fg", "bg",
 # figskew per-shard occupancy ratio max/mean (bounded by the shard
 # count, unlike max/min which explodes on an empty shard) — it gets the
 # tight quality tolerance: a rebalance regression shows up as the
-# zipf/on spread creeping toward the zipf/off ceiling.
+# zipf/on spread creeping toward the zipf/off ceiling.  The figmem
+# device-bytes columns are pinned the same way: a cold-tier regression
+# (spilling stops, or the watermark stops holding) reads as the tier-on
+# ``vec_device_mb`` / ``device_mb`` rows creeping back toward tier-off.
 METRICS = {"tps": "up", "qps": "up", "recall": "up", "final_recall": "up",
-           "small_frac": "down", "occ_spread": "down"}
+           "small_frac": "down", "occ_spread": "down",
+           "device_mb": "down", "vec_device_mb": "down"}
 TIMING_METRICS = {"tps", "qps"}
 # below this absolute scale, relative comparison is meaningless noise
 ABS_FLOOR = {"small_frac": 0.02, "recall": 0.05, "final_recall": 0.05,
-             "occ_spread": 0.0}
+             "occ_spread": 0.0, "device_mb": 0.1, "vec_device_mb": 0.02}
 
 
 def row_key(row: dict) -> tuple:

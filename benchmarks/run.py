@@ -21,7 +21,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--figures",
                     default="fig5,fig6,fig7,table4,fig8,fig9,figpq,"
-                            "figengines,figskew")
+                            "figengines,figskew,figmem")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
@@ -39,6 +39,7 @@ def main(argv=None) -> None:
         "figpq": figures.figpq_memory_recall,
         "figengines": figures.figengines_comparison,
         "figskew": figures.figskew_skewed_stream,
+        "figmem": figures.figmem_cold_tier,
     }
     wanted = [f.strip() for f in args.figures.split(",") if f.strip()]
     all_rows = []
@@ -109,6 +110,14 @@ def _headline(name: str, rows) -> str:
             off = last[("zipf", "off")]
             return (f"zipf occ_ratio on={on['occ_ratio']} "
                     f"off={off['occ_ratio']} recall on={on['recall']}")
+        if name == "figmem":
+            by = {r["variant"]: r for r in rows}
+            off_, on_ = by["tier-off"], by["tier-on"]
+            ratio = off_["vec_device_mb"] / max(on_["vec_device_mb"],
+                                               1e-9)
+            return (f"vec_device {off_['vec_device_mb']}->"
+                    f"{on_['vec_device_mb']}MB ({ratio:.1f}x) recall "
+                    f"{off_['recall']:.3f}->{on_['recall']:.3f}")
     except Exception as e:  # pragma: no cover
         return f"derived-error:{e}"
     return ""

@@ -30,11 +30,12 @@ ENGINES = ("ubis", "spfresh", "spann", "freshdiskann", "ubis-sharded")
 
 _DRIVER_KW = {"seed", "round_size", "bg_ops_per_round", "drain_per_tick",
               "insert_retries", "gc_lag", "reassign_after_split",
-              "pq_retrain_every"}
+              "pq_retrain_every", "tier_moves_per_tick",
+              "tier_rerank_host"}
 _UBIS_KW = _DRIVER_KW | {"fused_tick"}
 _SHARDED_KW = _DRIVER_KW | {"mesh", "shard_cache_scan", "rebalance",
                             "rebalance_watermark", "rebalance_ratio",
-                            "migrate_per_tick"}
+                            "migrate_per_tick", "route_alpha"}
 _SPANN_KW = {"seed", "round_size"}
 _GRAPH_KW = {"max_nodes", "degree", "beam", "alpha", "consolidate_every"}
 

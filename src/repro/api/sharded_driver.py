@@ -58,7 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import update
+from ..core import tier as tier_mod, update
 from ..core import version_manager as vm
 from ..core.build import initial_state
 from ..core.sharded import (index_specs, make_sharded_background,
@@ -93,7 +93,10 @@ class ShardedUBISDriver:
                  rebalance: bool = True,
                  rebalance_watermark: float = 0.85,
                  rebalance_ratio: float = 1.2,
-                 migrate_per_tick: int = 8):
+                 migrate_per_tick: int = 8,
+                 route_alpha: float = 0.0,
+                 tier_moves_per_tick: int = 32,
+                 tier_rerank_host: bool = True):
         if not cfg.is_ubis:
             raise ValueError("ShardedUBISDriver is UBIS-mode only "
                              "(SPFresh's lock model is single-device)")
@@ -122,7 +125,13 @@ class ShardedUBISDriver:
                               key=jax.random.key(seed))
         self.state: IndexState = jax.device_put(state, self._shardings)
 
-        self._insert_fn = make_sharded_insert(cfg, self.mesh)
+        # cold-tier plane (cfg.use_tier): pinned host pool + planner;
+        # per-shard accounting rides on contiguous pid blocks
+        self.tier = (tier_mod.TierManager(
+            cfg, max_moves=int(tier_moves_per_tick),
+            rerank_host=tier_rerank_host) if cfg.use_tier else None)
+        self._insert_fn = make_sharded_insert(cfg, self.mesh,
+                                              route_alpha=float(route_alpha))
         self._delete_fn = make_sharded_delete(cfg, self.mesh)
         self._background_fn = make_sharded_background(
             cfg, self.mesh, bg_ops=self.bg_ops,
@@ -216,6 +225,8 @@ class ShardedUBISDriver:
                 jnp.asarray(valid))
             accm = np.asarray(accm)[:n]
             n_acc += int(accm.sum())
+            if self.tier is not None:       # appends heat their target
+                self.tier.note_targets(np.asarray(routed)[:n][accm])
             if not accm.all():
                 rej_v.append(cv[:n][~accm])
                 rej_i.append(ci[:n][~accm])
@@ -249,11 +260,18 @@ class ShardedUBISDriver:
                nprobe: Optional[int] = None) -> SearchResult:
         q = np.asarray(queries, np.float32)
         t0 = time.perf_counter()
-        key = (k, nprobe)
+        # cold tier + host rerank: widen the final candidate set to
+        # rerank_k so the exact host pass has room to reorder (the
+        # device top-k orders spilled candidates by ADC score; narrower
+        # widths measurably cost recall on a mostly-cold index)
+        k_eff = (max(k, self.cfg.rerank_k)
+                 if self.tier is not None and self.tier.rerank_host
+                 else k)
+        key = (k_eff, nprobe)
         fn = self._search_fns.get(key)
         if fn is None:
             fn = self._search_fns[key] = make_sharded_search(
-                self.cfg, self.mesh, k=k, nprobe=nprobe,
+                self.cfg, self.mesh, k=k_eff, nprobe=nprobe,
                 shard_cache_scan=self._shard_cache_scan)
         Q = q.shape[0]
         pad = (-Q) % self._q_mult
@@ -262,6 +280,19 @@ class ShardedUBISDriver:
         found, scores = fn(self.state, jnp.asarray(q))
         found = np.asarray(found)[:Q]
         scores = np.asarray(scores)[:Q]
+        if self.tier is not None:
+            # search-heat: the postings holding the found candidates
+            # (the sharded search does not export its probe list)
+            safe = np.clip(found, 0, self.cfg.max_ids - 1)
+            loc = np.asarray(self.state.id_loc[jnp.asarray(safe)])
+            pid = loc[(found >= 0) & (loc >= 0)] // self.cfg.capacity
+            self.tier.note_probes(pid)
+            if self.tier.rerank_host and len(self.tier.pool):
+                found, scores = tier_mod.host_rerank(
+                    found, scores, q[:Q], self.tier.pool, loc,
+                    np.asarray(self.state.tier_spilled),
+                    self.cfg.capacity)
+            found, scores = found[:, :k], scores[:, :k]
         dt = time.perf_counter() - t0
         self.stats["search_time"] += dt
         self.stats["queries"] += Q
@@ -287,6 +318,7 @@ class ShardedUBISDriver:
         migrated = self._rebalance() if self.rebalance else 0
         drained = self._drain_cache()
         retrained = self._pq_retrain()
+        spilled, promoted = self._tier_step()
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed
@@ -297,15 +329,17 @@ class ShardedUBISDriver:
         # caller porting UBISDriver's flush check gets exactly that
         return TickReport(executed=executed, drained=drained,
                           migrated=migrated, gc=reclaimed,
-                          pq_retrained=retrained, seconds=dt)
+                          pq_retrained=retrained, spilled=spilled,
+                          promoted=promoted, seconds=dt)
 
     def flush(self, max_ticks: int = 200) -> int:
         """Tick until quiescent (no structural work, no migrations left
-        to plan, cache empty)."""
+        to plan, cache empty, no tier moves in flight)."""
         for i in range(max_ticks):
             r = self.tick()
             cache_n = int(np.asarray(self.state.cache_valid).sum())
-            if r.executed == 0 and r.migrated == 0 and cache_n == 0:
+            if (r.executed == 0 and r.migrated == 0 and cache_n == 0
+                    and r.spilled == 0 and r.promoted == 0):
                 return i + 1
         return max_ticks
 
@@ -331,10 +365,18 @@ class ShardedUBISDriver:
                                 np.zeros(pad, bool)])
         src = np.concatenate([src, np.full(pad, -1, np.int32)])
         dst = np.concatenate([dst, np.zeros(pad, np.int32)])
-        self.state, mig = self._migrate_fn(
+        self.state, mig, new_pids = self._migrate_fn(
             self.state, jnp.asarray(src), jnp.asarray(dst),
             jnp.asarray(valid))
-        n = int(np.asarray(mig).sum())
+        mig = np.asarray(mig)
+        if self.tier is not None:
+            # spilled postings migrate WITHOUT promotion: the device
+            # round carried codes + flags, the host pool entry follows
+            new_pids = np.asarray(new_pids)
+            for j in np.flatnonzero(mig):
+                if int(src[j]) in self.tier.pool:
+                    self.tier.pool.remap(int(src[j]), int(new_pids[j]))
+        n = int(mig.sum())
         self.stats["migrated"] += n
         return n
 
@@ -413,25 +455,101 @@ class ShardedUBISDriver:
         if self._ticks % self.pq_retrain_every:
             return 0
         from ..quant import pq
+        if self.tier is not None:
+            # promote spilled postings pinned to the evicted slot first
+            # (see tier.TierManager.promote_retrain_pinned); the retrain
+            # round below re-pins the canonical shardings
+            self.state, n = self.tier.promote_retrain_pinned(self.state)
+            self.stats["tier_promoted"] += n
         self._pq_key, k = jax.random.split(self._pq_key)
         st = pq.retrain_round(self.state, self.cfg, k)
         self.state = jax.device_put(st, self._shardings)
         self.stats["pq_retrains"] += 1
         return 1
 
+    # ---- cold-tier plane ----------------------------------------------
+
+    def _tier_step(self) -> tuple:
+        """Spill/promote planning + moves; re-pins the canonical
+        shardings after any mutation (the tier rounds are plain jit)."""
+        if self.tier is None:
+            return 0, 0
+        # decayed=True: the sharded background program runs (and decays
+        # the heat counters) every tick
+        st, n_s, n_p = self.tier.tick(self.state, decayed=True)
+        if st is not self.state:
+            self.state = jax.device_put(st, self._shardings)
+        self.stats["tier_spilled"] += n_s
+        self.stats["tier_promoted"] += n_p
+        self.stats["tier_resident"] = len(self.tier.pool)
+        return n_s, n_p
+
+    def force_spill(self, n: int) -> int:
+        """Spill the ``n`` coldest hot postings now (test hook)."""
+        if self.tier is None:
+            return 0
+        st, moved = self.tier.force_spill(self.state, n)
+        self.state = jax.device_put(st, self._shardings)
+        self.stats["tier_spilled"] += moved
+        self.stats["tier_resident"] = len(self.tier.pool)
+        return moved
+
+    def force_promote(self, n=None) -> int:
+        """Promote up to ``n`` spilled postings (all when None)."""
+        if self.tier is None:
+            return 0
+        st, moved = self.tier.force_promote(self.state, n)
+        self.state = jax.device_put(st, self._shardings)
+        self.stats["tier_promoted"] += moved
+        self.stats["tier_resident"] = len(self.tier.pool)
+        return moved
+
+    def tier_host_bytes_by_shard(self) -> np.ndarray:
+        """Host-pool bytes per shard (contiguous pid blocks) — the
+        per-shard tier-pool accounting."""
+        out = np.zeros(self.n_shards, np.int64)
+        if self.tier is not None:
+            pool_span = self.cfg.max_postings // self.n_shards
+            from ..core.types import tile_bytes
+            tb = tile_bytes(self.state)
+            for pid in self.tier.pool.pids():
+                out[int(pid) // pool_span] += tb
+        return out
+
     # ---- StreamingIndex protocol surface ------------------------------
 
     def snapshot(self) -> IndexState:
         """Gather to a single-device state with a canonical free stack
         (``update.ensure_free_stack`` asserts the contract — the sharded
-        rounds hand back a fail-safe EMPTY stack)."""
+        rounds hand back a fail-safe EMPTY stack).  With the cold tier
+        on, spilled float tiles are written back into the gathered copy
+        (flags stay set) so the snapshot is self-contained."""
         host = jax.device_get(self.state)
         st = jax.tree_util.tree_map(jnp.asarray, host)
+        if self.tier is not None:
+            st = self.tier.snapshot_fill(st)
         return update.ensure_free_stack(st)
 
+    def load_snapshot(self, state: IndexState) -> "ShardedUBISDriver":
+        """Adopt a ``snapshot()`` state: tier residency is re-derived
+        from the persisted flags (spilled tiles move back to the host
+        pool, device copies re-zeroed), then the state is re-pinned to
+        this driver's mesh.  Returns self."""
+        if self.tier is not None:
+            state = self.tier.adopt(state)
+        self.state = jax.device_put(state, self._shardings)
+        return self
+
     def memory_bytes(self) -> int:
+        """Total bytes across BOTH tiers (see ``memory_tiers``)."""
         from ..core.types import state_memory_bytes
         return state_memory_bytes(self.state)
+
+    def memory_tiers(self) -> dict:
+        """Device/host byte split; sums to ``memory_bytes()``."""
+        if self.tier is not None:
+            return self.tier.memory_tiers(self.state)
+        return {"device": self.memory_bytes(), "host": 0}
 
     def exact(self, queries, k: int) -> SearchResult:
         """Exact top-k over live contents (recall oracle) — a
@@ -445,8 +563,13 @@ class ShardedUBISDriver:
         if fn is None:
             fn = self._exact_fns[k] = make_sharded_exact(self.cfg,
                                                          self.mesh, k)
-        found, scores = fn(self.state,
-                           jnp.asarray(queries, jnp.float32))
+        queries = np.asarray(queries, np.float32)
+        found, scores = fn(self.state, jnp.asarray(queries))
+        if self.tier is not None:
+            # spilled postings were excluded device-side; merge the
+            # host-pool scan so the oracle stays exact under tiering
+            found, scores = self.tier.exact_merge(self.state, queries,
+                                                  found, scores, k)
         return SearchResult(ids=np.asarray(found),
                             scores=np.asarray(scores))
 

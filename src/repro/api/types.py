@@ -65,7 +65,9 @@ class TickReport:
     """Outcome of one background tick.
 
     ``migrated`` counts cross-shard posting migrations (the sharded
-    driver's rebalance stage); single-device engines leave it 0.
+    driver's rebalance stage); ``spilled``/``promoted`` count cold-tier
+    moves (float tiles demoted to / restored from the pinned host pool,
+    ``cfg.use_tier``).  Engines without those stages leave them 0.
     """
 
     executed: int = 0
@@ -74,6 +76,8 @@ class TickReport:
     migrated: int = 0
     gc: int = 0
     pq_retrained: int = 0
+    spilled: int = 0
+    promoted: int = 0
     seconds: float = 0.0
 
     def __getitem__(self, key: str):
@@ -106,6 +110,8 @@ class StreamingIndex(Protocol):
     def snapshot(self) -> Any: ...
 
     def memory_bytes(self) -> int: ...
+
+    def memory_tiers(self) -> Mapping: ...
 
     def exact(self, queries, k: int) -> SearchResult: ...
 

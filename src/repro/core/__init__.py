@@ -1,19 +1,21 @@
 """UBIS core: updatable balanced cluster index (the paper's contribution)."""
 from .types import (BackgroundRound, IndexState, RoundResult, UBISConfig,
-                    empty_state, state_memory_bytes, STATUS_NORMAL,
+                    empty_state, state_memory_bytes, state_tier_bytes,
+                    STATUS_NORMAL,
                     STATUS_SPLITTING, STATUS_MERGING, STATUS_DELETED,
                     KIND_NONE, KIND_SPLIT, KIND_MERGE, KIND_COMPACT)
 from .driver import UBISDriver
 from .search import search, brute_force
 from .build import initial_state, kmeans
 from .balance import background_round, select_candidates
-from . import balance, update, version_manager, metrics
+from . import balance, tier, update, version_manager, metrics
 
 __all__ = [
     "BackgroundRound", "IndexState", "RoundResult", "UBISConfig",
-    "empty_state", "state_memory_bytes", "UBISDriver", "search",
-    "brute_force", "initial_state", "kmeans", "balance", "update",
-    "version_manager", "metrics", "background_round", "select_candidates",
+    "empty_state", "state_memory_bytes", "state_tier_bytes", "UBISDriver",
+    "search", "brute_force", "initial_state", "kmeans", "balance", "tier",
+    "update", "version_manager", "metrics", "background_round",
+    "select_candidates",
     "STATUS_NORMAL", "STATUS_SPLITTING", "STATUS_MERGING", "STATUS_DELETED",
     "KIND_NONE", "KIND_SPLIT", "KIND_MERGE", "KIND_COMPACT",
 ]

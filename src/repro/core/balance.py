@@ -42,9 +42,15 @@ def detect(state: IndexState, cfg: UBISConfig):
     """Vectorized scan of the posting-length table.
 
     Returns (split_due, merge_due, compact_due) boolean masks over M.
+
+    Spilled postings are never due: structural ops rewrite float tiles,
+    which a spilled posting does not have on device — the tier planner
+    force-promotes a structurally-due spilled posting first, and the
+    detector picks it up the tick after (tests/test_tier.py).
     """
     status = vm.unpack_status(state.rec_meta)
-    normal = state.allocated & (status == STATUS_NORMAL)
+    normal = (state.allocated & (status == STATUS_NORMAL)
+              & ~state.tier_spilled)
     split_due = normal & (state.lengths > cfg.l_max)
     merge_due = normal & (state.lengths < cfg.l_min)
     compact_due = (normal & (state.used >= cfg.capacity)
@@ -241,7 +247,8 @@ def balance_split(state: IndexState, cfg: UBISConfig, pid):
 
     # --- Alg.1 lines 10-13: nearer-posting search for the small side ----
     status = vm.unpack_status(state.rec_meta)
-    other = state.allocated & (status == STATUS_NORMAL)
+    other = (state.allocated & (status == STATUS_NORMAL)
+             & ~state.tier_spilled)
     other = other.at[pid].set(False)
     sc = ops.centroid_score(tile.astype(jnp.float32), state.centroids, other,
                             backend=cfg.use_pallas)           # (C, M)
@@ -342,6 +349,7 @@ def merge_postings(state: IndexState, cfg: UBISConfig, pid):
     status = vm.unpack_status(state.rec_meta)
     n_me = state.lengths[pid]
     eligible = (state.allocated & (status == STATUS_NORMAL)
+                & ~state.tier_spilled
                 & (state.lengths + n_me < cfg.l_max))
     eligible = eligible.at[pid].set(False)
     sc = ops.centroid_score(state.centroids[pid][None], state.centroids,
@@ -408,7 +416,8 @@ def reassign_check(state: IndexState, cfg: UBISConfig, pid):
     tids = state.ids[pid]
     mask = state.slot_valid[pid]
     status = vm.unpack_status(state.rec_meta)
-    other = state.allocated & (status == STATUS_NORMAL)
+    other = (state.allocated & (status == STATUS_NORMAL)
+             & ~state.tier_spilled)
     other = other.at[pid].set(False)
     sc = ops.centroid_score(tile, state.centroids, other,
                             backend=cfg.use_pallas)
@@ -532,9 +541,13 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
     status = vm.unpack_status(state.rec_meta)
 
     want = jnp.where(kinds == KIND_MERGE, STATUS_MERGING, STATUS_SPLITTING)
+    # ~tier_spilled: a spilled posting has no device float tile to split/
+    # merge/compact — the tier planner must promote it first (detect()
+    # never marks one; this guards stale external batches)
     valid = ((pids >= 0) & (kinds != KIND_NONE)
              & vm.first_occurrence_mask(pids)
-             & state.allocated[safe] & (status[safe] == want))
+             & state.allocated[safe] & (status[safe] == want)
+             & ~state.tier_spilled[safe])
 
     lengths0 = state.lengths[safe]
     # a split whose live length no longer exceeds l_max demotes to compact
@@ -544,7 +557,10 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
     is_split = kind == KIND_SPLIT
     is_merge = kind == KIND_MERGE
 
-    normal0 = state.allocated & (status == STATUS_NORMAL)
+    # append-target eligibility: spilled postings excluded (no device
+    # float tile to append into) — all-False mask when tiering is off
+    normal0 = (state.allocated & (status == STATUS_NORMAL)
+               & ~state.tier_spilled)
 
     # ---- merge partner selection (conflicts: first in batch order wins)
     n_me = jnp.where(is_merge, lengths0, 0)
@@ -716,6 +732,17 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
     rec_succ = state.rec_succ.at[np_safe].set(
         jnp.uint32((NO_SUCC << 16) | NO_SUCC), mode="drop")
     allocated = state.allocated.at[np_safe].set(True, mode="drop")
+    # cold-tier plane: decay every touch counter (the per-round half-
+    # life the tier planner's cold-age trigger reads — pure local math,
+    # zero collectives under shard_map), children inherit the parent's
+    # decayed heat, and every posting born this round is float-resident.
+    heat = state.heat
+    tier_spilled = state.tier_spilled
+    if cfg.use_tier:
+        heat = heat >> 1
+        parents2 = jnp.clip(jnp.concatenate([pids, pids]), 0, M - 1)
+        heat = heat.at[np_safe].set(heat[parents2], mode="drop")
+        tier_spilled = tier_spilled.at[np_safe].set(False, mode="drop")
 
     wt = oob(w_pid, w_valid, MS)
     vectors = state.vectors.at[wt].set(
@@ -790,6 +817,7 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
         used=used, lengths=lengths, centroids=centroids, rec_meta=rec_meta,
         rec_succ=rec_succ, allocated=allocated, nbrs=nbrs, id_loc=id_loc,
         codes=codes, pq_posting_slot=pq_posting_slot,
+        heat=heat, tier_spilled=tier_spilled,
         free_top=state.free_top - total, global_version=ver)
 
     # empty b-sides go straight back to the free list
@@ -835,7 +863,8 @@ def background_round(state: IndexState, cfg: UBISConfig, kinds, pids,
             status2 = vm.unpack_status(state.rec_meta)
             sc2 = ops.centroid_score(
                 r_tiles.reshape(3 * B * C, d), state.centroids,
-                state.allocated & (status2 == STATUS_NORMAL),
+                state.allocated & (status2 == STATUS_NORMAL)
+                & ~state.tier_spilled,
                 backend=cfg.use_pallas)
             own = jnp.broadcast_to(rs[:, None], (3 * B, C)).reshape(-1)
             sc2 = sc2.at[jnp.arange(3 * B * C), own].set(BIG)

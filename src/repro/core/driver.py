@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.types import SearchResult, TickReport, UpdateResult
-from . import balance, search as search_mod, update
+from . import balance, search as search_mod, tier as tier_mod, update
 from .build import initial_state
 from .types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT, IndexState,
                     UBISConfig)
@@ -52,7 +52,9 @@ class UBISDriver:
                  insert_retries: int = 2, gc_lag: int = 16,
                  reassign_after_split: bool = True,
                  pq_retrain_every: int = 32,
-                 fused_tick: bool = False):
+                 fused_tick: bool = False,
+                 tier_moves_per_tick: int = 32,
+                 tier_rerank_host: bool = True):
         self.cfg = cfg
         self.round_size = int(round_size)
         self.bg_ops = int(bg_ops_per_round)
@@ -64,6 +66,11 @@ class UBISDriver:
         # only meaningful with cfg.use_pq
         self.pq_retrain_every = int(pq_retrain_every)
         self.fused_tick = bool(fused_tick) and cfg.is_ubis
+        # cold-tier plane (cfg.use_tier): pinned host pool + planner
+        self.tier = (tier_mod.TierManager(
+            cfg, max_moves=int(tier_moves_per_tick),
+            rerank_host=tier_rerank_host) if cfg.use_tier else None)
+        self._bg_ran = False
         self._ticks = 0
         self._pq_key = jax.random.key(seed + 0x517C0DE)
 
@@ -124,6 +131,8 @@ class UBISDriver:
                                  np.asarray(res.rejected))
                 n_acc += int(acc.sum())
                 n_cache += int(cac.sum())
+                if self.tier is not None:       # appends heat their target
+                    self.tier.note_targets(np.asarray(res.target)[acc])
                 if rej.any():
                     rej_v.append(cv[rej])
                     rej_i.append(ci[rej])
@@ -172,15 +181,32 @@ class UBISDriver:
                nprobe: Optional[int] = None) -> SearchResult:
         queries = jnp.asarray(np.asarray(queries, np.float32))
         t0 = time.perf_counter()
+        # host rerank widens the final candidate set to rerank_k (the
+        # device top-k orders spilled candidates by ADC score, so the
+        # exact host pass must see the full rerank budget to matter —
+        # cutting this below rerank_k measurably costs recall on a
+        # mostly-cold index)
+        k_eff = (max(k, self.cfg.rerank_k)
+                 if self.tier is not None and self.tier.rerank_host
+                 else k)
         found, scores, probe = search_mod.search(
-            self.state, self.cfg, queries, k, nprobe)
+            self.state, self.cfg, queries, k_eff, nprobe)
         found = np.asarray(found)
+        scores = np.asarray(scores)
+        if self.tier is not None:
+            # probes are the search-heat signal (promote trigger), and
+            # spilled candidates in the final candidate set get their
+            # true distance from the pinned pool (optional host rerank)
+            self.tier.note_probes(np.asarray(probe))
+            found, scores = self.tier.rerank(self.state, queries, found,
+                                             scores)
+            found, scores = found[:, :k], scores[:, :k]
         dt = time.perf_counter() - t0
         self.stats["search_time"] += dt
         self.stats["queries"] += queries.shape[0]
         if not self.cfg.is_ubis:
             self._note_spfresh_small(np.asarray(probe))
-        return SearchResult(ids=found, scores=np.asarray(scores), seconds=dt)
+        return SearchResult(ids=found, scores=scores, seconds=dt)
 
     # ------------------------------------------------------------------
     # background
@@ -188,8 +214,9 @@ class UBISDriver:
 
     def tick(self) -> TickReport:
         """One background round: execute marked ops, drain the cache,
-        detect + mark new candidates, GC, and (quant plane) re-train the
-        PQ codebooks on cadence."""
+        detect + mark new candidates, GC, (quant plane) re-train the PQ
+        codebooks on cadence, and (cold tier) run the spill/promote
+        planner."""
         t0 = time.perf_counter()
         executed = self._execute_marked()
         self.stats["bg_exec_time"] += time.perf_counter() - t0
@@ -197,20 +224,25 @@ class UBISDriver:
         marked = self._mark_candidates()
         reclaimed = self._gc()
         retrained = self._pq_retrain()
+        spilled, promoted = self._tier_step()
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed
         return TickReport(executed=executed, drained=drained,
                           marked=marked, gc=reclaimed,
-                          pq_retrained=retrained, seconds=dt)
+                          pq_retrained=retrained, spilled=spilled,
+                          promoted=promoted, seconds=dt)
 
     def flush(self, max_ticks: int = 200) -> int:
         """Tick until quiescent (no marked ops, no due candidates, cache
-        empty).  Returns number of ticks."""
+        empty, no tier moves in flight — a forced promotion must get its
+        follow-up structural op before flush returns).  Returns number
+        of ticks."""
         for i in range(max_ticks):
             r = self.tick()
             cache_n = int(jnp.sum(self.state.cache_valid))
             if (r.executed == 0 and r.marked == 0
+                    and r.spilled == 0 and r.promoted == 0
                     and (cache_n == 0 or not self.cfg.is_ubis)):
                 return i + 1
         return max_ticks
@@ -224,6 +256,7 @@ class UBISDriver:
         budgeting and conflict resolution all happen on device; the only
         transfer is the small ``BackgroundRound`` counter struct.
         """
+        self._bg_ran = False
         if self.fused_tick:
             md, self._marked_dev = self._marked_dev, None
             if md is None:
@@ -248,6 +281,7 @@ class UBISDriver:
         self.state, rr = balance.background_round(
             self.state, self.cfg, kinds, pids,
             reassign=self.reassign_after_split)
+        self._bg_ran = True        # the round carried the heat decay
         rr = jax.device_get(rr)
         self.stats["bg_split"] += int(rr.n_split)
         self.stats["bg_merge"] += int(rr.n_merge)
@@ -359,6 +393,7 @@ class UBISDriver:
         if self._ticks % self.pq_retrain_every:
             return 0
         from ..quant import pq
+        self._promote_retrain_pinned()
         self._pq_key, k = jax.random.split(self._pq_key)
         self.state = pq.retrain_round(self.state, self.cfg, k)
         self.stats["pq_retrains"] += 1
@@ -366,6 +401,46 @@ class UBISDriver:
         self.stats["pq_generation"] = int(
             self.state.pq_slot_gen[self.state.pq_active])
         return 1
+
+    def _promote_retrain_pinned(self) -> None:
+        """Cold-tier x quant interplay: promote spilled postings pinned
+        to the slot the retrain is about to evict (see
+        ``tier.TierManager.promote_retrain_pinned``)."""
+        if self.tier is None:
+            return
+        self.state, n = self.tier.promote_retrain_pinned(self.state)
+        self.stats["tier_promoted"] += n
+
+    def _tier_step(self) -> tuple:
+        """Cold-tier plane: apply accumulated touches, run the
+        spill/promote planner, execute the moves."""
+        if self.tier is None:
+            return 0, 0
+        self.state, n_s, n_p = self.tier.tick(self.state,
+                                              decayed=self._bg_ran)
+        self.stats["tier_spilled"] += n_s
+        self.stats["tier_promoted"] += n_p
+        self.stats["tier_resident"] = len(self.tier.pool)
+        return n_s, n_p
+
+    def force_spill(self, n: int) -> int:
+        """Spill the ``n`` coldest hot postings now (test/benchmark
+        hook — the planner's watermark path uses the same machinery)."""
+        if self.tier is None:
+            return 0
+        self.state, moved = self.tier.force_spill(self.state, n)
+        self.stats["tier_spilled"] += moved
+        self.stats["tier_resident"] = len(self.tier.pool)
+        return moved
+
+    def force_promote(self, n=None) -> int:
+        """Promote up to ``n`` spilled postings (all when None)."""
+        if self.tier is None:
+            return 0
+        self.state, moved = self.tier.force_promote(self.state, n)
+        self.stats["tier_promoted"] += moved
+        self.stats["tier_resident"] = len(self.tier.pool)
+        return moved
 
     # ---- SPFresh strict-trigger bookkeeping ---------------------------
 
@@ -385,17 +460,50 @@ class UBISDriver:
     # ---- StreamingIndex protocol surface ------------------------------
 
     def snapshot(self) -> IndexState:
-        """The live single-device state (already canonical)."""
+        """A single-device-usable state.  With the cold tier on, the
+        spilled float tiles are written back into a COPY (flags stay
+        set), so the snapshot is self-contained and checkpoint-safe;
+        ``load_snapshot`` re-derives residency from the flags."""
+        if self.tier is not None:
+            return self.tier.snapshot_fill(self.state)
         return self.state
 
+    def load_snapshot(self, state: IndexState) -> "UBISDriver":
+        """Adopt a ``snapshot()`` state (possibly restored from a
+        checkpoint): with the cold tier on, spilled tiles move back to
+        the host pool and their device copies are re-zeroed, so the
+        restored index answers search identically to the one that
+        snapshotted.  Returns self (chaining convenience)."""
+        if self.tier is not None:
+            state = self.tier.adopt(state)
+        self.state = state
+        self._marked, self._marked_dev = [], None
+        self._marked_set.clear()
+        return self
+
     def memory_bytes(self) -> int:
+        """Total bytes held by the index across BOTH tiers (the untiered
+        figure; see ``memory_tiers`` for the device/host split)."""
         from .types import state_memory_bytes
         return state_memory_bytes(self.state)
 
+    def memory_tiers(self) -> dict:
+        """Device/host byte split; sums to ``memory_bytes()``."""
+        if self.tier is not None:
+            return self.tier.memory_tiers(self.state)
+        return {"device": self.memory_bytes(), "host": 0}
+
     def exact(self, queries, k: int) -> SearchResult:
-        """Exact top-k over the index's live contents (recall oracle)."""
+        """Exact top-k over the index's live contents (recall oracle).
+        Spilled postings are scanned host-side from the pinned pool and
+        merged with the device scan, so the oracle stays exact under
+        tiering."""
+        queries = np.asarray(queries, np.float32)
         found, scores = search_mod.brute_force(
-            self.state, self.cfg, jnp.asarray(queries, jnp.float32), k)
+            self.state, self.cfg, jnp.asarray(queries), k)
+        if self.tier is not None:
+            found, scores = self.tier.exact_merge(self.state, queries,
+                                                  found, scores, k)
         return SearchResult(ids=np.asarray(found),
                             scores=np.asarray(scores))
 

@@ -326,6 +326,9 @@ class FreshDiskANN:
         return int(sum(x.size * x.dtype.itemsize for x in
                        jax.tree_util.tree_leaves(self.state)))
 
+    def memory_tiers(self) -> dict:
+        return {"device": self.memory_bytes(), "host": 0}
+
     def exact(self, queries: np.ndarray, k: int) -> SearchResult:
         """Exact top-k over the live (non-tombstoned) nodes."""
         valid = np.asarray(self.state.valid)

@@ -92,6 +92,11 @@ def _pq_stage(state: IndexState, cfg: UBISConfig, queries: jax.Array,
     cand_vecs = state.vectors.reshape(M * C, -1)[cand].astype(jnp.float32)
     exact = (jnp.sum(cand_vecs * cand_vecs, -1)
              - 2.0 * jnp.einsum("qd,qrd->qr", queries, cand_vecs))
+    # cold-tier plane: candidates in spilled postings have no device
+    # float tile (zeroed) — they keep their ADC score and are served
+    # codes-only; the driver may exact-rerank them host-side from the
+    # pinned pool.  All-False mask when tiering is off (bit-identical).
+    exact = jnp.where(state.tier_spilled[cand // C], adc_top, exact)
     exact = jnp.where(adc_top < BIG / 2, exact, BIG)
     cand_ids = state.ids.reshape(-1)[cand]
     cand_ids = jnp.where(adc_top < BIG / 2, cand_ids, -1)
@@ -102,11 +107,16 @@ def _pq_stage(state: IndexState, cfg: UBISConfig, queries: jax.Array,
 def brute_force(state: IndexState, cfg: UBISConfig, queries: jax.Array,
                 k: int):
     """Exact top-k over the index's live contents (ground truth for
-    recall).  Scans every posting slot + the cache with full masking."""
+    recall).  Scans every posting slot + the cache with full masking.
+
+    Spilled postings are excluded (their device tiles are zeroed); the
+    tiered drivers merge a host-side scan of the pinned pool on top
+    (``tier.host_exact_candidates``), so their ``exact()`` stays a true
+    oracle.  All-False mask when tiering is off."""
     M, C, d = state.vectors.shape
     queries = queries.astype(jnp.float32)
     vis = vm.visible(state.rec_meta, state.allocated, state.global_version)
-    valid = state.slot_valid & vis[:, None]
+    valid = state.slot_valid & (vis & ~state.tier_spilled)[:, None]
     s = ops.posting_scan(queries, state.vectors, valid,
                          backend=cfg.use_pallas)              # (Q, M*C)
     cs = ops.centroid_score(queries, state.cache_vecs, state.cache_valid,

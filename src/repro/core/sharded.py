@@ -57,6 +57,8 @@ def index_specs(cfg: UBISConfig):
         # versioned codebooks are replicated so any shard can encode
         codes=P("model"), pq_codebooks=P(), pq_slot_gen=P(),
         pq_active=P(), pq_posting_slot=P("model"),
+        # cold-tier plane: heat + residency flags follow their posting
+        heat=P("model"), tier_spilled=P("model"),
     )
 
 
@@ -128,6 +130,10 @@ def _pq_phase2(state: IndexState, cfg: UBISConfig, queries, probe, mine,
         jnp.float32)
     exact = (jnp.sum(cand_vecs * cand_vecs, -1)
              - 2.0 * jnp.einsum("qd,qrd->qr", queries, cand_vecs))
+    # cold-tier plane: spilled postings have no device float tile —
+    # their candidates keep the ADC score (codes-only serving; the
+    # driver's optional host rerank refines them from the pinned pool)
+    exact = jnp.where(state.tier_spilled[cand // C], adc_top, exact)
     exact = jnp.where(adc_top < BIG / 2, exact, BIG)
     cand_ids = jnp.where(adc_top < BIG / 2,
                          state.ids.reshape(-1)[cand], -1)
@@ -235,7 +241,8 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
     return jax.jit(fn)
 
 
-def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
+def make_sharded_insert(cfg: UBISConfig, mesh: Mesh,
+                        route_alpha: float = 0.0):
     """Builds a jitted sharded insert round:
     (state, vecs, ids, valid) -> (state, accepted (J,) bool,
     routed (J,) int32).
@@ -251,6 +258,17 @@ def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
     was insertable): parked jobs carry it as their cache target, which
     is what lets the background plane's pressure stats attribute the
     parked backlog to the saturated shard.
+
+    ``route_alpha`` enables **pressure-aware routing** (prefer colder
+    shards at locate time, the ROADMAP follow-up that cuts migration
+    volume on skewed streams): each job's per-shard best score is
+    penalized by ``route_alpha * saturation * range`` where saturation
+    is the shard's live-sub-pool fraction and ``range`` is that job's
+    finite score spread — so a nearly-full shard only wins a job it is
+    decisively closest to, and ties break toward shards with free
+    capacity.  Costs one (S,)-scalar all-gather in a round that already
+    gathers per-job rows; ``route_alpha=0`` (default) is bit-identical
+    to the unpenalized round.
     """
     jspec = P()     # jobs replicated: every shard sees all jobs
     st_specs = index_specs(cfg)
@@ -261,13 +279,31 @@ def make_sharded_insert(cfg: UBISConfig, mesh: Mesh):
         my = jax.lax.axis_index("model")
         M_local = state.centroids.shape[0]
         status = vm.unpack_status(state.rec_meta)
-        insertable = state.allocated & (status == 0)
+        # spilled postings cannot take appends (float tile host-resident)
+        insertable = (state.allocated & (status == 0)
+                      & ~state.tier_spilled)
         sc = ref.centroid_score(vecs.astype(jnp.float32), state.centroids)
         sc = jnp.where(insertable[None, :], sc, BIG)
         best_local = jnp.min(sc, axis=1)
         best_pid = jnp.argmin(sc, axis=1).astype(jnp.int32)
         # global owner = argmin over shards
         all_best = jax.lax.all_gather(best_local, "model", axis=0)  # (S, J)
+        if route_alpha:
+            # saturation = live vector mass over the shard's pool
+            # capacity (smoother than the posting count: it climbs with
+            # every accepted append, not only on splits)
+            alive = state.allocated & (status != STATUS_DELETED)
+            sat = (jnp.sum(jnp.where(alive, state.lengths, 0))
+                   .astype(jnp.float32) / (M_local * cfg.l_max))
+            sat_all = jax.lax.all_gather(sat, "model")          # (S,)
+            finite = all_best < BIG / 2
+            vmin = jnp.min(jnp.where(finite, all_best, BIG), axis=0)
+            vmax = jnp.max(jnp.where(finite, all_best, -BIG), axis=0)
+            rng_j = jnp.maximum(vmax - vmin, 0.0)
+            all_best = jnp.where(
+                finite,
+                all_best + route_alpha * sat_all[:, None] * rng_j[None, :],
+                all_best)
         owner = jnp.argmin(all_best, axis=0).astype(jnp.int32)
         mine = valid & (owner == my) & (best_local < BIG / 2)
         # routed GLOBAL pid per job (one-hot psum: exactly one shard is
@@ -448,7 +484,13 @@ def make_sharded_background(cfg: UBISConfig, mesh: Mesh,
 def make_sharded_migrate(cfg: UBISConfig, mesh: Mesh, jobs: int = 8):
     """Builds a jitted cross-shard posting migration round:
     (state, src_pids (B,), dst_shards (B,), valid (B,)) ->
-    (state, migrated (B,) bool).
+    (state, migrated (B,) bool, new_pids (B,) int32).
+
+    ``new_pids`` is the landing GLOBAL pid per job (-1 when the job did
+    not move) — the cold-tier driver uses it to remap its host-pool
+    entries: a **spilled** posting migrates WITHOUT being promoted (its
+    zeroed device tile, codes, heat and ``tier_spilled`` flag all travel
+    verbatim; only the host-side pool key changes).
 
     The rebalance data plane (the paper's "imbalanced distribution"
     countermeasure lifted to the pod level): a saturated shard's hot
@@ -530,6 +572,9 @@ def make_sharded_migrate(cfg: UBISConfig, mesh: Mesh, jobs: int = 8):
         codes_b = rep(state.codes[sl].astype(jnp.int32),
                       donate).astype(jnp.uint8)
         pslot_b = rep(state.pq_posting_slot[sl], donate)
+        heat_b = rep(state.heat[sl].astype(jnp.int32),
+                     donate).astype(jnp.uint32)
+        sp_b = rep(state.tier_spilled[sl].astype(jnp.int32), donate) > 0
         movable = jax.lax.psum(donate.astype(jnp.int32), "model") > 0
 
         # ---- receiver admission: sequential free-stack grant scan -----
@@ -565,6 +610,11 @@ def make_sharded_migrate(cfg: UBISConfig, mesh: Mesh, jobs: int = 8):
         codes = state.codes.at[tgt].set(codes_b, mode="drop")
         pq_posting_slot = state.pq_posting_slot.at[tgt].set(pslot_b,
                                                             mode="drop")
+        # tier residency travels with the posting (no promotion: a
+        # spilled posting lands spilled, its pool entry is remapped
+        # host-side by the driver via ``new_pids``)
+        heat = state.heat.at[tgt].set(heat_b, mode="drop")
+        tier_spilled = state.tier_spilled.at[tgt].set(sp_b, mode="drop")
         rec_meta = state.rec_meta.at[tgt].set(
             vm.pack_meta(jnp.uint32(STATUS_NORMAL), ver), mode="drop")
         rec_succ = state.rec_succ.at[tgt].set(
@@ -579,6 +629,9 @@ def make_sharded_migrate(cfg: UBISConfig, mesh: Mesh, jobs: int = 8):
         rec_succ = vm.set_successors(rec_succ, jnp.where(retire, sl, -1),
                                      jnp.full((B,), -1, jnp.int32),
                                      jnp.full((B,), -1, jnp.int32))
+        # the retired donor copy is no longer host-resident anywhere
+        tier_spilled = tier_spilled.at[oob(sl, retire, M_local)].set(
+            False, mode="drop")
 
         # ---- replicated id map: identical rewrite on every shard ------
         ids_flat = ids_b.reshape(B * C)
@@ -594,13 +647,14 @@ def make_sharded_migrate(cfg: UBISConfig, mesh: Mesh, jobs: int = 8):
             state, vectors=vectors, ids=ids_arr, slot_valid=slot_valid,
             used=used, lengths=lengths, centroids=centroids, nbrs=nbrs,
             codes=codes, pq_posting_slot=pq_posting_slot,
+            heat=heat, tier_spilled=tier_spilled,
             rec_meta=rec_meta, rec_succ=rec_succ, allocated=allocated,
             id_loc=id_loc, free_top=jnp.int32(0),  # fail-safe EMPTY
             global_version=ver)
-        return state, migrated
+        return state, migrated, new_global
 
     fn = shard_map(local, mesh, (st_specs, P(), P(), P()),
-                   (st_specs, P()))
+                   (st_specs, P(), P()))
     jfn = jax.jit(fn, donate_argnums=(0,))
 
     def checked(state, src_pids, dst_shards, valid):
@@ -635,7 +689,9 @@ def make_sharded_exact(cfg: UBISConfig, mesh: Mesh, k: int):
         queries = queries.astype(jnp.float32)
         vis = vm.visible(state.rec_meta, state.allocated,
                          state.global_version)
-        valid = state.slot_valid & vis[:, None]
+        # spilled postings excluded (device tiles zeroed) — the tiered
+        # driver merges a host-pool scan on top, same as single-device
+        valid = state.slot_valid & (vis & ~state.tier_spilled)[:, None]
         s = ref.posting_scan(queries, state.vectors, valid)  # (Q, M_local*C)
         ids_row = state.ids.reshape(-1)
         # cache slice: the same ownership split as the sharded search

@@ -59,6 +59,9 @@ class SPANNStatic:
     def memory_bytes(self) -> int:
         return self._drv.memory_bytes()
 
+    def memory_tiers(self) -> dict:
+        return {"device": self.memory_bytes(), "host": 0}
+
     def exact(self, queries, k: int) -> SearchResult:
         return self._drv.exact(queries, k)
 

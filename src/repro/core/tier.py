@@ -1,0 +1,535 @@
+"""Cold-tier host spill: codes-only device residency for cold postings.
+
+The FreshDiskANN billion-scale tier grafted onto the UBIS posting pool:
+under streaming traffic most postings are cold (never probed, never
+appended to), yet their float tiles are the index's dominant HBM cost.
+With ``cfg.use_tier`` the driver moves cold postings' float tiles to a
+**pinned host pool** and keeps only their PQ codes (plus centroid and
+recorder word) device-resident; search serves them ADC-only with an
+optional host-side exact rerank of the final candidate set, while hot
+postings keep the bit-identical float path.
+
+Three cooperating pieces:
+
+  * **heat tracking** — ``state.heat`` counts probes and accepted
+    appends per posting (the driver accumulates touches host-side and
+    applies one elementwise ``touch_round`` per tick); the counters are
+    halved inside ``balance.background_round`` (and therefore inside
+    the sharded round) — pure local math, zero added collectives;
+  * **the planner** — :class:`TierPlanner` (pure host-side numpy, the
+    ``RebalancePlanner`` discipline): spill when the float-resident live
+    posting count crosses the device high-watermark
+    (``cfg.tier_hot_max``), coldest-first among postings whose heat
+    decayed to ``cfg.tier_cold_heat``; promote on search-heat
+    (``cfg.tier_promote_heat``) — and *forcibly* promote any spilled
+    posting that became structurally due (over ``l_max``, under
+    ``l_min``, or tombstone-saturated): split/merge/compact never run on
+    a spilled posting (``balance.detect`` masks them), so promotion must
+    come first;
+  * **the move rounds** — ``spill_round`` zeroes the device tiles and
+    raises ``tier_spilled`` (the driver has already copied the bytes to
+    the host pool); ``promote_round`` writes the pooled bytes back
+    verbatim, so a promote restores the float tile **bit-identically**.
+
+Residency invariants (property-tested in ``tests/test_tier.py``):
+
+  * a spilled posting's device tile is all-zero and its pool tile
+    satisfies ``codes == encode(codebooks[slot], pool_tile)`` — the code
+    plane never diverges from the (host-resident) float plane;
+  * spilled postings are excluded from every float-write path: locate
+    (``update.insert_round``), successor chasing, merge partners,
+    move-out and reassign targets, and structural marking;
+  * ``memory_tiers()['device'] + ['host']`` equals the untiered total.
+
+The sharded plane shards ``heat``/``tier_spilled`` with their postings;
+``make_sharded_migrate`` moves spilled postings **without promoting
+them** (codes + flags travel, the driver remaps the pool entry to the
+landing pid).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import STATUS_DELETED, STATUS_NORMAL, IndexState, UBISConfig
+from .update import dataclasses_replace, oob
+
+
+# ---------------------------------------------------------------------------
+# jitted rounds (all elementwise / small scatters — no collectives)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def touch_round(state: IndexState, counts: jax.Array) -> IndexState:
+    """Apply host-accumulated touch counts: ``heat += counts``.
+
+    ``counts`` is a full (M,) vector, so the round is one elementwise
+    add — fixed shape (no per-batch retrace) and trivially partitioned
+    over a sharded ``heat``.  Saturating add keeps the counter sane
+    under pathological probe storms.
+    """
+    heat = state.heat + jnp.minimum(counts.astype(jnp.uint32),
+                                    jnp.uint32(1) << 20)
+    return dataclasses_replace(state, heat=heat)
+
+
+@jax.jit
+def decay_round(state: IndexState) -> IndexState:
+    """Halve every touch counter — the driver's fallback for ticks that
+    executed no background round (which normally carries the decay)."""
+    return dataclasses_replace(state, heat=state.heat >> 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def spill_round(state: IndexState, cfg: UBISConfig, pids, valid):
+    """Demote postings to the cold tier: zero the device float tiles and
+    raise ``tier_spilled``.  The caller MUST have copied the tile bytes
+    to the host pool first — this round destroys the device copy."""
+    M = state.lengths.shape[0]
+    tgt = oob(jnp.asarray(pids, jnp.int32), valid, M)
+    vectors = state.vectors.at[tgt].set(
+        jnp.zeros(state.vectors.shape[1:], state.vectors.dtype),
+        mode="drop")
+    tier_spilled = state.tier_spilled.at[tgt].set(True, mode="drop")
+    return dataclasses_replace(state, vectors=vectors,
+                               tier_spilled=tier_spilled)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def promote_round(state: IndexState, cfg: UBISConfig, pids, tiles, valid):
+    """Restore pooled float tiles to the device (bit-identical bytes)
+    and clear ``tier_spilled``.  Promoted postings land warm
+    (``heat = tier_promote_heat``) so the very next spill plan does not
+    immediately re-evict them."""
+    M = state.lengths.shape[0]
+    tgt = oob(jnp.asarray(pids, jnp.int32), valid, M)
+    vectors = state.vectors.at[tgt].set(
+        tiles.astype(state.vectors.dtype), mode="drop")
+    tier_spilled = state.tier_spilled.at[tgt].set(False, mode="drop")
+    heat = state.heat.at[tgt].set(jnp.uint32(cfg.tier_promote_heat),
+                                  mode="drop")
+    return dataclasses_replace(state, vectors=vectors,
+                               tier_spilled=tier_spilled, heat=heat)
+
+
+# ---------------------------------------------------------------------------
+# the pinned host pool
+# ---------------------------------------------------------------------------
+
+class HostTierPool:
+    """Host-resident float tiles of spilled postings, keyed by pid.
+
+    On TPU hosts this is the pinned-DRAM side of the tier; here it is
+    plain numpy.  Tiles are stored verbatim (storage dtype), so a
+    promote restores bit-identical bytes.
+    """
+
+    def __init__(self):
+        self._tiles: dict[int, np.ndarray] = {}
+
+    def put(self, pid: int, tile: np.ndarray) -> None:
+        self._tiles[int(pid)] = np.ascontiguousarray(tile)
+
+    def take(self, pid: int) -> np.ndarray:
+        return self._tiles.pop(int(pid))
+
+    def get(self, pid: int) -> np.ndarray:
+        return self._tiles[int(pid)]
+
+    def remap(self, src: int, dst: int) -> None:
+        """Migration hand-off: the posting moved pids without promoting."""
+        self._tiles[int(dst)] = self._tiles.pop(int(src))
+
+    def pids(self) -> np.ndarray:
+        return np.asarray(sorted(self._tiles), np.int32)
+
+    def __len__(self) -> int:
+        return len(self._tiles)
+
+    def __contains__(self, pid) -> bool:
+        return int(pid) in self._tiles
+
+    def nbytes(self) -> int:
+        return sum(t.nbytes for t in self._tiles.values())
+
+
+# ---------------------------------------------------------------------------
+# the spill/promote planner (pure host-side numpy)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TierPlanner:
+    """Picks per-tick spill and promote batches from host views.
+
+    ``hot_max`` is the device high-watermark in float-resident live
+    postings (0 disables watermark spilling); ``cold_heat`` /
+    ``promote_heat`` are the decayed-counter thresholds; ``max_moves``
+    bounds the per-tick batch (the jitted rounds compile at this width).
+    """
+
+    hot_max: int
+    cold_heat: int
+    promote_heat: int
+    max_moves: int = 32
+
+    def plan_promotes(self, heat, spilled, allocated, status, lengths,
+                      used, *, l_min: int, l_max: int,
+                      capacity: int) -> np.ndarray:
+        """Spilled postings to promote this tick: structurally-due ones
+        FIRST (split/merge/compact require float residency — the
+        forced-promotion rule), then by search-heat, hottest first."""
+        alive = np.asarray(allocated) & (np.asarray(status)
+                                         != STATUS_DELETED)
+        sp = np.asarray(spilled) & alive
+        if not sp.any():
+            return np.empty(0, np.int32)
+        heat = np.asarray(heat)
+        lengths = np.asarray(lengths)
+        due = sp & ((lengths > l_max) | (lengths < l_min)
+                    | (np.asarray(used) >= capacity))
+        hot = sp & ~due & (heat >= self.promote_heat)
+        due_pids = np.flatnonzero(due)
+        hot_pids = np.flatnonzero(hot)
+        hot_pids = hot_pids[np.argsort(-heat[hot_pids], kind="stable")]
+        picks = np.concatenate([due_pids, hot_pids])
+        # wedge guard: with NO float-resident insertable posting left
+        # (e.g. everything force-spilled), inserts can only park in the
+        # cache — promote a batch unconditionally so the index recovers
+        n_hot = int((np.asarray(allocated)
+                     & (np.asarray(status) == STATUS_NORMAL)
+                     & ~np.asarray(spilled)).sum())
+        if n_hot == 0 and picks.size == 0:
+            rest = np.flatnonzero(sp)
+            picks = rest[np.argsort(-heat[rest], kind="stable")]
+        return picks.astype(np.int32)[:self.max_moves]
+
+    def plan_spills(self, heat, spilled, allocated, status) -> np.ndarray:
+        """Hot postings to spill this tick: only while the float-resident
+        live count exceeds the watermark, only NORMAL postings (a marked
+        posting is mid-structural-op), only ones whose heat has decayed
+        to ``cold_heat``, coldest first."""
+        if self.hot_max <= 0:
+            return np.empty(0, np.int32)
+        hot = (np.asarray(allocated)
+               & (np.asarray(status) == STATUS_NORMAL)
+               & ~np.asarray(spilled))
+        over = int(hot.sum()) - self.hot_max
+        if over <= 0:
+            return np.empty(0, np.int32)
+        heat = np.asarray(heat)
+        cand = np.flatnonzero(hot & (heat <= self.cold_heat))
+        cand = cand[np.argsort(heat[cand], kind="stable")]
+        return cand.astype(np.int32)[:min(over, self.max_moves)]
+
+    def force_spills(self, n, heat, spilled, allocated,
+                     status) -> np.ndarray:
+        """Coldest ``n`` hot NORMAL postings regardless of watermark and
+        cold threshold (test/benchmark hook; same safety rules)."""
+        hot = (np.asarray(allocated)
+               & (np.asarray(status) == STATUS_NORMAL)
+               & ~np.asarray(spilled))
+        cand = np.flatnonzero(hot)
+        heat = np.asarray(heat)
+        cand = cand[np.argsort(heat[cand], kind="stable")]
+        return cand.astype(np.int32)[:n]
+
+
+# ---------------------------------------------------------------------------
+# host-side exact serving for spilled postings
+# ---------------------------------------------------------------------------
+
+def host_rerank(found, scores, queries, pool: HostTierPool, loc,
+                tier_spilled, capacity: int):
+    """Exact rerank of the FINAL candidate set against the host pool.
+
+    ``found``/``scores`` are a search's (Q, k) result where candidates
+    from spilled postings carry ADC scores; ``loc`` is the id->flat
+    location of each found id (same shape).  Spilled candidates get
+    their true ``||v||^2 - 2 q.v`` recomputed from the pooled tile and
+    each row is re-sorted — the set cannot grow, only re-rank, which is
+    exactly the 'optional host-side exact rerank' contract.
+    """
+    found = np.asarray(found)
+    scores = np.array(scores, np.float32, copy=True)
+    loc = np.asarray(loc)
+    queries = np.asarray(queries, np.float32)
+    tier_spilled = np.asarray(tier_spilled)
+    in_post = (found >= 0) & (loc >= 0)
+    pid = np.where(in_post, loc // capacity, 0)
+    sp = in_post & tier_spilled[pid]
+    if not sp.any():
+        return found, scores
+    qi, ci = np.nonzero(sp)
+    # bulk-gather: one tile fetch per UNIQUE spilled posting, then one
+    # fancy-index — the rerank stays cheap even when most of the final
+    # candidate set is cold
+    upids, inv = np.unique(pid[qi, ci], return_inverse=True)
+    tiles = np.stack([pool.get(int(p)) for p in upids]).astype(np.float32)
+    vs = tiles[inv, loc[qi, ci] % capacity]
+    qs = queries[qi]
+    scores[qi, ci] = (vs * vs).sum(-1) - 2.0 * (qs * vs).sum(-1)
+    order = np.argsort(scores, axis=1, kind="stable")
+    return (np.take_along_axis(found, order, axis=1),
+            np.take_along_axis(scores, order, axis=1))
+
+
+def host_exact_candidates(pool: HostTierPool, sp_pids, ids_rows,
+                          valid_rows, queries):
+    """Brute-force scores over the pooled tiles of ``sp_pids``.
+
+    Returns (scores (Q, n*C), ids (n*C,)) in the repo-wide score
+    convention, invalid slots masked to +BIG — ready to merge with a
+    device ``brute_force`` restricted to hot postings.
+    """
+    from ..kernels.posting_scan import BIG
+    queries = np.asarray(queries, np.float32)
+    Q = queries.shape[0]
+    if len(sp_pids) == 0:
+        return np.empty((Q, 0), np.float32), np.empty((0,), np.int32)
+    tiles = np.stack([pool.get(int(p)) for p in sp_pids]).astype(
+        np.float32)                                     # (n, C, d)
+    n, C, d = tiles.shape
+    flat = tiles.reshape(n * C, d)
+    s = (flat * flat).sum(-1)[None, :] - 2.0 * queries @ flat.T
+    valid = np.asarray(valid_rows).reshape(n * C)
+    s = np.where(valid[None, :], s, BIG).astype(np.float32)
+    ids = np.where(valid, np.asarray(ids_rows).reshape(n * C), -1)
+    return s, ids.astype(np.int32)
+
+
+class TierManager:
+    """Host orchestration of the cold tier, shared by both drivers.
+
+    Owns the pinned :class:`HostTierPool`, the :class:`TierPlanner`, and
+    the host-side touch accumulator (an (M,) count vector, so the
+    per-tick ``touch_round`` is one fixed-shape elementwise add — no
+    per-batch retraces, no collectives).  All methods are pure
+    ``state -> (state, n)`` at the driver's call sites; the sharded
+    driver re-pins shardings after the tick's tier mutations.
+    """
+
+    def __init__(self, cfg: UBISConfig, *, max_moves: int = 32,
+                 rerank_host: bool = True):
+        self.cfg = cfg
+        self.pool = HostTierPool()
+        self.planner = TierPlanner(cfg.tier_hot_max, cfg.tier_cold_heat,
+                                   cfg.tier_promote_heat,
+                                   max_moves=max_moves)
+        self.rerank_host = bool(rerank_host)
+        self._counts = np.zeros(cfg.max_postings, np.int64)
+
+    # ---- heat bookkeeping (host-side accumulation) --------------------
+
+    def note_probes(self, probe) -> None:
+        """Search touched these postings (any int array of pids)."""
+        p = np.asarray(probe).ravel()
+        p = p[(p >= 0) & (p < self._counts.shape[0])]
+        np.add.at(self._counts, p, 1)
+
+    note_targets = note_probes     # accepted appends touch the same way
+
+    # ---- the per-tick tier step ---------------------------------------
+
+    def tick(self, state: IndexState, *, decayed: bool):
+        """Apply accumulated touches, decay (when the background round
+        did not run this tick), promote, then spill.  Returns
+        (state, n_spilled, n_promoted)."""
+        from . import version_manager as vm
+        cfg = self.cfg
+        if self._counts.any():
+            state = touch_round(state, jnp.asarray(self._counts))
+            self._counts[:] = 0
+        if not decayed:
+            state = decay_round(state)
+        heat = np.asarray(state.heat)
+        spilled = np.asarray(state.tier_spilled)
+        alloc = np.asarray(state.allocated)
+        status = np.asarray(vm.unpack_status(state.rec_meta))
+        promos = self.planner.plan_promotes(
+            heat, spilled, alloc, status, np.asarray(state.lengths),
+            np.asarray(state.used), l_min=cfg.l_min, l_max=cfg.l_max,
+            capacity=cfg.capacity)
+        state, n_p = self._promote(state, promos)
+        spilled = spilled.copy()
+        spilled[promos] = False
+        # mirror promote_round's device heat write (promoted postings
+        # land warm) in the host view, or the spill plan below would see
+        # the STALE cold heat and re-evict a just-promoted posting in
+        # the same tick — with promote_heat <= cold_heat that is a
+        # permanent promote/spill livelock
+        heat = heat.copy()
+        heat[promos] = self.planner.promote_heat
+        spills = self.planner.plan_spills(heat, spilled, alloc, status)
+        # hard guarantee regardless of the knob ordering (a degenerate
+        # promote_heat <= cold_heat config must not livelock either):
+        # nothing promoted this tick may be spilled in the same tick
+        if len(promos):
+            spills = spills[~np.isin(spills, promos)]
+        state, n_s = self._spill(state, spills)
+        return state, n_s, n_p
+
+    def force_spill(self, state: IndexState, n: int):
+        """Spill the ``n`` coldest hot NORMAL postings now (test and
+        benchmark hook; ignores the watermark and cold threshold)."""
+        from . import version_manager as vm
+        pids = self.planner.force_spills(
+            int(n), np.asarray(state.heat), np.asarray(state.tier_spilled),
+            np.asarray(state.allocated),
+            np.asarray(vm.unpack_status(state.rec_meta)))
+        return self._spill(state, pids)
+
+    def force_promote(self, state: IndexState, n=None):
+        """Promote up to ``n`` spilled postings (all of them when None),
+        hottest first."""
+        pids = self.pool.pids()
+        if len(pids):
+            heat = np.asarray(state.heat)
+            pids = pids[np.argsort(-heat[pids], kind="stable")]
+        if n is not None:
+            pids = pids[:int(n)]
+        return self._promote(state, pids)
+
+    def promote_retrain_pinned(self, state: IndexState):
+        """Quant interplay, shared by both drivers: ``pq.retrain_round``
+        re-encodes postings pinned to the slot it is about to evict FROM
+        THEIR DEVICE FLOAT TILES — a spilled posting's tile is zeroed,
+        so any spilled posting pinned to the evicted slot must be
+        promoted first (it re-spills later if still cold).  Returns
+        (state, n_promoted); call immediately before the retrain."""
+        if not len(self.pool):
+            return state, 0
+        evict = (int(state.pq_active) + 1) % self.cfg.pq_versions
+        pslot = np.asarray(state.pq_posting_slot)
+        sp = self.pool.pids()
+        pinned = sp[pslot[sp] == evict]
+        if not pinned.size:
+            return state, 0
+        return self._promote(state, pinned)
+
+    # ---- move execution (chunked at the planner's batch width) --------
+
+    def _spill(self, state: IndexState, pids):
+        B = self.planner.max_moves
+        M = self.cfg.max_postings
+        n = 0
+        for off in range(0, len(pids), B):
+            chunk = np.asarray(pids[off:off + B], np.int32)
+            padded = np.full(B, -1, np.int32)
+            padded[:len(chunk)] = chunk
+            valid = padded >= 0
+            tiles = np.asarray(
+                state.vectors[jnp.asarray(np.clip(padded, 0, M - 1))])
+            for i, pid in enumerate(chunk):
+                self.pool.put(int(pid), tiles[i])
+            state = spill_round(state, self.cfg, jnp.asarray(padded),
+                                jnp.asarray(valid))
+            n += len(chunk)
+        return state, n
+
+    def _promote(self, state: IndexState, pids):
+        B = self.planner.max_moves
+        C, d = state.vectors.shape[1:]
+        n = 0
+        for off in range(0, len(pids), B):
+            chunk = np.asarray(pids[off:off + B], np.int32)
+            padded = np.full(B, -1, np.int32)
+            padded[:len(chunk)] = chunk
+            # f32 staging; promote_round casts back to the storage dtype,
+            # which is exact for every storage dtype narrower than f32
+            tiles = np.zeros((B, C, d), np.float32)
+            for i, pid in enumerate(chunk):
+                tiles[i] = self.pool.take(int(pid))
+            state = promote_round(state, self.cfg, jnp.asarray(padded),
+                                  jnp.asarray(tiles),
+                                  jnp.asarray(padded >= 0))
+            n += len(chunk)
+        return state, n
+
+    # ---- host-side exact serving --------------------------------------
+
+    def rerank(self, state: IndexState, queries, found, scores):
+        """Host exact rerank of a search's final candidate set."""
+        if not self.rerank_host or not len(self.pool):
+            return np.asarray(found), np.asarray(scores)
+        found = np.asarray(found)
+        safe = np.clip(found, 0, self.cfg.max_ids - 1)
+        loc = np.asarray(state.id_loc[jnp.asarray(safe)])
+        return host_rerank(found, scores, queries, self.pool, loc,
+                           np.asarray(state.tier_spilled),
+                           self.cfg.capacity)
+
+    def exact_merge(self, state: IndexState, queries, found, scores,
+                    k: int):
+        """Merge a device oracle result (spilled postings excluded) with
+        a host scan of the pooled tiles."""
+        from . import version_manager as vm
+        sp = self.pool.pids()
+        if len(sp) == 0:
+            return np.asarray(found), np.asarray(scores)
+        vis = np.asarray(vm.visible(state.rec_meta, state.allocated,
+                                    state.global_version))
+        sp = sp[vis[sp]]
+        if len(sp) == 0:
+            return np.asarray(found), np.asarray(scores)
+        jsp = jnp.asarray(sp)
+        ids_rows = np.asarray(state.ids[jsp])
+        valid_rows = np.asarray(state.slot_valid[jsp])
+        es, ei = host_exact_candidates(self.pool, sp, ids_rows,
+                                       valid_rows, queries)
+        return merge_topk(found, scores, es, ei, k)
+
+    # ---- snapshot / restore -------------------------------------------
+
+    def snapshot_fill(self, state: IndexState) -> IndexState:
+        """A self-contained snapshot: spilled float tiles written back
+        into a COPY of the device state (``tier_spilled`` stays set, so
+        a restore re-derives residency).  Checkpoint-safe: the saved
+        pytree holds every byte."""
+        pids = self.pool.pids()
+        if len(pids) == 0:
+            return state
+        tiles = np.stack([self.pool.get(int(p)) for p in pids])
+        vectors = state.vectors.at[jnp.asarray(pids)].set(
+            jnp.asarray(tiles).astype(state.vectors.dtype))
+        return dataclasses_replace(state, vectors=vectors)
+
+    def adopt(self, state: IndexState) -> IndexState:
+        """Restore path: rebuild the host pool from a filled snapshot
+        (see ``snapshot_fill``) and re-zero the spilled device tiles."""
+        self.pool = HostTierPool()
+        self._counts[:] = 0
+        sp = np.flatnonzero(np.asarray(state.tier_spilled)
+                            & np.asarray(state.allocated))
+        # clear the flags, then re-spill through the normal path: the
+        # pool captures the snapshot's exact tile bytes and the device
+        # copies are re-zeroed — residency is fully re-derived from the
+        # persisted ``tier_spilled`` flags
+        state = dataclasses_replace(
+            state, tier_spilled=jnp.zeros_like(state.tier_spilled))
+        if sp.size:
+            state, _ = self._spill(state, sp.astype(np.int32))
+        return state
+
+    def memory_tiers(self, state: IndexState) -> dict:
+        from .types import state_tier_bytes
+        return state_tier_bytes(state)
+
+
+def merge_topk(found, scores, extra_scores, extra_ids, k: int):
+    """Merge a device (Q, k) result with host candidate lists into the
+    final top-k (scores ascending, -1 ids for missing)."""
+    from ..kernels.posting_scan import BIG
+    found = np.asarray(found)
+    scores = np.asarray(scores, np.float32)
+    all_s = np.concatenate([scores, extra_scores], axis=1)
+    all_i = np.concatenate(
+        [found, np.broadcast_to(extra_ids[None, :],
+                                (found.shape[0], len(extra_ids)))], axis=1)
+    order = np.argsort(all_s, axis=1, kind="stable")[:, :k]
+    s = np.take_along_axis(all_s, order, axis=1)
+    i = np.take_along_axis(all_i, order, axis=1)
+    return np.where(s < BIG / 2, i, -1).astype(np.int32), s

@@ -66,6 +66,17 @@ class UBISConfig:
     pq_versions: int = 2              # codebook version slots kept live
     pq_sample: int = 2048             # training sample size (re-train)
     rerank_k: int = 64                # float candidates exact-reranked
+    # --- cold-tier host spill (core/tier.py) ---------------------------
+    # Spilled postings keep centroids + PQ codes device-resident; their
+    # float tiles move to a pinned host pool (the FreshDiskANN
+    # billion-scale tier).  Requires use_pq: the codes are what serves a
+    # spilled posting at search time (ADC-only, optional host rerank).
+    use_tier: bool = False            # enable cold-tier float-tile spill
+    tier_hot_max: int = 0             # device high-watermark: max float-
+    #                                   resident live postings (0 = no cap;
+    #                                   spill only via force_spill)
+    tier_cold_heat: int = 1           # heat <= this -> spill candidate
+    tier_promote_heat: int = 8        # heat >= this -> promote (search-heat)
 
     def __post_init__(self):
         assert self.max_postings < NO_SUCC, "successor ids are 16-bit"
@@ -78,6 +89,9 @@ class UBISConfig:
         assert 2 <= self.pq_ksub <= 256, "codes are uint8"
         assert self.pq_versions >= 2, "need >= 2 slots for lazy re-encode"
         assert self.rerank_k >= 1
+        if self.use_tier:
+            assert self.use_pq, \
+                "use_tier requires use_pq (spilled postings serve ADC-only)"
 
     @property
     def pq_m_eff(self) -> int:
@@ -137,6 +151,13 @@ class IndexState:
     pq_slot_gen: jax.Array    # (V,) uint32 generation held by each slot
     pq_active: jax.Array      # () int32 slot new codes are written under
     pq_posting_slot: jax.Array  # (M,) int32 codebook slot of each posting
+    # --- cold-tier residency (core/tier.py) --------------------------------
+    # heat: per-posting touch counter (probes + accepted appends), decayed
+    # inside the background round; tier_spilled marks postings whose float
+    # tile lives in the driver's pinned host pool (device copy zeroed,
+    # codes/centroid stay device-resident).
+    heat: jax.Array           # (M,) uint32 touch counter
+    tier_spilled: jax.Array   # (M,) bool float tile is host-resident
 
     def num_alive(self) -> jax.Array:
         from .version_manager import unpack_status
@@ -214,6 +235,8 @@ def empty_state(cfg: UBISConfig) -> IndexState:
         pq_slot_gen=jnp.zeros((cfg.pq_versions,), jnp.uint32),
         pq_active=jnp.array(0, jnp.int32),
         pq_posting_slot=jnp.zeros((M,), jnp.int32),
+        heat=jnp.zeros((M,), jnp.uint32),
+        tier_spilled=jnp.zeros((M,), jnp.bool_),
     )
 
 
@@ -222,3 +245,26 @@ def state_memory_bytes(state: IndexState) -> int:
     return int(
         sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(state))
     )
+
+
+def tile_bytes(state: IndexState) -> int:
+    """Bytes of ONE float posting tile (the unit the cold tier moves)."""
+    C, d = state.vectors.shape[1:]
+    return int(C * d * state.vectors.dtype.itemsize)
+
+
+def state_tier_bytes(state: IndexState) -> dict:
+    """Device/host byte split under cold-tier residency.
+
+    ``host`` is the float bytes of spilled tiles (they live in the
+    driver's pinned host pool; the device copies are zeroed); ``device``
+    is everything else, so ``device + host == state_memory_bytes`` — the
+    untiered total — by construction.  JAX pytrees are fixed-shape, so
+    the zeroed device tiles still occupy their allocation; this split
+    reports what a paging allocator holds per tier, which is the honest
+    HBM figure for the tier's effect (benchmarks additionally report the
+    live-tile payload split, see ``benchmarks.figures.figmem``).
+    """
+    host = int(jax.device_get(jnp.sum(state.tier_spilled))) * \
+        tile_bytes(state)
+    return {"device": state_memory_bytes(state) - host, "host": host}

@@ -98,6 +98,9 @@ def alloc_postings(state: IndexState, cfg: UBISConfig, k: int,
         free_top=state.free_top - k,
         # fresh postings write codes under the active codebook generation
         pq_posting_slot=state.pq_posting_slot.at[pids].set(state.pq_active),
+        # fresh postings are float-resident and born warm (cold-tier plane)
+        heat=state.heat.at[pids].set(jnp.uint32(cfg.tier_promote_heat)),
+        tier_spilled=state.tier_spilled.at[pids].set(False),
     )
     return state, pids
 
@@ -121,6 +124,9 @@ def free_postings(state: IndexState, pids: jax.Array,
     allocated = state.allocated.at[safe_pids].set(False, mode="drop")
     succ = jnp.full((k,), (NO_SUCC << 16) | NO_SUCC, jnp.uint32)
     rec_succ = state.rec_succ.at[safe_pids].set(succ, mode="drop")
+    # recycled slots re-enter the pool float-resident and cold
+    heat = state.heat.at[safe_pids].set(jnp.uint32(0), mode="drop")
+    tier_spilled = state.tier_spilled.at[safe_pids].set(False, mode="drop")
     # sweep dangling successor references to the reclaimed ids
     freed_mask = jnp.zeros((M,), bool).at[safe_pids].set(True, mode="drop")
     s1, s2 = vm.succ_ids(rec_succ)
@@ -130,7 +136,8 @@ def free_postings(state: IndexState, pids: jax.Array,
                             jnp.where(s2 < 0, NO_SUCC, s2))
     return dataclasses_replace(state, free_list=free_list,
                                free_top=state.free_top + n,
-                               allocated=allocated, rec_succ=rec_succ)
+                               allocated=allocated, rec_succ=rec_succ,
+                               heat=heat, tier_spilled=tier_spilled)
 
 
 def dataclasses_replace(state: IndexState, **kw) -> IndexState:
@@ -288,13 +295,18 @@ def insert_round(state: IndexState, cfg: UBISConfig, vecs, ids, valid,
     the paper's DELETED-branch pointer chasing.
     """
     status = vm.unpack_status(state.rec_meta)
-    insertable = state.allocated & (status != STATUS_DELETED)
+    # spilled postings cannot take appends (their float tile is host-
+    # resident): locate routes around them, so fresh vectors always land
+    # in a float-resident posting.  All-False mask when tiering is off.
+    insertable = (state.allocated & (status != STATUS_DELETED)
+                  & ~state.tier_spilled)
 
     has_hint = hints >= 0
     chased, dead_end = vm.chase_successors(
         state.rec_meta, state.rec_succ, state.allocated, state.centroids,
         jnp.maximum(hints, 0), vecs, cfg.succ_chase_depth)
-    chased_ok = has_hint & ~dead_end & state.allocated[chased]
+    chased_ok = (has_hint & ~dead_end & state.allocated[chased]
+                 & ~state.tier_spilled[chased])
 
     scores = ops.centroid_score(vecs, state.centroids, insertable,
                                 backend=cfg.use_pallas)
@@ -302,8 +314,14 @@ def insert_round(state: IndexState, cfg: UBISConfig, vecs, ids, valid,
     pid = jnp.where(chased_ok, chased, located)
 
     st = status[pid]
-    normal = st == STATUS_NORMAL
-    in_flux = (st == STATUS_SPLITTING) | (st == STATUS_MERGING)
+    # a resolved pid can still be spilled when NO insertable posting
+    # exists (locate's argmin over an all-masked row is arbitrary): a
+    # spilled posting must never take a direct float append, so such
+    # jobs take the in-flux branch (cache / reject) instead
+    sp_pid = state.tier_spilled[pid]
+    normal = (st == STATUS_NORMAL) & ~sp_pid
+    in_flux = ((st == STATUS_SPLITTING) | (st == STATUS_MERGING)
+               | ((st == STATUS_NORMAL) & sp_pid))
 
     direct = valid & normal
     state, ok, _ = batched_append(state, cfg, vecs, ids,

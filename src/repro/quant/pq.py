@@ -155,13 +155,23 @@ def retrain_round(state, cfg, key):
     (4) rotate ``pq_active``.  Touches only codes/codebooks/slots, so the
     live id->vector multiset and search visibility cannot change
     (property-tested in tests/test_background_round.py).
+
+    Cold-tier interplay (``cfg.use_tier``): step (3) re-encodes from the
+    DEVICE float tiles — a spilled posting's tile is zeroed, so the
+    drivers promote any spilled posting pinned to the evicted slot
+    *before* calling this round (``_promote_retrain_pinned``), and the
+    training sample masks spilled rows out explicitly (their zeroed
+    device rows would otherwise collapse the codebooks toward 0).
     """
     from ..core.update import dataclasses_replace
     M, C, d = state.vectors.shape
     V = cfg.pq_versions
     S = cfg.pq_sample
 
-    flat_valid = state.slot_valid.reshape(-1)
+    # spilled postings' device rows are zeroed (cold tier) — exclude
+    # them from the training sample or the codebooks collapse on zeros
+    flat_valid = (state.slot_valid
+                  & ~state.tier_spilled[:, None]).reshape(-1)
     # uniform draw over the LIVE rows: random keys, invalid rows pushed
     # past every valid one, take the first S — an unbiased sample even
     # when live rows cluster at low posting ids (low flat indices)

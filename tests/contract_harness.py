@@ -5,6 +5,10 @@ tick / flush runs against any ``make_index`` engine while a pure-Python
 oracle tracks the live id -> vector multiset.  After every tick the
 engine's approximate search is scored against its own ``exact()``
 oracle (recall@k floor); at every flush the live multiset is audited.
+Engines with the cold tier enabled additionally get forced
+spill/promote ops (each followed by the recall + multiset audits) and
+an optional snapshot -> restore equivalence check at the end, so tier
+transitions must be indistinguishable from the all-float program.
 
 Importable without pytest so the multi-shard subprocess tests
 (``test_rebalance.py``) can drive the same program against a real
@@ -78,26 +82,45 @@ def recall_at_k(found, true):
     return hits / total if total else 1.0
 
 
-def random_ops(rng, n_ops):
+def random_ops(rng, n_ops, tiered: bool = False):
     """A seed-deterministic op tape.  Weights favour updates; ticks and
     searches interleave; one flush rides near the end so the audit sees
-    both mid-churn and quiescent states."""
-    kinds = rng.choice(["insert", "delete", "search", "tick"], size=n_ops,
-                       p=[0.40, 0.20, 0.20, 0.20])
-    tape = list(kinds) + ["flush", "search"]
+    both mid-churn and quiescent states.  ``tiered`` adds forced
+    spill/promote ops (engines with the cold tier enabled), so the
+    interleaving exercises tier transitions between every other op."""
+    if tiered:
+        kinds = rng.choice(
+            ["insert", "delete", "search", "tick", "spill", "promote"],
+            size=n_ops, p=[0.32, 0.16, 0.16, 0.16, 0.12, 0.08])
+    else:
+        kinds = rng.choice(["insert", "delete", "search", "tick"],
+                           size=n_ops, p=[0.40, 0.20, 0.20, 0.20])
+    tape = list(kinds) + (["spill"] if tiered else []) + ["flush", "search"]
     return tape
 
 
 def run_program(engine, idx, data, seed, *, n_ops=12, k=8,
-                max_batch=96, recall_floor=None, seed_ids=None):
+                max_batch=96, recall_floor=None, seed_ids=None,
+                restore_fn=None):
     """Run one random interleaving; returns (oracle, stats dict).
 
     ``data`` is the vector pool (fresh inserts draw monotone slices);
     ``seed_ids`` are the ids the build-once engines ingested at
     construction (their oracle starting point).
+
+    Engines built with the cold tier (``cfg.use_tier``) get forced
+    spill/promote ops woven into the tape; after each the recall floor
+    and (strict) live-multiset audit re-run, so a tier transition that
+    loses/duplicates a vector or wrecks ADC-only serving fails here.
+    ``restore_fn`` (optional): a callable ``snapshot -> fresh index``;
+    when given, the final quiescent snapshot is round-tripped through it
+    and the restored index must answer search identically and hold the
+    identical live multiset (tier state included).
     """
     rng = np.random.default_rng(seed)
     audit = AUDIT[engine]
+    tiered = bool(getattr(getattr(idx, "cfg", None), "use_tier", False)
+                  and hasattr(idx, "force_spill"))
     floor = RECALL_FLOOR[engine] if recall_floor is None else recall_floor
     oracle = {}
     if audit in ("static", "count") and seed_ids is not None:
@@ -132,8 +155,16 @@ def run_program(engine, idx, data, seed, *, n_ops=12, k=8,
                 f"({len(m)} live vs {len(oracle)} oracle, "
                 f"{len(set(m) ^ set(oracle))} id mismatches)")
 
-    for op in random_ops(rng, n_ops):
-        if op == "insert":
+    for op in random_ops(rng, n_ops, tiered=tiered):
+        if op == "spill":
+            idx.force_spill(int(rng.integers(1, 8)))
+            check_recall()                # ADC-only serving holds the floor
+            check_multiset(strict=True)   # snapshot fill-back is exact
+        elif op == "promote":
+            idx.force_promote()
+            check_recall()
+            check_multiset(strict=False)
+        elif op == "insert":
             n = int(rng.integers(8, max_batch))
             if next_id + n > len(data):
                 continue
@@ -198,6 +229,22 @@ def run_program(engine, idx, data, seed, *, n_ops=12, k=8,
     idx.flush(max_ticks=60)
     rec = check_recall()
     check_multiset(strict=True)
+    if restore_fn is not None:
+        # snapshot -> restore round-trip: the restored index answers
+        # search identically (scores included) and holds the identical
+        # live multiset — with tiering, residency is re-derived from the
+        # snapshot's tier flags, so this proves the tier state persists
+        s0 = idx.search(queries, k)
+        idx2 = restore_fn(idx.snapshot())
+        s1 = idx2.search(queries, k)
+        np.testing.assert_array_equal(np.asarray(s0.ids),
+                                      np.asarray(s1.ids))
+        np.testing.assert_allclose(np.asarray(s0.scores),
+                                   np.asarray(s1.scores),
+                                   rtol=1e-5, atol=1e-5)
+        if audit == "state":
+            assert live_map(idx2.snapshot()) == oracle, \
+                "restored index diverged from the oracle multiset"
     assert n_checks > 0
     return oracle, {"recall": rec, "inserted": next_id,
                     "deleted": len(deleted_ever)}

@@ -1,5 +1,7 @@
 """Checkpoint manager: atomic roundtrip, keep-N GC, resume extras,
-elastic dtype/placement restore."""
+elastic dtype/placement restore — plus the cold-tier snapshot contract
+(a tiered index's snapshot round-trips through the checkpoint files and
+restores to identical search answers)."""
 import os
 
 import numpy as np
@@ -51,6 +53,55 @@ def test_atomicity_no_tmp_left(tmp_path):
     mgr.save(5, _tree())
     files = os.listdir(tmp_path)
     assert not any(f.endswith(".tmp") for f in files)
+
+
+def test_tiered_snapshot_roundtrips_through_checkpoint(tmp_path):
+    """Cold-tier snapshot contract: ``snapshot()`` writes the spilled
+    float tiles back into the saved pytree (flags stay set), so the
+    checkpoint is self-contained; ``load_snapshot`` on a fresh driver
+    re-derives residency and answers search IDENTICALLY — ids, scores,
+    live multiset, and the device/host byte split all survive."""
+    from repro.core import UBISConfig, UBISDriver
+
+    rng = np.random.default_rng(2)
+    cents = rng.normal(size=(8, 16)) * 6
+    data = (cents[rng.integers(0, 8, 1200)]
+            + rng.normal(size=(1200, 16))).astype(np.float32)
+    cfg = UBISConfig(dim=16, max_postings=128, capacity=96, l_min=10,
+                     l_max=80, nprobe=128, max_ids=1 << 13,
+                     use_pallas="off", use_pq=True, pq_m=4, pq_ksub=16,
+                     rerank_k=256, use_tier=True, tier_hot_max=8)
+    drv = UBISDriver(cfg, data[:300], round_size=256, bg_ops_per_round=8)
+    drv.insert(data, np.arange(1200))
+    drv.flush(max_ticks=60)
+    drv.force_spill(6)
+    assert len(drv.tier.pool) > 0
+
+    q = data[:24]
+    s0 = drv.search(q, 10)
+    snap = drv.snapshot()
+    # spilled tiles are PRESENT in the snapshot (self-contained) while
+    # the live state keeps them zeroed
+    sp = np.flatnonzero(np.asarray(snap.tier_spilled))
+    assert sp.size and np.asarray(snap.vectors)[sp].any()
+    assert not np.asarray(drv.state.vectors)[sp].any()
+
+    path = str(tmp_path / "tiered")
+    save_pytree(snap, path, extra={"spilled": int(sp.size)})
+    restored, extra = restore_pytree(snap, path)
+    assert extra["spilled"] == sp.size
+
+    drv2 = UBISDriver(cfg, data[:300], round_size=256,
+                      bg_ops_per_round=8).load_snapshot(restored)
+    assert len(drv2.tier.pool) == sp.size
+    s1 = drv2.search(q, 10)
+    np.testing.assert_array_equal(s0.ids, s1.ids)
+    np.testing.assert_allclose(s0.scores, s1.scores, rtol=1e-5,
+                               atol=1e-5)
+    e0, e1 = drv.exact(q, 10), drv2.exact(q, 10)
+    np.testing.assert_array_equal(np.asarray(e0.ids), np.asarray(e1.ids))
+    assert drv2.memory_tiers() == drv.memory_tiers()
+    assert drv2.live_count() == drv.live_count() == 1200
 
 
 @pytest.mark.slow

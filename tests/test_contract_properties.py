@@ -35,7 +35,14 @@ def _cfg(**kw):
     return UBISConfig(**base)
 
 
-def _build(engine, data, seed):
+# the cold-tier configuration the tiered interleavings run under: PQ on
+# (spilled postings serve ADC-only) with a wide exact rerank, and a low
+# device watermark so the planner spills aggressively mid-program
+TIER_KW = dict(use_pq=True, pq_m=4, pq_ksub=16, rerank_k=256,
+               use_tier=True, tier_hot_max=8)
+
+
+def _build(engine, data, seed, cfg_kw=None):
     import jax
     n_seed = 300
     kw = dict(seed_ids=np.arange(n_seed), round_size=256,
@@ -43,17 +50,22 @@ def _build(engine, data, seed):
               max_nodes=1 << 13, beam=24)
     if engine == "ubis-sharded":
         kw["mesh"] = jax.make_mesh((1, 1), ("data", "model"))
-    idx = make_index(engine, _cfg(), data[:n_seed], **kw)
+    idx = make_index(engine, _cfg(**(cfg_kw or {})), data[:n_seed], **kw)
     seed_ids = (np.arange(n_seed)
                 if engine in ("spann", "freshdiskann") else None)
     return idx, seed_ids
 
 
-def _run(engine, seed):
+def _run(engine, seed, cfg_kw=None, restore: bool = False):
     data = make_clustered(N_DATA, d=DIM, k=10, seed=100 + seed)
-    idx, seed_ids = _build(engine, data, seed)
+    idx, seed_ids = _build(engine, data, seed, cfg_kw)
+    restore_fn = None
+    if restore:
+        def restore_fn(snap):
+            idx2, _ = _build(engine, data, seed, cfg_kw)
+            return idx2.load_snapshot(snap)
     oracle, stats = run_program(engine, idx, data, seed,
-                                seed_ids=seed_ids)
+                                seed_ids=seed_ids, restore_fn=restore_fn)
     return stats
 
 
@@ -61,6 +73,29 @@ def _run(engine, seed):
 def test_contract_random_interleaving(engine):
     stats = _run(engine, seed=0)
     assert stats["inserted"] > 0
+
+
+# ---- cold-tier layer: the same program with tiering ON ----------------
+# Every tier-capable engine (the UBISConfig-driven cluster engines —
+# the build-once/graph baselines have no posting tiles to spill) runs
+# the interleaving with forced spill/promote ops and the
+# snapshot->restore equivalence check; the oracle checks are identical
+# to the tiering-off runs above, which is the "indistinguishable from
+# the all-float program" acceptance.
+TIER_ENGINES = ("ubis", "spfresh", "ubis-sharded")
+
+
+@pytest.mark.parametrize("engine", TIER_ENGINES)
+def test_contract_random_interleaving_tiered(engine):
+    stats = _run(engine, seed=0, cfg_kw=TIER_KW, restore=True)
+    assert stats["inserted"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", TIER_ENGINES)
+@pytest.mark.parametrize("seed", [1, 2])
+def test_contract_random_interleaving_tiered_more_seeds(engine, seed):
+    _run(engine, seed, cfg_kw=TIER_KW, restore=True)
 
 
 @pytest.mark.slow
@@ -81,5 +116,13 @@ try:
     @given(engine=st.sampled_from(ENGINES), seed=st.integers(3, 2 ** 12))
     def test_contract_random_interleaving_fuzz(engine, seed):
         _run(engine, seed)
+
+    @pytest.mark.slow
+    @settings(max_examples=4, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(engine=st.sampled_from(TIER_ENGINES),
+           seed=st.integers(3, 2 ** 12))
+    def test_contract_tiered_fuzz(engine, seed):
+        _run(engine, seed, cfg_kw=TIER_KW, restore=True)
 except ImportError:  # pragma: no cover - hypothesis is optional
     pass

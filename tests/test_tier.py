@@ -1,0 +1,325 @@
+"""Cold-tier invariant suite (core/tier.py).
+
+The residency contract, property-tested through the public driver
+surface:
+
+  * a spilled posting's PQ codes stay byte-identical to
+    ``encode(codebooks[pinned slot], float tile)`` where the float tile
+    now lives in the pinned host pool (and the device copy is zeroed);
+  * a promote restores the float tile bit-identically;
+  * split/merge/compact never run on a spilled posting — the detector
+    masks them, and a structurally-due spilled posting is force-promoted
+    by the tier planner before the op lands;
+  * ``memory_tiers()`` device/host split sums to the untiered total;
+  * the insert plane routes around spilled postings;
+  * search (ADC-only + host rerank) and ``exact()`` (device scan + host
+    pool merge) stay correct with most of the index spilled;
+  * the codebook re-train promotes spilled postings pinned to the
+    evicted slot before overwriting their codebook.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (UBISConfig, UBISDriver, balance, metrics,
+                        state_memory_bytes, version_manager as vm)
+from repro.quant import pq
+from conftest import make_clustered
+
+DIM = 16
+
+
+def _cfg(**kw):
+    base = dict(dim=DIM, max_postings=128, capacity=96, l_min=10,
+                l_max=80, nprobe=128, max_ids=1 << 13,
+                cache_capacity=2048, use_pallas="off",
+                use_pq=True, pq_m=4, pq_ksub=16, rerank_k=256,
+                use_tier=True, tier_hot_max=0)
+    base.update(kw)
+    return UBISConfig(**base)
+
+
+def _driver(data, n_seed=300, **cfg_kw):
+    drv = UBISDriver(_cfg(**cfg_kw), data[:n_seed], round_size=256,
+                     bg_ops_per_round=8)
+    drv.insert(data, np.arange(len(data)))
+    drv.flush(max_ticks=60)
+    return drv
+
+
+def _audit_residency(drv):
+    """The core invariant: every live posting's codes decode against the
+    float plane that OWNS it (device tile if hot, pool tile if spilled),
+    and spilled device tiles are zeroed."""
+    state = drv.state
+    cfg = drv.cfg
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    alive = np.asarray(state.allocated) & (status != 3)
+    spilled = np.asarray(state.tier_spilled)
+    sv = np.asarray(state.slot_valid)
+    vecs = np.asarray(state.vectors)
+    codes = np.asarray(state.codes)
+    pslot = np.asarray(state.pq_posting_slot)
+    cbs = np.asarray(state.pq_codebooks)
+    n_sp = 0
+    for p in np.flatnonzero(alive):
+        if spilled[p]:
+            assert p in drv.tier.pool, f"spilled {p} missing from pool"
+            assert not vecs[p].any(), f"spilled {p} device tile not zeroed"
+            tile = drv.tier.pool.get(int(p))
+            n_sp += 1
+        else:
+            assert p not in drv.tier.pool, f"hot {p} still pooled"
+            tile = vecs[p]
+        want = np.asarray(pq.encode_tiles(
+            jnp.asarray(cbs[pslot[p]]),
+            jnp.asarray(tile)[None].astype(jnp.float32)))[0]
+        got = codes[p]
+        assert (got[:, sv[p]] == want[:, sv[p]]).all(), \
+            f"code/float divergence at posting {p}"
+    assert len(drv.tier.pool) == n_sp, "pool holds dead entries"
+    return n_sp
+
+
+def test_spill_promote_roundtrip_is_bit_identical():
+    data = make_clustered(1500, d=DIM, k=8, seed=1)
+    drv = _driver(data)
+    state = drv.state
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    live = np.flatnonzero(np.asarray(state.allocated) & (status == 0)
+                          & (np.asarray(state.lengths) > 0))
+    assert len(live) >= 4
+    before = {int(p): np.asarray(state.vectors[p]).tobytes()
+              for p in live[:4]}
+
+    moved = drv.force_spill(len(live))          # spill everything hot
+    assert moved == len(live)
+    sp = np.asarray(drv.state.tier_spilled)
+    assert sp[live].all()
+    _audit_residency(drv)
+
+    promoted = drv.force_promote()
+    assert promoted == moved
+    assert not np.asarray(drv.state.tier_spilled).any()
+    after = {p: np.asarray(drv.state.vectors[p]).tobytes() for p in before}
+    assert after == before, "promote did not restore bit-identical tiles"
+    assert len(drv.tier.pool) == 0
+
+
+def test_residency_invariant_under_churn():
+    """Mixed insert/delete/tick churn with forced spills interleaved:
+    the code/float invariant holds for hot AND spilled postings, and
+    the live multiset never drifts."""
+    rng = np.random.default_rng(3)
+    data = make_clustered(2400, d=DIM, k=10, seed=3)
+    drv = _driver(data[:1200], tier_hot_max=12)
+    live = set(range(1200))
+    nxt = 1200
+    for step in range(6):
+        n = int(rng.integers(60, 180))
+        drv.insert(data[nxt:nxt + n], np.arange(nxt, nxt + n))
+        live |= set(range(nxt, min(nxt + n, len(data))))
+        nxt = min(nxt + n, len(data))
+        dels = rng.choice(sorted(live), size=min(50, len(live) // 4),
+                          replace=False)
+        drv.delete(dels)
+        live -= set(int(x) for x in dels)
+        if step % 2 == 0:
+            drv.force_spill(int(rng.integers(2, 10)))
+        drv.tick()
+    drv.flush(max_ticks=60)
+    assert drv.live_count() == len(live)
+    n_sp = _audit_residency(drv)
+    assert n_sp > 0, "watermark never spilled anything"
+    # searches still meet the floor with the index mostly cold
+    q = data[:24]
+    rec = metrics.recall_at_k(drv.search(q, 8).ids, drv.exact(q, 8).ids)
+    assert rec >= 0.9, rec
+
+
+def test_detector_never_marks_spilled_postings():
+    data = make_clustered(1500, d=DIM, k=8, seed=5)
+    drv = _driver(data)
+    drv.force_spill(10 ** 6)                      # spill everything
+    split_due, merge_due, compact_due = balance.detect(drv.state, drv.cfg)
+    sp = np.asarray(drv.state.tier_spilled)
+    for mask in (split_due, merge_due, compact_due):
+        assert not (np.asarray(mask) & sp).any(), \
+            "detector marked a spilled posting"
+
+
+def test_structural_op_on_spilled_posting_promotes_first():
+    """Hollow a spilled posting below l_min: the tick must promote it
+    (forced, structural-due) and only then merge it away — the posting
+    is never split/merged while its float tile is host-resident."""
+    data = make_clustered(1500, d=DIM, k=8, seed=7)
+    drv = _driver(data)
+    drv.force_spill(10 ** 6)
+    state = drv.state
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    lengths = np.asarray(state.lengths)
+    cand = np.flatnonzero(np.asarray(state.allocated) & (status == 0)
+                          & np.asarray(state.tier_spilled)
+                          & (lengths >= drv.cfg.l_min))
+    assert cand.size, "no spilled posting to hollow out"
+    p = int(cand[0])
+    ids = np.asarray(state.ids[p])
+    sv = np.asarray(state.slot_valid[p])
+    doom = ids[sv][: int(lengths[p]) - drv.cfg.l_min + 1]
+    drv.delete(doom)                              # now lengths[p] < l_min
+    assert int(drv.state.lengths[p]) < drv.cfg.l_min
+    assert bool(drv.state.tier_spilled[p])
+
+    promoted_before_merge = False
+    for _ in range(40):
+        r = drv.tick()
+        st = int(vm.unpack_status(drv.state.rec_meta[p]))
+        sp_now = bool(drv.state.tier_spilled[p])
+        if st in (1, 2):                          # marked for a structural op
+            assert not sp_now, "posting marked while still spilled"
+            promoted_before_merge = True
+        if st == 3:                               # merged away (DELETED)
+            assert promoted_before_merge or not sp_now
+            break
+    else:
+        pytest.fail("hollowed spilled posting was never merged")
+    _audit_residency(drv)
+
+
+def test_forced_promotion_survives_the_same_ticks_spill_plan():
+    """Regression: the spill plan runs after the promote batch in the
+    same tick and used to read the STALE pre-promote heat — a
+    structurally-due posting was promoted and immediately re-evicted,
+    which with ``promote_heat <= cold_heat`` is a permanent
+    promote/spill livelock (the merge never lands).  A promoted posting
+    must end its tick float-resident, and the due op must resolve."""
+    data = make_clustered(1500, d=DIM, k=8, seed=19)
+    # degenerate knobs on purpose: a freshly-promoted posting's warm
+    # heat still sits at/below the cold threshold
+    drv = UBISDriver(_cfg(tier_hot_max=8, tier_promote_heat=2,
+                          tier_cold_heat=2),
+                     data[:300], round_size=256, bg_ops_per_round=8)
+    drv.insert(data, np.arange(1500))
+    drv.flush(max_ticks=60)
+    state = drv.state
+    status = np.asarray(vm.unpack_status(state.rec_meta))
+    lengths = np.asarray(state.lengths)
+    cand = np.flatnonzero(np.asarray(state.allocated) & (status == 0)
+                          & np.asarray(state.tier_spilled)
+                          & (lengths >= drv.cfg.l_min))
+    assert cand.size, "watermark left nothing spilled"
+    p = int(cand[0])
+    ids = np.asarray(state.ids[p])
+    sv = np.asarray(state.slot_valid[p])
+    drv.delete(ids[sv][: int(lengths[p]) - drv.cfg.l_min + 1])
+    r = drv.tick()                                # forced promotion tick
+    assert r.promoted >= 1, r
+    assert not bool(drv.state.tier_spilled[p]), \
+        "promoted posting was re-spilled in the same tick"
+    n = drv.flush(max_ticks=40)
+    assert n < 40, "tier moves never quiesced (promote/spill livelock)"
+    assert int(vm.unpack_status(drv.state.rec_meta[p])) == 3, \
+        "the due merge never landed"
+    _audit_residency(drv)
+
+
+def test_memory_tiers_split_sums_to_untiered_total():
+    data = make_clustered(1500, d=DIM, k=8, seed=9)
+    drv = _driver(data)
+    total = state_memory_bytes(drv.state)
+    t0 = drv.memory_tiers()
+    assert t0["device"] + t0["host"] == total == drv.memory_bytes()
+    assert t0["host"] == 0
+
+    n = drv.force_spill(7)
+    tb = drv.cfg.capacity * DIM * 4               # f32 tile bytes
+    t1 = drv.memory_tiers()
+    assert t1["host"] == n * tb == drv.tier.pool.nbytes()
+    assert t1["device"] == total - n * tb
+    assert t1["device"] + t1["host"] == drv.memory_bytes()
+
+    drv.force_promote()
+    t2 = drv.memory_tiers()
+    assert t2 == {"device": total, "host": 0}
+
+
+def test_inserts_route_around_spilled_postings():
+    data = make_clustered(1500, d=DIM, k=8, seed=11)
+    drv = _driver(data)
+    drv.force_spill(10 ** 6)
+    sp = np.flatnonzero(np.asarray(drv.state.tier_spilled))
+    len_before = np.asarray(drv.state.lengths)[sp]
+    used_before = np.asarray(drv.state.used)[sp]
+    fresh = make_clustered(200, d=DIM, k=8, seed=11)   # same clusters
+    r = drv.insert(fresh, np.arange(4000, 4200))
+    assert r.accepted + r.cached == 200
+    still = np.asarray(drv.state.tier_spilled)[sp]     # none promoted yet
+    assert (np.asarray(drv.state.used)[sp][still]
+            == used_before[still]).all(), \
+        "an append landed in a spilled posting's tile"
+    assert (np.asarray(drv.state.lengths)[sp][still]
+            >= len_before[still] - 0).all()
+    drv.flush(max_ticks=60)
+    assert drv.live_count() == 1500 + 200
+    _audit_residency(drv)
+
+
+def test_exact_oracle_matches_numpy_under_spill():
+    data = make_clustered(1200, d=DIM, k=6, seed=13)
+    drv = _driver(data)
+    drv.force_spill(10 ** 6)
+    q = make_clustered(16, d=DIM, k=6, seed=14)
+    d2 = ((q[:, None, :] - data[None]) ** 2).sum(-1)
+    true = np.argsort(d2, axis=1)[:, :10]
+    got = drv.exact(q, 10)
+    assert metrics.recall_at_k(np.asarray(got.ids), true) == 1.0
+    # the two-stage search path (ADC over spilled + host rerank) holds
+    rec = metrics.recall_at_k(drv.search(q, 10).ids, np.asarray(got.ids))
+    assert rec >= 0.9, rec
+
+
+def test_retrain_promotes_pinned_spilled_postings():
+    """The codebook re-train overwrites the evicted slot: spilled
+    postings pinned to it must be promoted first (else their codes
+    become undecodable) — then the residency invariant still holds."""
+    data = make_clustered(1500, d=DIM, k=8, seed=15)
+    drv = UBISDriver(_cfg(), data[:300], round_size=256,
+                     bg_ops_per_round=8, pq_retrain_every=1)
+    drv.insert(data, np.arange(len(data)))
+    drv.force_spill(10 ** 6)
+    n_sp = len(drv.tier.pool)
+    assert n_sp > 0
+    for _ in range(3):                            # retrains every tick
+        drv.tick()
+    assert drv.stats["pq_retrains"] >= 3
+    _audit_residency(drv)
+    q = data[:16]
+    rec = metrics.recall_at_k(drv.search(q, 8).ids, drv.exact(q, 8).ids)
+    assert rec >= 0.9, rec
+
+
+def test_watermark_spills_cold_not_hot():
+    """With a hot query working set, the watermark evicts the unqueried
+    (cold) postings and the queried ones stay float-resident."""
+    rng = np.random.default_rng(17)
+    cents = rng.normal(size=(10, DIM)) * 8
+    a = rng.integers(0, 10, 2000)
+    data = (cents[a] + rng.normal(size=(2000, DIM))).astype(np.float32)
+    drv = UBISDriver(_cfg(tier_hot_max=8, nprobe=4), data[:300],
+                     round_size=256, bg_ops_per_round=8)
+    drv.insert(data, np.arange(2000))
+    hot_q = (cents[0] + rng.normal(size=(32, DIM))).astype(np.float32)
+    for _ in range(8):
+        drv.search(hot_q, 8)                      # heat cluster 0 only
+        drv.tick()
+    assert drv.stats["tier_spilled"] > 0
+    r = drv.tick()
+    assert r.spilled >= 0 and r.promoted >= 0     # TickReport surface
+    # the postings the hot queries probe remained float-resident
+    found, _, probe = __import__("repro.core.search", fromlist=["search"]
+                                 ).search(drv.state, drv.cfg,
+                                          jnp.asarray(hot_q), 8, 4)
+    probed = np.unique(np.asarray(probe))
+    sp = np.asarray(drv.state.tier_spilled)
+    assert not sp[probed].all(), "the hot working set was fully evicted"
+    _audit_residency(drv)
