@@ -37,11 +37,13 @@ ID_KEYS = ("figure", "mode", "dataset", "batch", "fg", "bg",
 # ``vec_device_mb`` / ``device_mb`` rows creeping back toward tier-off.
 METRICS = {"tps": "up", "qps": "up", "recall": "up", "final_recall": "up",
            "small_frac": "down", "occ_spread": "down",
-           "device_mb": "down", "vec_device_mb": "down"}
-TIMING_METRICS = {"tps", "qps"}
+           "device_mb": "down", "vec_device_mb": "down",
+           "p99_ms": "down"}
+TIMING_METRICS = {"tps", "qps", "p99_ms"}
 # below this absolute scale, relative comparison is meaningless noise
 ABS_FLOOR = {"small_frac": 0.02, "recall": 0.05, "final_recall": 0.05,
-             "occ_spread": 0.0, "device_mb": 0.1, "vec_device_mb": 0.02}
+             "occ_spread": 0.0, "device_mb": 0.1, "vec_device_mb": 0.02,
+             "p99_ms": 0.5}
 
 
 def row_key(row: dict) -> tuple:

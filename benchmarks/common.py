@@ -76,14 +76,14 @@ def eval_recall(drv, queries: np.ndarray, k: int,
     streamed so far (paper semantics — an index that rejected/blocked
     fresh vectors pays for them in recall).  Otherwise truth = the
     index's own live contents via the engine's ``exact`` oracle."""
-    found, _ = drv.search(queries, k)
+    found = drv.search(queries, k).ids
     if stream_vecs is not None:
         d2 = ((queries[:, None, :].astype(np.float32)
                - stream_vecs[None]) ** 2).sum(-1)
         order = np.argsort(d2, axis=1)[:, :k]
         true = np.asarray(stream_ids)[order]
         return metrics.recall_at_k(found, true)
-    true, _ = drv.exact(queries, k)
+    true = drv.exact(queries, k).ids
     return metrics.recall_at_k(found, np.asarray(true))
 
 

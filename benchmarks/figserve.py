@@ -1,0 +1,199 @@
+"""figserve: open-loop serving — continuous batching vs the sync loop.
+
+The serving claim of PR 6, measured: a Poisson stream of single-query
+search requests (with ingest batches woven in) is served two ways over
+the *same* engine build and the *same* seeded arrival trace:
+
+  * ``sync``    — the pre-serving ``RetrievalServer`` shape: every
+    query is one blocking one-row ``index.search`` call, every ingest
+    batch is insert-then-tick, requests handled FIFO one at a time;
+  * ``batched`` — ``repro.serving.ServingEngine``: fill-or-deadline
+    batching folds requests into padded device batches, the update lane
+    and cadence tick overlap the search dispatch→collect window.
+
+**Virtual-clock accounting.**  Arrivals carry virtual timestamps from
+the seeded Poisson process; every index call's compute time is measured
+for real (``time.perf_counter``) and *added* to the virtual clock.
+Queueing delay then emerges from measured service times — a request
+that arrives while the server is busy waits — while the trace itself
+replays deterministically (no sleeps, no wall-clock arrival jitter).
+Latency for a request is completion minus *arrival* (admission lag
+included), so an overloaded server shows its real queue growth.
+
+Reported per mode: achieved ``qps`` (requests / virtual makespan),
+``p50_ms`` / ``p99_ms`` arrival-to-completion latency, update ``tps``,
+and ``recall`` of the final flushed index against exact k-NN over
+everything streamed — the "equal recall" leg of the acceptance claim
+(both modes index the identical stream).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.serving import ServingConfig, ServingEngine
+
+from .common import QUICK, BenchScale, eval_recall, make_driver
+
+
+class VirtualClock:
+    """Injectable clock: jumps to arrival/deadline times, advances by
+    measured service seconds."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _make_trace(scale: BenchScale, offered_qps: float, seed: int = 0):
+    """Seeded open-loop trace: Poisson search arrivals at
+    ``offered_qps`` with ingest batches spread evenly across the span.
+    Returns (events, queries, batches) — events are (t, kind, idx)
+    sorted by time."""
+    rng = np.random.default_rng(seed)
+    n_search = scale.queries * 5
+    n_stream = scale.n // 4
+    n_batches = 8
+    dim = scale.dim
+    arrivals = np.cumsum(rng.exponential(1.0 / offered_qps, n_search))
+    span = float(arrivals[-1])
+    centers = rng.normal(size=(12, dim)).astype(np.float32) * 4.0
+    assign = rng.integers(0, 12, n_stream + n_search)
+    pool = (centers[assign]
+            + rng.normal(size=(n_stream + n_search, dim))
+            ).astype(np.float32)
+    stream, queries = pool[:n_stream], pool[n_stream:]
+    per = n_stream // n_batches
+    batches = [(stream[i * per:(i + 1) * per],
+                np.arange(i * per, (i + 1) * per))
+               for i in range(n_batches)]
+    ins_times = (np.arange(n_batches) + 0.5) * span / n_batches
+    events = sorted(
+        [(float(t), "search", i) for i, t in enumerate(arrivals)]
+        + [(float(t), "insert", i) for i, t in enumerate(ins_times)])
+    return events, queries, batches, stream
+
+
+def _percentiles(lats: List[float]):
+    a = np.asarray(lats) * 1e3
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def _run_sync(drv, events, queries, batches, k: int):
+    """FIFO one-at-a-time service: start = max(arrival, prev done)."""
+    clock = 0.0
+    lats = []
+    inserted = 0
+    for t, kind, i in events:
+        start = max(clock, t)
+        t0 = time.perf_counter()
+        if kind == "search":
+            drv.search(queries[i:i + 1], k)
+        else:
+            vecs, ids = batches[i]
+            r = drv.insert(vecs, ids)
+            inserted += r.accepted + r.cached
+            drv.tick()               # the old tick-per-ingest loop
+        dt = time.perf_counter() - t0
+        clock = start + dt
+        if kind == "search":
+            lats.append(clock - t)
+    return lats, inserted, clock
+
+
+def _run_batched(drv, events, queries, batches, k: int,
+                 cfg: ServingConfig):
+    """Event loop on the virtual clock: admit arrivals, jump to
+    ``min(next arrival, engine.next_deadline())``, pump when due —
+    every pump's real compute time advances the clock."""
+    vc = VirtualClock()
+    engine = ServingEngine(drv, cfg, clock=vc)
+    done: List[tuple] = []          # (arrival, ticket)
+    inserted_box = [0]
+    ei = 0
+    while ei < len(events) or not engine.idle:
+        while ei < len(events) and events[ei][0] <= vc.t:
+            t, kind, i = events[ei]
+            if kind == "search":
+                done.append((t, engine.submit_search(queries[i], k)))
+            else:
+                vecs, ids = batches[i]
+                tk = engine.submit_insert(vecs, ids)
+                done.append((t, tk))
+            ei += 1
+        nd = engine.next_deadline()
+        if nd is not None and nd <= vc.t:
+            t0 = time.perf_counter()
+            engine.pump()
+            vc.advance(time.perf_counter() - t0)
+            continue
+        nxt = [x for x in (nd, events[ei][0] if ei < len(events)
+                           else None) if x is not None]
+        if not nxt:
+            break
+        vc.t = max(vc.t, min(nxt))
+    lats = []
+    for arrival, tk in done:
+        # latency from *arrival*: admission lag + queue + service
+        lat = tk.latency_s + (tk.t_submit - arrival)
+        if tk.kind == "search":
+            lats.append(lat)
+        else:
+            r = tk.result()
+            inserted_box[0] += r.accepted + r.cached
+    return lats, inserted_box[0], vc.t, engine
+
+
+def figserve_serving(scale: BenchScale = QUICK,
+                     offered_qps: float = 500.0) -> List[Dict]:
+    """Paper-style serving figure: sync loop vs batching engine on one
+    seeded open-loop trace; the acceptance bar is the batched row
+    holding strictly higher achieved QPS at equal final recall."""
+    events, queries, batches, stream = _make_trace(scale, offered_qps)
+    stream_ids = np.arange(len(stream))
+    k = scale.k
+    rows = []
+    for mode in ("sync", "batched"):
+        drv = make_driver(scale, "ubis", batches[0][0])
+        drv.search(queries[:8], k)   # compile outside the timed region
+        drv.search(np.zeros((32, scale.dim), np.float32), k)
+        if mode == "sync":
+            lats, inserted, makespan = _run_sync(
+                drv, events, queries, batches, k)
+            extra = {}
+        else:
+            cfg = ServingConfig(search_batch=32, insert_batch=1024,
+                                search_deadline_s=2e-3,
+                                insert_deadline_s=10e-3,
+                                tick_every=1, default_k=k)
+            lats, inserted, makespan, eng = _run_batched(
+                drv, events, queries, batches, k, cfg)
+            c = eng.counters
+            extra = {
+                "search_batches": c["search_batches"],
+                "mean_fill": round(c["search_requests"]
+                                   / max(c["search_batches"], 1), 1),
+                "deadline_fires": c["search_deadline"],
+                "fill_fires": c["search_fill"],
+            }
+        drv.flush(max_ticks=40)
+        p50, p99 = _percentiles(lats)
+        rows.append({
+            "figure": "figserve", "mode": mode,
+            "offered_qps": offered_qps,
+            "qps": round(len(lats) / makespan, 1),
+            "p50_ms": round(p50, 3), "p99_ms": round(p99, 3),
+            "tps": round(inserted / makespan, 1),
+            "recall": round(eval_recall(drv, queries[:scale.queries], k,
+                                        stream, stream_ids), 4),
+            "n_search": len(lats),
+            **extra,
+        })
+    return rows

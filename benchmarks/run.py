@@ -21,11 +21,11 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--figures",
                     default="fig5,fig6,fig7,table4,fig8,fig9,figpq,"
-                            "figengines,figskew,figmem")
+                            "figengines,figskew,figmem,figserve")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import figures
+    from benchmarks import figures, figserve
     from benchmarks.common import FULL, QUICK
     scale = FULL if args.full else QUICK
 
@@ -40,6 +40,7 @@ def main(argv=None) -> None:
         "figengines": figures.figengines_comparison,
         "figskew": figures.figskew_skewed_stream,
         "figmem": figures.figmem_cold_tier,
+        "figserve": figserve.figserve_serving,
     }
     wanted = [f.strip() for f in args.figures.split(",") if f.strip()]
     all_rows = []
@@ -118,6 +119,13 @@ def _headline(name: str, rows) -> str:
             return (f"vec_device {off_['vec_device_mb']}->"
                     f"{on_['vec_device_mb']}MB ({ratio:.1f}x) recall "
                     f"{off_['recall']:.3f}->{on_['recall']:.3f}")
+        if name == "figserve":
+            by = {r["mode"]: r for r in rows}
+            s, b = by["sync"], by["batched"]
+            return (f"qps sync={s['qps']:.0f} batched={b['qps']:.0f} "
+                    f"({b['qps'] / max(s['qps'], 1e-9):.1f}x) p99 "
+                    f"{s['p99_ms']:.1f}->{b['p99_ms']:.1f}ms recall "
+                    f"{s['recall']:.3f}/{b['recall']:.3f}")
     except Exception as e:  # pragma: no cover
         return f"derived-error:{e}"
     return ""

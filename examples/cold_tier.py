@@ -45,8 +45,8 @@ def main(engine: str = "ubis"):
     index.flush(max_ticks=40)
 
     tiers = index.memory_tiers()
-    found, _ = index.search(queries, 10)
-    true, _ = index.exact(queries, 10)
+    found = index.search(queries, 10).ids
+    true = index.exact(queries, 10).ids
     rec = metrics.recall_at_k(found, np.asarray(true))
     print(f"live vectors: {index.live_count()}")
     print(f"spilled postings: {int(index.stats['tier_resident'])} "

@@ -47,7 +47,7 @@ def main():
             rejected += idx.insert(b, ids).rejected
             idx.tick()
         idx.flush(max_ticks=20)
-        found, _ = idx.search(queries, 10)
+        found = idx.search(queries, 10).ids
         sv, si = np.concatenate(seen_v), np.concatenate(seen_i)
         d2 = ((queries[:, None, :] - sv[None]) ** 2).sum(-1)
         true = si[np.argsort(d2, axis=1)[:, :10]]

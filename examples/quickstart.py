@@ -39,8 +39,8 @@ def main(engine: str = "ubis"):
         next_id += 1000
         index.tick()                          # background split/merge/GC
         q = batch(64, shift=step * 0.5)
-        found, scores = index.search(q, k=10)
-        true, _ = index.exact(q, 10)
+        found = index.search(q, k=10).ids
+        true = index.exact(q, 10).ids
         rec = metrics.recall_at_k(found, np.asarray(true))
         print(f"batch {step}: +{r.accepted + r.cached} vectors, "
               f"recall@10 = {rec:.3f}")

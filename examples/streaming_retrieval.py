@@ -45,7 +45,7 @@ def main(argv=None):
         if step % 3 == 2:
             queries = rng.integers(0, vocab,
                                    (32, args.seq)).astype(np.int32)
-            found, scores = server.query_tokens(queries, k=5)
+            server.query_tokens(queries, k=5)
             qv = server.embedder.embed(queries)
             rec = server.recall_check(qv, k=5)
             print(f"  step {step}: index={server.stats['ingested']} docs, "
@@ -56,7 +56,7 @@ def main(argv=None):
           f"{server.stats['queries']} queries in {dt:.1f}s")
     # freshness check: the most recent batch must be retrievable
     probe = server.embedder.embed(docs[:8])
-    found, _ = server.query_vectors(probe, k=3)
+    found = server.query_vectors(probe, k=3).ids
     fresh_hits = sum(int(ids[i]) in set(f.tolist())
                      for i, f in enumerate(found[:8]))
     print(f"fresh-batch self-retrieval: {fresh_hits}/8")

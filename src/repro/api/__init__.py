@@ -1,6 +1,6 @@
 """One front door: the engine-agnostic streaming-index API.
 
-    from repro.api import make_index, ENGINES
+    from repro.api import make_index, list_engines
 
     idx = make_index("ubis", cfg, seed_vectors)      # any engine name
     idx.insert(vecs, ids); idx.tick()
@@ -9,23 +9,28 @@
 Engines: ``ubis`` | ``spfresh`` | ``spann`` | ``freshdiskann`` |
 ``ubis-sharded`` — all conform to :class:`StreamingIndex`, so an engine
 comparison is one loop over names (see ``benchmarks/figures.py``
-``figengines`` and ``examples/engine_compare.py``).
+``figengines`` and ``examples/engine_compare.py``).  ``list_engines()``
+returns each engine's :class:`EngineSpec` with capability flags
+(``supports_tier`` / ``supports_pq`` / ``supports_shards``) so callers
+never probe engines with try/except.
 
 The registry and the sharded driver import the engine modules, which in
 turn import :mod:`repro.api.types` for the result dataclasses — load
 them lazily here so ``repro.core`` never re-enters a half-initialised
 ``repro.api`` package.
 """
-from .types import (SearchResult, StreamingIndex, TickReport,  # noqa: F401
-                    UpdateResult)
+from .types import (SearchRequest, SearchResult, StreamingIndex,  # noqa: F401
+                    Ticket, TickReport, UpdateResult)
 
 __all__ = ["StreamingIndex", "SearchResult", "UpdateResult", "TickReport",
-           "make_index", "ENGINES", "ShardedUBISDriver",
+           "SearchRequest", "Ticket", "make_index", "list_engines",
+           "engine_spec", "EngineSpec", "ENGINES", "ShardedUBISDriver",
            "RebalancePlanner"]
 
 
 def __getattr__(name):
-    if name in ("make_index", "ENGINES"):
+    if name in ("make_index", "ENGINES", "list_engines", "engine_spec",
+                "EngineSpec"):
         from . import registry
         return getattr(registry, name)
     if name == "ShardedUBISDriver":

@@ -33,12 +33,16 @@ background program itself stays collective-free — pressure rides out
 through the sharded output layout, and migration is its own round.
 
 **Host-mediated vector cache.**  The cache arrays are *replicated*
-across model shards, so no shard may write them inside an SPMD program
-(replica divergence).  Instead the host owns cache admission: rejected
-jobs are written into the replicated cache arrays host-side (every
-replica gets the same bytes), which keeps them *searchable* — the
-sharded search's cache scan sees them — and deletable; each tick drains
-up to ``drain_per_tick`` of them back through the sharded insert round.
+across model shards, so no shard may write them inside the SPMD
+background/insert programs (replica divergence).  The host still OWNS
+admission — it decides which jobs park — but executes it as one plain
+jitted ``update.cache_append`` round: the program is deterministic over
+the replicated arrays, so every replica computes identical bytes and
+nothing round-trips through the host (the PR 3 follow-up; admission
+used to pull all five cache arrays to numpy and re-replicate them).
+Cached entries stay *searchable* — the sharded search's cache scan sees
+them — and deletable; each tick drains up to ``drain_per_tick`` of them
+back through the sharded insert round.
 
 **Snapshot contract.**  The sharded rounds return the free stack
 fail-safe EMPTY; ``snapshot()`` gathers the state and passes it through
@@ -61,6 +65,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..core import tier as tier_mod, update
 from ..core import version_manager as vm
 from ..core.build import initial_state
+from ..core.driver import SearchDispatch
 from ..core.sharded import (index_specs, make_sharded_background,
                             make_sharded_delete, make_sharded_exact,
                             make_sharded_insert, make_sharded_migrate,
@@ -96,7 +101,8 @@ class ShardedUBISDriver:
                  migrate_per_tick: int = 8,
                  route_alpha: float = 0.0,
                  tier_moves_per_tick: int = 32,
-                 tier_rerank_host: bool = True):
+                 tier_rerank_host: bool = True,
+                 tier_async: bool = False):
         if not cfg.is_ubis:
             raise ValueError("ShardedUBISDriver is UBIS-mode only "
                              "(SPFresh's lock model is single-device)")
@@ -130,8 +136,15 @@ class ShardedUBISDriver:
         self.tier = (tier_mod.TierManager(
             cfg, max_moves=int(tier_moves_per_tick),
             rerank_host=tier_rerank_host) if cfg.use_tier else None)
+        # dispatch the tier DMA at tick start, reconcile at tick end
+        self.tier_async = bool(tier_async)
         self._insert_fn = make_sharded_insert(cfg, self.mesh,
                                               route_alpha=float(route_alpha))
+        # replica-identical jitted cache admission (see module docstring)
+        def _admit(state, vecs, ids, targets, want, _cfg=cfg):
+            return update.cache_append(state, _cfg, vecs, ids, targets,
+                                       want)
+        self._cache_admit_fn = jax.jit(_admit)
         self._delete_fn = make_sharded_delete(cfg, self.mesh)
         self._background_fn = make_sharded_background(
             cfg, self.mesh, bg_ops=self.bg_ops,
@@ -258,6 +271,12 @@ class ShardedUBISDriver:
 
     def search(self, queries, k: int,
                nprobe: Optional[int] = None) -> SearchResult:
+        return self.collect_search(self.dispatch_search(queries, k, nprobe))
+
+    def dispatch_search(self, queries, k: int,
+                        nprobe: Optional[int] = None) -> SearchDispatch:
+        """Launch the jitted sharded search without awaiting it (the
+        serving engine's overlap seam; pair with ``collect_search``)."""
         q = np.asarray(queries, np.float32)
         t0 = time.perf_counter()
         # cold tier + host rerank: widen the final candidate set to
@@ -273,27 +292,36 @@ class ShardedUBISDriver:
             fn = self._search_fns[key] = make_sharded_search(
                 self.cfg, self.mesh, k=k_eff, nprobe=nprobe,
                 shard_cache_scan=self._shard_cache_scan)
-        Q = q.shape[0]
-        pad = (-Q) % self._q_mult
+        qp = q
+        pad = (-q.shape[0]) % self._q_mult
         if pad:
-            q = np.concatenate([q, np.zeros((pad, q.shape[1]), np.float32)])
-        found, scores = fn(self.state, jnp.asarray(q))
-        found = np.asarray(found)[:Q]
-        scores = np.asarray(scores)[:Q]
+            qp = np.concatenate([q, np.zeros((pad, q.shape[1]),
+                                             np.float32)])
+        found, scores = fn(self.state, jnp.asarray(qp))
+        return SearchDispatch(state=self.state, queries=q, k=k,
+                              found=found, scores=scores, probe=None,
+                              t0=t0)
+
+    def collect_search(self, disp: SearchDispatch) -> SearchResult:
+        """Await a dispatched sharded search and finish the host tail
+        against the dispatch-time state."""
+        Q = disp.queries.shape[0]
+        found = np.asarray(disp.found)[:Q]
+        scores = np.asarray(disp.scores)[:Q]
         if self.tier is not None:
             # search-heat: the postings holding the found candidates
             # (the sharded search does not export its probe list)
             safe = np.clip(found, 0, self.cfg.max_ids - 1)
-            loc = np.asarray(self.state.id_loc[jnp.asarray(safe)])
+            loc = np.asarray(disp.state.id_loc[jnp.asarray(safe)])
             pid = loc[(found >= 0) & (loc >= 0)] // self.cfg.capacity
             self.tier.note_probes(pid)
             if self.tier.rerank_host and len(self.tier.pool):
                 found, scores = tier_mod.host_rerank(
-                    found, scores, q[:Q], self.tier.pool, loc,
-                    np.asarray(self.state.tier_spilled),
+                    found, scores, disp.queries, self.tier.pool, loc,
+                    np.asarray(disp.state.tier_spilled),
                     self.cfg.capacity)
-            found, scores = found[:, :k], scores[:, :k]
-        dt = time.perf_counter() - t0
+            found, scores = found[:, :disp.k], scores[:, :disp.k]
+        dt = time.perf_counter() - disp.t0
         self.stats["search_time"] += dt
         self.stats["queries"] += Q
         return SearchResult(ids=found, scores=scores, seconds=dt)
@@ -308,6 +336,14 @@ class ShardedUBISDriver:
         pressure), then the cross-shard rebalance stage, then the host
         cache drain, then the PQ re-train on cadence."""
         t0 = time.perf_counter()
+        plan = None
+        if self.tier is not None and self.tier_async:
+            # tick-start dispatch: spill D2H + promote H2D overlap the
+            # sharded background program; reconcile commits at tick end
+            # (decayed=True — the sharded round decays every tick)
+            st, plan = self.tier.dispatch(self.state, decayed=True)
+            if st is not self.state:
+                self.state = jax.device_put(st, self._shardings)
         ver = int(jax.device_get(self.state.global_version))
         gc_min = ver - self.gc_lag if ver > self.gc_lag else 0
         self.state, ex, gc, press = self._background_fn(self.state,
@@ -318,7 +354,16 @@ class ShardedUBISDriver:
         migrated = self._rebalance() if self.rebalance else 0
         drained = self._drain_cache()
         retrained = self._pq_retrain()
-        spilled, promoted = self._tier_step()
+        if self.tier is not None and self.tier_async:
+            st, n_s, n_p = self.tier.reconcile(self.state, plan)
+            if st is not self.state:
+                self.state = jax.device_put(st, self._shardings)
+            self.stats["tier_spilled"] += n_s
+            self.stats["tier_promoted"] += n_p
+            self.stats["tier_resident"] = len(self.tier.pool)
+            spilled, promoted = n_s, n_p
+        else:
+            spilled, promoted = self._tier_step()
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed
@@ -398,32 +443,38 @@ class ShardedUBISDriver:
         return jax.device_put(jnp.asarray(x), self._rep)
 
     def _cache_put(self, vecs, ids, targets=None) -> int:
-        """Park jobs in the replicated cache from the host (every
-        replica receives identical bytes; id_loc takes the ``-2 - slot``
-        encoding, so the entries are searchable and deletable).
-        ``targets`` carries the routed global pid per job — the pressure
-        stats' backlog attribution (-1 when unknown)."""
-        cval = np.array(self.state.cache_valid)
-        free = np.flatnonzero(~cval)
-        n = min(len(free), len(ids))
-        if n == 0:
-            return 0
-        slots = free[:n]
-        cvecs = np.array(self.state.cache_vecs)
-        cids = np.array(self.state.cache_ids)
-        ctgt = np.array(self.state.cache_target)
-        iloc = np.array(self.state.id_loc)
-        cvecs[slots] = vecs[:n]
-        cids[slots] = ids[:n]
-        ctgt[slots] = -1 if targets is None else targets[:n]
-        cval[slots] = True
-        iloc[ids[:n]] = -2 - slots
-        self.state = dataclasses.replace(
-            self.state, cache_vecs=self._replicate(cvecs),
-            cache_ids=self._replicate(cids),
-            cache_target=self._replicate(ctgt),
-            cache_valid=self._replicate(cval),
-            id_loc=self._replicate(iloc))
+        """Park jobs in the replicated cache as ONE jitted
+        ``update.cache_append`` round per chunk: the program is
+        deterministic over the replicated cache arrays, so every replica
+        writes identical bytes and no array ever round-trips through the
+        host (id_loc takes the ``-2 - slot`` encoding, so the entries
+        stay searchable and deletable).  ``targets`` carries the routed
+        global pid per job — the pressure stats' backlog attribution
+        (-1 when unknown)."""
+        vecs = np.asarray(vecs, np.float32)
+        ids = np.asarray(ids, np.int32)
+        tgts = (np.full(len(ids), -1, np.int32) if targets is None
+                else np.asarray(targets, np.int32))
+        J = self.round_size
+        n = 0
+        for off in range(0, len(ids), J):
+            cv, ci, ct = (vecs[off:off + J], ids[off:off + J],
+                          tgts[off:off + J])
+            pad = J - len(ci)
+            want = np.concatenate([np.ones(len(ci), bool),
+                                   np.zeros(pad, bool)])
+            cv = np.concatenate([cv, np.zeros((pad, self.cfg.dim),
+                                              np.float32)])
+            ci = np.concatenate([ci, np.zeros(pad, np.int32)])
+            ct = np.concatenate([ct, np.full(pad, -1, np.int32)])
+            st, ok = self._cache_admit_fn(
+                self.state, jnp.asarray(cv), jnp.asarray(ci),
+                jnp.asarray(ct), jnp.asarray(want))
+            self.state = jax.device_put(st, self._shardings)
+            got = int(np.asarray(ok).sum())
+            n += got
+            if got < int(want.sum()):
+                break                       # cache full — rest rejected
         self.stats["host_cached"] += n
         return n
 

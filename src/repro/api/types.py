@@ -8,15 +8,22 @@ pins that contract structurally (``typing.Protocol``: no inheritance
 required), and the three result dataclasses replace the ad-hoc
 dict/tuple returns the engines used to hand back.
 
-Compatibility dunders: ``SearchResult`` iterates as ``(ids, scores)``
-and the update/tick results subscript like the dicts they replace, so
-``found, _ = idx.search(q, k)`` and ``r["accepted"]`` keep working while
-call sites migrate to attribute access.
+The protocol is **batch-first**: ``insert``/``delete``/``search`` take
+whole arrays, because every device program underneath is a fixed-shape
+padded round.  Per-request serving (one query, one ticket) is the
+*serving engine*'s job (``repro.serving``): it folds single
+:class:`SearchRequest`\\ s into padded batches and hands each caller a
+:class:`Ticket`.  Engines never see individual requests.
+
+The PR 3 tuple/dict-compat dunders (``found, _ = idx.search(...)``,
+``r["accepted"]``) are GONE — use the named fields (``res.ids``,
+``res.scores``, ``r.accepted``).  See CHANGES.md for the migration
+note.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator, Mapping, Protocol, runtime_checkable
+from typing import Any, Callable, Mapping, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -30,10 +37,6 @@ class SearchResult:
     ids: np.ndarray
     scores: np.ndarray
     seconds: float = 0.0
-
-    def __iter__(self) -> Iterator[np.ndarray]:
-        # legacy tuple shape: ``found, scores = idx.search(q, k)``
-        return iter((self.ids, self.scores))
 
 
 @dataclasses.dataclass
@@ -54,10 +57,6 @@ class UpdateResult:
     @property
     def applied(self) -> int:
         return self.accepted + self.cached + self.deleted
-
-    def __getitem__(self, key: str):
-        # legacy dict shape: ``r["accepted"]``
-        return getattr(self, key)
 
 
 @dataclasses.dataclass
@@ -80,8 +79,79 @@ class TickReport:
     promoted: int = 0
     seconds: float = 0.0
 
-    def __getitem__(self, key: str):
-        return getattr(self, key)
+
+# ---------------------------------------------------------------------------
+# request-first serving types (consumed by repro.serving)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One enqueued query.  The serving engine folds requests into
+    padded device batches (fill-or-deadline), so a request is the unit
+    of *latency accounting*, never the unit of device dispatch.
+
+    ``t_submit`` is the submit timestamp on the engine's clock —
+    injectable, so arrival traces replay deterministically in tests and
+    in the open-loop benchmark."""
+
+    vector: np.ndarray
+    k: int
+    t_submit: float
+    ticket: "Ticket"
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Caller-side handle for one in-flight serving request.
+
+    Resolved by the serving engine when the batch carrying the request
+    completes; ``latency_s`` is then (resolve time - submit time) on the
+    engine's clock.  ``result()`` pumps the owning engine until the
+    ticket resolves, so a caller that only holds tickets can still make
+    progress without touching the engine directly.
+    """
+
+    kind: str                        # "search" | "insert" | "delete"
+    seq: int                         # engine-unique, monotone
+    t_submit: float
+    _value: Any = None
+    _done: bool = False
+    _t_done: float = 0.0
+    # backref used by result() to drive the queue; None once resolved
+    _pump: Optional[Callable[[], Any]] = None
+
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def latency_s(self) -> float:
+        if not self._done:
+            raise RuntimeError(f"ticket {self.kind}#{self.seq} unresolved")
+        return self._t_done - self.t_submit
+
+    def result(self, max_pumps: int = 10_000):
+        """The resolved value (``SearchResult`` row view for searches,
+        ``UpdateResult`` for updates).  Pumps the owning engine until
+        the ticket resolves."""
+        pumps = 0
+        while not self._done:
+            if self._pump is None:
+                raise RuntimeError(
+                    f"ticket {self.kind}#{self.seq} unresolved and "
+                    "detached from its engine")
+            self._pump()
+            pumps += 1
+            if pumps > max_pumps:
+                raise RuntimeError(
+                    f"ticket {self.kind}#{self.seq} still unresolved "
+                    f"after {pumps} pumps — engine wedged?")
+        return self._value
+
+    def _resolve(self, value, t_done: float) -> None:
+        self._value = value
+        self._t_done = t_done
+        self._done = True
+        self._pump = None
 
 
 @runtime_checkable

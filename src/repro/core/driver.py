@@ -17,9 +17,10 @@ Mode differences (cfg.mode):
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import defaultdict
-from typing import Iterable, Optional
+from typing import Any, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,28 @@ from .types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT, IndexState,
 
 KIND_CODES = {"split": KIND_SPLIT, "merge": KIND_MERGE,
               "compact": KIND_COMPACT}
+
+
+@dataclasses.dataclass
+class SearchDispatch:
+    """An in-flight search: the jitted program has been LAUNCHED but not
+    awaited.  ``collect_search`` blocks on the device values, runs the
+    host tier rerank against the state *captured at dispatch* (the
+    result answers for the index as of dispatch time, even if a tick ran
+    in between), and returns the ``SearchResult``.
+
+    This is the overlap seam the serving engine uses: dispatch a search
+    batch, run an insert round or a background tick while the device
+    works, then collect.
+    """
+
+    state: Any                       # IndexState captured at dispatch
+    queries: np.ndarray              # host copy, for the tier rerank
+    k: int
+    found: Any                       # device (Q, k_eff) int32
+    scores: Any                      # device (Q, k_eff) f32
+    probe: Any                       # device probed pids
+    t0: float
 
 
 class UBISDriver:
@@ -54,7 +77,8 @@ class UBISDriver:
                  pq_retrain_every: int = 32,
                  fused_tick: bool = False,
                  tier_moves_per_tick: int = 32,
-                 tier_rerank_host: bool = True):
+                 tier_rerank_host: bool = True,
+                 tier_async: bool = False):
         self.cfg = cfg
         self.round_size = int(round_size)
         self.bg_ops = int(bg_ops_per_round)
@@ -70,6 +94,10 @@ class UBISDriver:
         self.tier = (tier_mod.TierManager(
             cfg, max_moves=int(tier_moves_per_tick),
             rerank_host=tier_rerank_host) if cfg.use_tier else None)
+        # tier_async: dispatch the tick's spill/promote DMA at tick
+        # START (overlapping the background round) and reconcile at tick
+        # end, instead of the synchronous plan+move at tick end
+        self.tier_async = bool(tier_async)
         self._bg_ran = False
         self._ticks = 0
         self._pq_key = jax.random.key(seed + 0x517C0DE)
@@ -179,7 +207,15 @@ class UBISDriver:
 
     def search(self, queries, k: int,
                nprobe: Optional[int] = None) -> SearchResult:
-        queries = jnp.asarray(np.asarray(queries, np.float32))
+        return self.collect_search(self.dispatch_search(queries, k, nprobe))
+
+    def dispatch_search(self, queries, k: int,
+                        nprobe: Optional[int] = None) -> SearchDispatch:
+        """Launch the jitted search WITHOUT waiting for it (JAX async
+        dispatch: the call returns as soon as the program is enqueued).
+        The serving engine overlaps inserts/ticks here; pair with
+        ``collect_search``."""
+        queries = np.asarray(queries, np.float32)
         t0 = time.perf_counter()
         # host rerank widens the final candidate set to rerank_k (the
         # device top-k orders spilled candidates by ADC score, so the
@@ -190,22 +226,31 @@ class UBISDriver:
                  if self.tier is not None and self.tier.rerank_host
                  else k)
         found, scores, probe = search_mod.search(
-            self.state, self.cfg, queries, k_eff, nprobe)
-        found = np.asarray(found)
-        scores = np.asarray(scores)
+            self.state, self.cfg, jnp.asarray(queries), k_eff, nprobe)
+        return SearchDispatch(state=self.state, queries=queries, k=k,
+                              found=found, scores=scores, probe=probe,
+                              t0=t0)
+
+    def collect_search(self, disp: SearchDispatch) -> SearchResult:
+        """Await a dispatched search and finish the host-side tail
+        (heat notes, tier rerank, stats) against the dispatch-time
+        state."""
+        found = np.asarray(disp.found)
+        scores = np.asarray(disp.scores)
+        probe = np.asarray(disp.probe)
         if self.tier is not None:
             # probes are the search-heat signal (promote trigger), and
             # spilled candidates in the final candidate set get their
             # true distance from the pinned pool (optional host rerank)
-            self.tier.note_probes(np.asarray(probe))
-            found, scores = self.tier.rerank(self.state, queries, found,
-                                             scores)
-            found, scores = found[:, :k], scores[:, :k]
-        dt = time.perf_counter() - t0
+            self.tier.note_probes(probe)
+            found, scores = self.tier.rerank(disp.state, disp.queries,
+                                             found, scores)
+            found, scores = found[:, :disp.k], scores[:, :disp.k]
+        dt = time.perf_counter() - disp.t0
         self.stats["search_time"] += dt
-        self.stats["queries"] += queries.shape[0]
+        self.stats["queries"] += disp.queries.shape[0]
         if not self.cfg.is_ubis:
-            self._note_spfresh_small(np.asarray(probe))
+            self._note_spfresh_small(probe)
         return SearchResult(ids=found, scores=scores, seconds=dt)
 
     # ------------------------------------------------------------------
@@ -218,13 +263,31 @@ class UBISDriver:
         codebooks on cadence, and (cold tier) run the spill/promote
         planner."""
         t0 = time.perf_counter()
+        plan = None
+        if self.tier is not None and self.tier_async:
+            # tick-start dispatch: the spill tiles' D2H copy and the
+            # promote tiles' H2D staging run while the background round
+            # executes below; reconcile validates + commits at tick end.
+            # Whether the round will carry the decay is known now — the
+            # marked batch was chosen LAST tick.
+            will_decay = (self._marked_dev is not None if self.fused_tick
+                          else bool(self._marked))
+            self.state, plan = self.tier.dispatch(self.state,
+                                                  decayed=will_decay)
         executed = self._execute_marked()
         self.stats["bg_exec_time"] += time.perf_counter() - t0
         drained = self._drain_cache() if self.cfg.is_ubis else 0
         marked = self._mark_candidates()
         reclaimed = self._gc()
         retrained = self._pq_retrain()
-        spilled, promoted = self._tier_step()
+        if self.tier is not None and self.tier_async:
+            self.state, n_s, n_p = self.tier.reconcile(self.state, plan)
+            self.stats["tier_spilled"] += n_s
+            self.stats["tier_promoted"] += n_p
+            self.stats["tier_resident"] = len(self.tier.pool)
+            spilled, promoted = n_s, n_p
+        else:
+            spilled, promoted = self._tier_step()
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed

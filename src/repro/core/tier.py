@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,11 +85,24 @@ def decay_round(state: IndexState) -> IndexState:
     return dataclasses_replace(state, heat=state.heat >> 1)
 
 
+@jax.jit
+def gather_tiles(state: IndexState, pids) -> jax.Array:
+    """The *dispatch half* of a spill: gather the planned postings'
+    float tiles as one device array.  The caller starts the async
+    device→host copy (``copy_to_host_async``) on the result and commits
+    the spill later with :func:`spill_round` — which is what lets the
+    DMA overlap the tick's background round instead of blocking at the
+    ``np.asarray`` seam."""
+    M = state.lengths.shape[0]
+    return state.vectors[jnp.clip(jnp.asarray(pids, jnp.int32), 0, M - 1)]
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def spill_round(state: IndexState, cfg: UBISConfig, pids, valid):
-    """Demote postings to the cold tier: zero the device float tiles and
+    """The *reconcile half* of a spill: zero the device float tiles and
     raise ``tier_spilled``.  The caller MUST have copied the tile bytes
-    to the host pool first — this round destroys the device copy."""
+    to the host pool first (``gather_tiles`` + async copy) — this round
+    destroys the device copy."""
     M = state.lengths.shape[0]
     tgt = oob(jnp.asarray(pids, jnp.int32), valid, M)
     vectors = state.vectors.at[tgt].set(
@@ -260,7 +274,14 @@ def host_rerank(found, scores, queries, pool: HostTierPool, loc,
     tier_spilled = np.asarray(tier_spilled)
     in_post = (found >= 0) & (loc >= 0)
     pid = np.where(in_post, loc // capacity, 0)
-    sp = in_post & tier_spilled[pid]
+    # membership guard: with dispatch/collect overlap the flags can be a
+    # tick stale — a posting promoted in between has no pool tile any
+    # more (its candidate keeps the device score, which is now exact)
+    member = np.zeros(tier_spilled.shape[0], bool)
+    pp = pool.pids()
+    if pp.size:
+        member[pp] = True
+    sp = in_post & tier_spilled[pid] & member[pid]
     if not sp.any():
         return found, scores
     qi, ci = np.nonzero(sp)
@@ -301,6 +322,37 @@ def host_exact_candidates(pool: HostTierPool, sp_pids, ids_rows,
     return s, ids.astype(np.int32)
 
 
+@dataclasses.dataclass
+class TierPlan:
+    """An in-flight tier tick: planned moves whose DMA was dispatched at
+    tick start (``TierManager.dispatch``) and will be committed at tick
+    end (``TierManager.reconcile``).
+
+    Spill tiles are gathered on-device and their host copy started with
+    ``copy_to_host_async`` — the D2H DMA overlaps the background round.
+    Because the round can mutate the very postings we planned against
+    (reassign appends, compaction, structural marking), each spill lane
+    carries a *staleness signature* (length + used-slots at dispatch);
+    reconcile drops any lane whose signature no longer matches, or whose
+    posting is no longer a hot NORMAL one.  Promote lanes are validated
+    by pool membership (``promote_retrain_pinned`` can pop entries
+    mid-tick) — the pooled bytes themselves cannot go stale, spilled
+    postings are excluded from every float-write path.
+    """
+
+    spill_pids: np.ndarray           # (B,) int32, -1 padded
+    spill_tiles: jax.Array           # (B, C, d) device gather, D2H started
+    spill_sig_len: np.ndarray        # (B,) lengths at dispatch
+    spill_sig_used: np.ndarray       # (B,) used-slots at dispatch
+    promote_pids: np.ndarray         # (P,) int32, -1 padded
+    promote_tiles: Optional[jax.Array]   # (P, C, d) staged H2D, or None
+
+    @property
+    def n_planned(self) -> int:
+        return int((self.spill_pids >= 0).sum()
+                   + (self.promote_pids >= 0).sum())
+
+
 class TierManager:
     """Host orchestration of the cold tier, shared by both drivers.
 
@@ -310,6 +362,11 @@ class TierManager:
     per-batch retraces, no collectives).  All methods are pure
     ``state -> (state, n)`` at the driver's call sites; the sharded
     driver re-pins shardings after the tick's tier mutations.
+
+    The per-tick step comes in two shapes: the synchronous ``tick`` (plan
+    and move in one call, the PR 5 behavior) and the split
+    ``dispatch``/``reconcile`` pair that lets a driver start the move DMA
+    before its background round and commit after it (``tier_async``).
     """
 
     def __init__(self, cfg: UBISConfig, *, max_moves: int = 32,
@@ -337,7 +394,23 @@ class TierManager:
     def tick(self, state: IndexState, *, decayed: bool):
         """Apply accumulated touches, decay (when the background round
         did not run this tick), promote, then spill.  Returns
-        (state, n_spilled, n_promoted)."""
+        (state, n_spilled, n_promoted).
+
+        Synchronous shape: dispatch + immediate reconcile.  Every
+        signature is trivially fresh, so this is the exact PR 5
+        behavior."""
+        state, plan = self.dispatch(state, decayed=decayed)
+        return self.reconcile(state, plan)
+
+    def dispatch(self, state: IndexState, *, decayed: bool):
+        """Tick-start half: apply touches/decay, plan this tick's moves,
+        and START their DMA — the spill tiles' device gather plus async
+        device→host copy, and the promote tiles' host→device staging.
+        Returns (state, plan); the plan is None when nothing moves.
+
+        ``decayed`` says whether a background round will carry (or, for
+        the sync tick, carried) the heat decay this tick.
+        """
         from . import version_manager as vm
         cfg = self.cfg
         if self._counts.any():
@@ -349,11 +422,11 @@ class TierManager:
         spilled = np.asarray(state.tier_spilled)
         alloc = np.asarray(state.allocated)
         status = np.asarray(vm.unpack_status(state.rec_meta))
+        lengths = np.asarray(state.lengths)
+        used = np.asarray(state.used)
         promos = self.planner.plan_promotes(
-            heat, spilled, alloc, status, np.asarray(state.lengths),
-            np.asarray(state.used), l_min=cfg.l_min, l_max=cfg.l_max,
-            capacity=cfg.capacity)
-        state, n_p = self._promote(state, promos)
+            heat, spilled, alloc, status, lengths, used,
+            l_min=cfg.l_min, l_max=cfg.l_max, capacity=cfg.capacity)
         spilled = spilled.copy()
         spilled[promos] = False
         # mirror promote_round's device heat write (promoted postings
@@ -369,7 +442,75 @@ class TierManager:
         # nothing promoted this tick may be spilled in the same tick
         if len(promos):
             spills = spills[~np.isin(spills, promos)]
-        state, n_s = self._spill(state, spills)
+        if not len(promos) and not len(spills):
+            return state, None
+        B = self.planner.max_moves
+        spill_pids = np.full(B, -1, np.int32)
+        spill_pids[:len(spills)] = spills
+        spill_tiles = gather_tiles(state, jnp.asarray(spill_pids))
+        spill_tiles.copy_to_host_async()
+        promote_pids = np.full(B, -1, np.int32)
+        promote_pids[:len(promos)] = promos
+        promote_tiles = None
+        if len(promos):
+            C, d = state.vectors.shape[1:]
+            staged = np.zeros((B, C, d), np.float32)
+            for i, pid in enumerate(promos):
+                staged[i] = self.pool.get(int(pid))
+            promote_tiles = jax.device_put(staged)
+        safe = np.clip(spill_pids, 0, cfg.max_postings - 1)
+        plan = TierPlan(
+            spill_pids=spill_pids, spill_tiles=spill_tiles,
+            spill_sig_len=lengths[safe].copy(),
+            spill_sig_used=used[safe].copy(),
+            promote_pids=promote_pids, promote_tiles=promote_tiles)
+        return state, plan
+
+    def reconcile(self, state: IndexState, plan: Optional[TierPlan]):
+        """Tick-end half: validate the dispatched plan against the
+        CURRENT state and commit the still-fresh lanes.  Returns
+        (state, n_spilled, n_promoted).
+
+        Promotes first (structurally-due postings unblock the round's
+        split/merge next tick), validated by pool membership — a
+        mid-tick ``promote_retrain_pinned`` may have promoted a planned
+        pid already.  Spills are validated by the staleness signature:
+        a lane whose posting was appended to, compacted, marked, or
+        already spilled since dispatch is dropped (its tile bytes are
+        stale) and simply re-planned next tick.
+        """
+        from . import version_manager as vm
+        if plan is None:
+            return state, 0, 0
+        cfg = self.cfg
+        p_pids = plan.promote_pids
+        p_valid = np.array([int(p) >= 0 and int(p) in self.pool
+                            for p in p_pids])
+        n_p = int(p_valid.sum())
+        if n_p:
+            for pid in p_pids[p_valid]:
+                self.pool.take(int(pid))     # bytes already staged
+            state = promote_round(state, cfg, jnp.asarray(p_pids),
+                                  plan.promote_tiles,
+                                  jnp.asarray(p_valid))
+        s_pids = plan.spill_pids
+        safe = np.clip(s_pids, 0, cfg.max_postings - 1)
+        status = np.asarray(vm.unpack_status(state.rec_meta))
+        s_valid = ((s_pids >= 0)
+                   & (status[safe] == STATUS_NORMAL)
+                   & ~np.asarray(state.tier_spilled)[safe]
+                   & np.asarray(state.allocated)[safe]
+                   & (np.asarray(state.lengths)[safe]
+                      == plan.spill_sig_len)
+                   & (np.asarray(state.used)[safe]
+                      == plan.spill_sig_used))
+        n_s = int(s_valid.sum())
+        if n_s:
+            tiles = np.asarray(plan.spill_tiles)   # async copy landed
+            for i in np.flatnonzero(s_valid):
+                self.pool.put(int(s_pids[i]), tiles[i])
+            state = spill_round(state, cfg, jnp.asarray(s_pids),
+                                jnp.asarray(s_valid))
         return state, n_s, n_p
 
     def force_spill(self, state: IndexState, n: int):

@@ -5,10 +5,13 @@ vectors for a *fresh* document stream, UBIS indexes them online
 (insert/delete/split/merge concurrent with search), and queries are
 answered with retrieve(-then-generate).
 
-The server batches requests (fixed batch, padded), embeds with the LM
-backbone (mean-pooled final hidden states), and drives the UBIS driver's
-foreground/background phases exactly like the paper's thread pools
-(DESIGN.md §2: threads -> phases).
+``RetrievalServer`` is a thin client of the serving layer: every ingest
+batch and query goes through a ``repro.serving.ServingEngine`` (request
+queue, fill-or-deadline batching, dispatch/collect overlap); the
+synchronous shape the old server had — embed → insert → tick → search,
+one tick per ingest — is the ``tick_every=1`` default of the engine's
+cadence knob, so the default behavior is unchanged while ``--async-mode``
+(or a custom ``ServingConfig``) turns on real overlap.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import argparse
 import dataclasses
 import sys
 import time
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +29,7 @@ from repro.api import make_index
 from repro.core import UBISConfig, metrics as ubis_metrics
 from repro.models import get_model
 from repro.models.layers import values
+from repro.serving import ServingConfig, ServingEngine
 
 
 @dataclasses.dataclass
@@ -37,11 +41,15 @@ class ServeConfig:
     k: int = 10
     index_dim: int = 64
     seed: int = 0
+    # background-tick cadence: one index.tick() per N ingest batches
+    # (0 = never; the old server ticked unconditionally per ingest)
+    tick_every: int = 1
 
 
 class EmbeddingServer:
     """Embeds token sequences with the LM backbone; random projection to
-    the index dimensionality (frozen, seeded)."""
+    the index dimensionality (frozen, seeded).  The backbone builds
+    lazily on first use — vector-only serving never pays for it."""
 
     def __init__(self, cfg: ServeConfig):
         self.cfg = cfg
@@ -71,13 +79,21 @@ class EmbeddingServer:
 class RetrievalServer:
     """Batched streaming retrieval endpoint over any ``StreamingIndex``
     engine (``repro.api.make_index``; default the single-device UBIS
-    driver, ``engine="ubis-sharded"`` for the pod-sharded one)."""
+    driver, ``engine="ubis-sharded"`` for the pod-sharded one).
+
+    All traffic rides the serving engine's queue.  The default
+    ``serving_cfg`` preserves the classic synchronous loop (each ingest
+    batch flushes immediately and ticks per ``ServeConfig.tick_every``);
+    pass a ``ServingConfig`` with real deadlines for open-loop serving.
+    """
 
     def __init__(self, cfg: ServeConfig, index_cfg: Optional[UBISConfig]
                  = None, seed_vectors: Optional[np.ndarray] = None,
-                 engine: str = "ubis", **engine_kw):
+                 engine: str = "ubis",
+                 serving_cfg: Optional[ServingConfig] = None,
+                 **engine_kw):
         self.cfg = cfg
-        self.embedder = EmbeddingServer(cfg)
+        self._embedder: Optional[EmbeddingServer] = None
         if index_cfg is None:
             index_cfg = UBISConfig(dim=cfg.embed_dim, max_postings=2048,
                                    capacity=96, max_ids=1 << 20,
@@ -87,8 +103,18 @@ class RetrievalServer:
                 size=(1024, index_cfg.dim)).astype(np.float32)
         self.index = make_index(engine, index_cfg, seed_vectors,
                                 **engine_kw)
+        if serving_cfg is None:
+            serving_cfg = ServingConfig(default_k=cfg.k,
+                                        tick_every=cfg.tick_every)
+        self.engine = ServingEngine(self.index, serving_cfg)
         self._next_id = 0
         self.stats = {"ingested": 0, "queries": 0}
+
+    @property
+    def embedder(self) -> EmbeddingServer:
+        if self._embedder is None:
+            self._embedder = EmbeddingServer(self.cfg)
+        return self._embedder
 
     # -- streaming ingestion ------------------------------------------------
 
@@ -98,30 +124,43 @@ class RetrievalServer:
         return self.ingest_vectors(vecs)
 
     def ingest_vectors(self, vecs: np.ndarray) -> np.ndarray:
+        """Enqueue + flush one ingest batch.  Background ticks follow
+        the engine's ``tick_every`` cadence (the old unconditional
+        tick-per-ingest is the default, ``tick_every=1``)."""
         ids = np.arange(self._next_id, self._next_id + len(vecs))
         self._next_id += len(vecs)
-        self.index.insert(vecs, ids)
-        self.index.tick()
+        self.engine.submit_insert(vecs, ids)
+        self.engine.drain()
         self.stats["ingested"] += len(vecs)
         return ids
 
     def delete(self, ids: np.ndarray):
-        self.index.delete(ids)
+        self.engine.submit_delete(ids)
+        self.engine.drain()
 
     # -- queries -------------------------------------------------------------
 
     def query_tokens(self, token_batch: np.ndarray, k: Optional[int] = None):
         return self.query_vectors(self.embedder.embed(token_batch), k)
 
-    def query_vectors(self, vecs: np.ndarray, k: Optional[int] = None):
+    def query_vectors(self, vecs: np.ndarray,
+                      k: Optional[int] = None):
+        """Queue + resolve a query batch; returns a ``SearchResult``
+        (named fields — the old tuple unpacking is gone)."""
         k = k or self.cfg.k
-        found, scores = self.index.search(vecs, k)
-        self.stats["queries"] += len(vecs)
-        return found, scores
+        tickets = [self.engine.submit_search(v, k) for v in
+                   np.atleast_2d(np.asarray(vecs, np.float32))]
+        self.engine.drain()
+        rows = [t.result() for t in tickets]
+        self.stats["queries"] += len(rows)
+        from repro.api import SearchResult
+        return SearchResult(
+            ids=np.concatenate([r.ids for r in rows]),
+            scores=np.concatenate([r.scores for r in rows]))
 
     def recall_check(self, vecs: np.ndarray, k: int = 10) -> float:
-        found, _ = self.index.search(vecs, k)
-        true, _ = self.index.exact(vecs, k)
+        found = self.index.search(vecs, k).ids
+        true = self.index.exact(vecs, k).ids
         return ubis_metrics.recall_at_k(found, np.asarray(true))
 
 
@@ -134,9 +173,11 @@ def main(argv=None):
     ap.add_argument("--queries", type=int, default=128)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--tick-every", type=int, default=1,
+                    help="background tick per N ingest batches (0=never)")
     args = ap.parse_args(argv)
 
-    cfg = ServeConfig(arch=args.arch)
+    cfg = ServeConfig(arch=args.arch, tick_every=args.tick_every)
     server = RetrievalServer(cfg, engine=args.engine)
     rng = np.random.default_rng(0)
     vocab = server.embedder.model.cfg.vocab
@@ -149,13 +190,13 @@ def main(argv=None):
     t_ing = time.time() - t0
     qt = rng.integers(0, vocab, (args.queries, args.seq)).astype(np.int32)
     t0 = time.time()
-    found, _ = server.query_tokens(qt)
+    res = server.query_tokens(qt)
     t_q = time.time() - t0
     qv = server.embedder.embed(qt)
     rec = server.recall_check(qv)
     print(f"ingested {server.stats['ingested']} docs in {t_ing:.1f}s "
           f"({server.stats['ingested']/t_ing:.0f} docs/s); "
-          f"{args.queries} queries in {t_q:.2f}s; recall@10 {rec:.3f}")
+          f"{res.ids.shape[0]} queries in {t_q:.2f}s; recall@10 {rec:.3f}")
     return 0
 
 

@@ -15,7 +15,8 @@ Importable without pytest so the multi-shard subprocess tests
 multi-device mesh — where the interleaving also exercises the
 cross-shard migrate round.
 
-Engine audit tiers (``AUDIT``):
+Engine audit tiers come from the registry's ``EngineSpec.audit``
+capability flag (``repro.api.engine_spec``):
   * ``state``  — engines exposing the full ``IndexState`` pytree
     (ubis / spfresh / ubis-sharded): exact multiset equality, id AND
     vector bytes, postings + cache;
@@ -27,9 +28,6 @@ Engine audit tiers (``AUDIT``):
 from __future__ import annotations
 
 import numpy as np
-
-AUDIT = {"ubis": "state", "spfresh": "state", "ubis-sharded": "state",
-         "freshdiskann": "count", "spann": "static"}
 # Floors are per-engine honesty bounds, not aspirations: the cluster
 # engines probe every posting (nprobe = max_postings) so anything under
 # 0.9 means the update plane corrupted the index; the graph baseline's
@@ -118,9 +116,14 @@ def run_program(engine, idx, data, seed, *, n_ops=12, k=8,
     identical live multiset (tier state included).
     """
     rng = np.random.default_rng(seed)
-    audit = AUDIT[engine]
-    tiered = bool(getattr(getattr(idx, "cfg", None), "use_tier", False)
-                  and hasattr(idx, "force_spill"))
+    from repro.api import engine_spec
+    spec = engine_spec(engine)
+    audit = spec.audit
+    # the spec says whether the engine CAN tier; the built instance's
+    # cfg says whether this run actually enabled it
+    tiered = (spec.supports_tier
+              and bool(getattr(getattr(idx, "cfg", None), "use_tier",
+                               False)))
     floor = RECALL_FLOOR[engine] if recall_floor is None else recall_floor
     oracle = {}
     if audit in ("static", "count") and seed_ids is not None:
@@ -134,8 +137,8 @@ def run_program(engine, idx, data, seed, *, n_ops=12, k=8,
     n_checks = 0
 
     def check_recall():
-        found, _ = idx.search(queries, k)
-        true, _ = idx.exact(queries, k)
+        found = idx.search(queries, k).ids
+        true = idx.exact(queries, k).ids
         rec = recall_at_k(found, true)
         assert rec >= floor, (engine, rec, floor)
         if audit == "count" and deleted_ever:

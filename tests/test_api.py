@@ -43,18 +43,21 @@ def test_engine_contract_churn(engine):
     r = idx.insert(data[400:900], np.arange(400, 900))
     assert isinstance(r, UpdateResult)
     assert r.accepted + r.cached + r.rejected == 500
-    assert r["accepted"] == r.accepted      # legacy dict access
+    with pytest.raises(TypeError):
+        r["accepted"]                        # PR 3 dict shim is gone
 
     t = idx.tick()
     assert isinstance(t, TickReport)
-    assert t.executed >= 0 and t["executed"] == t.executed
+    assert t.executed >= 0
+    with pytest.raises(TypeError):
+        t["executed"]                        # PR 3 dict shim is gone
 
     s = idx.search(q, 5)
     assert isinstance(s, SearchResult)
     assert s.ids.shape == (24, 5) and s.scores.shape == (24, 5)
     assert np.issubdtype(s.ids.dtype, np.integer)
-    found, scores = s                        # legacy tuple unpacking
-    assert found is s.ids and scores is s.scores
+    with pytest.raises(TypeError):
+        iter(s)                              # PR 3 tuple shim is gone
 
     d = idx.delete(np.arange(410, 430))
     assert isinstance(d, UpdateResult)
@@ -81,7 +84,7 @@ def test_spann_refuses_updates_as_counts():
     d = idx.delete(np.arange(10))
     assert (d.deleted, d.blocked) == (0, 10)
     # the seed corpus itself is searchable
-    found, _ = idx.search(data[:8], 1)
+    found = idx.search(data[:8], 1).ids
     assert (found[:, 0] == np.arange(8)).all()
 
 
@@ -155,10 +158,10 @@ def test_sharded_one_shard_matches_single_device(seed):
         f"{sum(m_single[i] != m_sharded[i] for i in m_single if i in m_sharded)} vector mismatches")
 
     q = make_clustered(48, d=DIM, k=10, seed=99)
-    fs, ss = single.search(q, 10)
-    fd, sd = sharded.search(q, 10)
-    np.testing.assert_allclose(ss, sd, rtol=1e-4, atol=1e-4)
-    for row_s, row_d in zip(fs, fd):
+    rs = single.search(q, 10)
+    rd = sharded.search(q, 10)
+    np.testing.assert_allclose(rs.scores, rd.scores, rtol=1e-4, atol=1e-4)
+    for row_s, row_d in zip(rs.ids, rd.ids):
         assert set(row_s.tolist()) == set(row_d.tolist())
 
 
@@ -196,7 +199,7 @@ def test_sharded_tick_exercises_drain_gc_pq():
     live = _live_map(drv.snapshot(), cfg)
     assert set(live) == set(range(1400)), len(live)
     # search still answers through the PQ phase-2 path
-    found, _ = drv.search(data[:8], 5)
+    found = drv.search(data[:8], 5).ids
     rec = metrics.recall_at_k(
         np.asarray(found), np.asarray(drv.exact(data[:8], 5).ids))
     assert rec > 0.9, rec
@@ -233,10 +236,29 @@ def test_freshdiskann_reinsert_is_upsert():
     assert idx.live_count() == 100, idx.live_count()
     idx.delete(np.arange(40))
     idx.flush()
-    found, _ = idx.search(data[:40], 3)
+    found = idx.search(data[:40], 3).ids
     hits = set(int(f) for f in np.asarray(found).ravel() if f >= 0)
     assert not (hits & set(range(40))), "deleted ids resurfaced"
     assert idx.live_count() == 60
+
+
+def test_registry_capabilities():
+    """list_engines() exposes one EngineSpec per engine with honest
+    capability flags — the probe-with-try/except pattern's replacement."""
+    from repro.api import EngineSpec, engine_spec, list_engines
+    specs = list_engines()
+    assert tuple(s.name for s in specs) == ENGINES
+    assert all(isinstance(s, EngineSpec) for s in specs)
+    ubis = engine_spec("ubis")
+    assert ubis.supports_tier and ubis.supports_pq
+    assert not ubis.supports_shards and ubis.updatable
+    sharded = engine_spec("ubis-sharded")
+    assert sharded.supports_shards and sharded.supports_tier
+    spann = engine_spec("spann")
+    assert not spann.updatable and spann.audit == "static"
+    assert engine_spec("freshdiskann").audit == "count"
+    with pytest.raises(ValueError):
+        engine_spec("hnswlib")
 
 
 def test_quickstart_example_runs_every_engine():

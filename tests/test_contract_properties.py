@@ -16,8 +16,9 @@ exercises the cross-shard migrate round) lives in ``test_rebalance.py``
 import numpy as np
 import pytest
 
-from repro.api import ENGINES, make_index
+from repro.api import ENGINES, engine_spec, list_engines, make_index
 from repro.core import UBISConfig
+from repro.serving import QueuedIndex
 
 from contract_harness import make_clustered, run_program
 
@@ -51,19 +52,29 @@ def _build(engine, data, seed, cfg_kw=None):
     if engine == "ubis-sharded":
         kw["mesh"] = jax.make_mesh((1, 1), ("data", "model"))
     idx = make_index(engine, _cfg(**(cfg_kw or {})), data[:n_seed], **kw)
+    # build-once / graph engines ingest the seed corpus at construction
+    # (the registry's audit tier encodes which semantics an engine has)
     seed_ids = (np.arange(n_seed)
-                if engine in ("spann", "freshdiskann") else None)
+                if engine_spec(engine).audit in ("static", "count")
+                else None)
     return idx, seed_ids
 
 
-def _run(engine, seed, cfg_kw=None, restore: bool = False):
+def _run(engine, seed, cfg_kw=None, restore: bool = False,
+         queued: bool = False):
     data = make_clustered(N_DATA, d=DIM, k=10, seed=100 + seed)
     idx, seed_ids = _build(engine, data, seed, cfg_kw)
+    if queued:
+        # every op rides the serving queue (submit -> drain -> resolve);
+        # the oracle checks are unchanged, which is the proof the queue
+        # adds scheduling, not semantics
+        idx = QueuedIndex(idx)
     restore_fn = None
     if restore:
         def restore_fn(snap):
             idx2, _ = _build(engine, data, seed, cfg_kw)
-            return idx2.load_snapshot(snap)
+            idx2 = idx2.load_snapshot(snap)
+            return QueuedIndex(idx2) if queued else idx2
     oracle, stats = run_program(engine, idx, data, seed,
                                 seed_ids=seed_ids, restore_fn=restore_fn)
     return stats
@@ -81,8 +92,9 @@ def test_contract_random_interleaving(engine):
 # the interleaving with forced spill/promote ops and the
 # snapshot->restore equivalence check; the oracle checks are identical
 # to the tiering-off runs above, which is the "indistinguishable from
-# the all-float program" acceptance.
-TIER_ENGINES = ("ubis", "spfresh", "ubis-sharded")
+# the all-float program" acceptance.  The tier-capable set comes from
+# the registry's capability flags, not a hard-coded name tuple.
+TIER_ENGINES = tuple(s.name for s in list_engines() if s.supports_tier)
 
 
 @pytest.mark.parametrize("engine", TIER_ENGINES)
@@ -103,6 +115,25 @@ def test_contract_random_interleaving_tiered_more_seeds(engine, seed):
 @pytest.mark.parametrize("seed", [1, 2])
 def test_contract_random_interleaving_more_seeds(engine, seed):
     _run(engine, seed)
+
+
+# ---- serving-queue layer: the same programs through the queue ---------
+# ``QueuedIndex`` submits every op to a ServingEngine and drains, so the
+# whole differential harness (oracle multiset, recall floors, tier
+# transitions, snapshot->restore) runs with requests folded into padded
+# batches by the fill-or-deadline scheduler.
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_contract_through_serving_queue(engine):
+    stats = _run(engine, seed=0, queued=True)
+    assert stats["inserted"] > 0
+
+
+@pytest.mark.parametrize("engine", ("ubis", "ubis-sharded"))
+def test_contract_through_serving_queue_tiered(engine):
+    stats = _run(engine, seed=0, cfg_kw=TIER_KW, restore=True,
+                 queued=True)
+    assert stats["inserted"] > 0
 
 
 # ---- hypothesis layer (skips gracefully when not installed) ----------

@@ -106,7 +106,7 @@ def test_sharded_search_pq_phase2():
         # apples to apples: the sharded ADC path must not trail the
         # single-device ADC path (it reranks rerank_k PER SHARD, so it
         # usually leads slightly); coarse m=4 codes cap both ~0.88
-        found_1, _ = drv.search(q, 10)
+        found_1 = drv.search(q, 10).ids
         rec_1 = metrics.recall_at_k(np.asarray(found_1),
                                     np.asarray(true))
         assert rec >= rec_1 - 0.02, (rec, rec_1)
@@ -269,8 +269,8 @@ def test_sharded_driver_end_to_end_multishard():
         from repro.core import metrics
         q = (cents[r.integers(0, 12, 64)]
              + r.normal(size=(64, 16))).astype(np.float32)
-        found, _ = drv.search(q, 10)
-        true, _ = drv.exact(q, 10)
+        found = drv.search(q, 10).ids
+        true = drv.exact(q, 10).ids
         rec = metrics.recall_at_k(np.asarray(found), np.asarray(true))
         assert rec > 0.95, rec
         print("OK", len(live), "live")

@@ -32,7 +32,7 @@ def test_driver_workload_on_pallas_interpret(use_pq):
     drv.flush(max_ticks=12)
     assert drv.stats["bg_ops"] > 0, "workload exercised no structural ops"
     q = make_clustered(8, d=cfg.dim, k=5, seed=7)
-    found, _ = drv.search(q, 10)
+    found = drv.search(q, 10).ids
     true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
     rec = metrics.recall_at_k(found, np.asarray(true))
     floor = 0.8 if use_pq else 0.9

@@ -113,7 +113,7 @@ def test_random_schedule_invariants(mode, data):
             drv.tick()
         elif op == "search":
             q = rng.normal(size=(8, DIM)).astype(np.float32)
-            found, _ = drv.search(q, 5)
+            found = drv.search(q, 5).ids
             # results only contain live ids
             for f in found.ravel():
                 assert f == -1 or int(f) in live

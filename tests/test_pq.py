@@ -141,7 +141,7 @@ def test_pq_search_recall_close_to_float():
     cfg = _mk_cfg(pq_m=8, pq_ksub=64, rerank_k=96)
     drv, data = _churn(cfg, seed=4, n=3000)
     queries = make_clustered(64, d=cfg.dim, seed=11)
-    found, _ = drv.search(queries, 10)
+    found = drv.search(queries, 10).ids
     true, _ = brute_force(drv.state, drv.cfg, jnp.asarray(queries), 10)
     rec_pq = metrics.recall_at_k(found, np.asarray(true))
     # same state searched through the float phase-2 (use_pq off)

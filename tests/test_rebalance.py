@@ -330,8 +330,8 @@ def test_zipf_stream_matches_uniform_acceptance():
                 drv.flush(max_ticks=20)
             drv.flush(max_ticks=60)
             q = stream(kind, 64)
-            found, _ = drv.search(q, 10)
-            true, _ = drv.exact(q, 10)
+            found = drv.search(q, 10).ids
+            true = drv.exact(q, 10).ids
             occ = drv.shard_occupancy()
             results[kind] = dict(
                 recall=metrics.recall_at_k(np.asarray(found),
@@ -395,8 +395,8 @@ def test_migrate_moves_spilled_postings_without_promoting():
         assert pool_now != pool_before or not pool_now
         assert drv.live_count() == 3000
         q = data[:32]
-        found, _ = drv.search(q, 10)
-        true, _ = drv.exact(q, 10)
+        found = drv.search(q, 10).ids
+        true = drv.exact(q, 10).ids
         rec = metrics.recall_at_k(np.asarray(found), np.asarray(true))
         assert rec >= 0.9, rec
         print("OK", len(pool_now), int(drv.stats['migrated']))
@@ -445,8 +445,8 @@ def test_pressure_aware_routing_cuts_migration_volume():
             drv.flush(max_ticks=40)
             assert drv.live_count() == 4000
             q = np.concatenate([warm[:24], hot[:24]])
-            found, _ = drv.search(q, 10)
-            true, _ = drv.exact(q, 10)
+            found = drv.search(q, 10).ids
+            true = drv.exact(q, 10).ids
             rec = metrics.recall_at_k(np.asarray(found),
                                       np.asarray(true))
             assert rec >= 0.95, (alpha, rec)

@@ -24,7 +24,7 @@ def _driver(n=4000, mode="ubis", dim=16):
 def test_recall_floor():
     drv, cfg, data = _driver()
     q = make_clustered(64, d=16, seed=11)
-    found, _ = drv.search(q, 10)
+    found = drv.search(q, 10).ids
     true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
     rec = metrics.recall_at_k(found, np.asarray(true))
     assert rec > 0.9, rec
@@ -39,7 +39,7 @@ def test_recall_after_churn():
     drv.insert(fresh, np.arange(10000, 11500))
     drv.flush(max_ticks=50)
     q = make_clustered(64, d=16, seed=13)
-    found, _ = drv.search(q, 10)
+    found = drv.search(q, 10).ids
     true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
     rec = metrics.recall_at_k(found, np.asarray(true))
     assert rec > 0.85, rec
@@ -81,6 +81,6 @@ def test_cached_vectors_searchable_mid_split():
         size=(16, 8))).astype(np.float32)
     drv.insert(probe_vecs, np.arange(700, 716), tick_between=False)
     assert int(jnp.sum(drv.state.cache_valid)) > 0, "expected cache use"
-    found, _ = drv.search(probe_vecs, 3)
+    found = drv.search(probe_vecs, 3).ids
     hits = sum(1 for i, row in enumerate(found) if 700 + i in row.tolist())
     assert hits >= 14, f"cached vectors invisible to search ({hits}/16)"

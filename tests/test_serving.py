@@ -1,0 +1,280 @@
+"""Serving-engine tests: deterministic batching, ticket/result
+correspondence, overlap semantics, cadence, and tier_async equivalence.
+
+The scheduling tests run against a stub index and a fake clock so the
+fill-or-deadline decisions are a pure function of the arrival trace —
+replaying a seeded trace twice must produce the identical
+``batch_log``.  The semantic tests use real drivers.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import SearchResult, TickReport, UpdateResult, make_index
+from repro.core import UBISConfig, UBISDriver
+from repro.serving import QueuedIndex, ServingConfig, ServingEngine
+from conftest import make_clustered
+
+DIM = 16
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class StubIndex:
+    """Minimal StreamingIndex surface for pure-scheduling tests."""
+
+    def __init__(self):
+        self.calls = []
+
+    def search(self, queries, k):
+        q = np.asarray(queries)
+        self.calls.append(("search", len(q), k))
+        return SearchResult(ids=np.zeros((len(q), k), np.int32),
+                            scores=np.zeros((len(q), k), np.float32))
+
+    def insert(self, vecs, ids):
+        self.calls.append(("insert", len(ids)))
+        return UpdateResult(accepted=len(ids))
+
+    def delete(self, ids):
+        self.calls.append(("delete", len(ids)))
+        return UpdateResult(deleted=len(ids))
+
+    def tick(self):
+        self.calls.append(("tick",))
+        return TickReport()
+
+
+def _cfg(**kw):
+    base = dict(dim=DIM, max_postings=128, capacity=96, l_min=10,
+                l_max=80, nprobe=128, max_ids=1 << 13, use_pallas="off")
+    base.update(kw)
+    return UBISConfig(**base)
+
+
+def _replay(trace, scfg):
+    """Feed a (time, kind) trace through an engine on a fake clock,
+    pumping whenever the engine reports a due deadline; returns the
+    batch log."""
+    clock = FakeClock()
+    idx = StubIndex()
+    eng = ServingEngine(idx, scfg, clock=clock)
+    rng = np.random.default_rng(7)
+    for t, kind in trace:
+        # advance time, firing any deadline that falls before t
+        while True:
+            nd = eng.next_deadline()
+            if nd is None or nd > t:
+                break
+            clock.t = max(clock.t, nd)
+            eng.pump()
+        clock.t = t
+        if kind == "search":
+            eng.submit_search(rng.normal(size=DIM))
+        else:
+            eng.submit_insert(rng.normal(size=(4, DIM)), np.arange(4))
+        eng.pump()                   # fill fires immediately, as due
+    eng.drain()
+    return eng.batch_log
+
+
+def test_deadline_vs_fill_determinism():
+    """Two replays of one seeded arrival trace produce the identical
+    batch log — sizes AND reasons; both fire paths appear."""
+    rng = np.random.default_rng(3)
+    t = 0.0
+    trace = []
+    for _ in range(200):
+        # bursts (sub-deadline gaps -> fill) and lulls (-> deadline)
+        t += float(rng.choice([1e-5, 5e-3], p=[0.85, 0.15]))
+        trace.append((t, "search" if rng.random() < 0.9 else "insert"))
+    scfg = ServingConfig(search_batch=8, insert_batch=64,
+                         search_deadline_s=2e-3, insert_deadline_s=4e-3,
+                         tick_every=0)
+    log1 = _replay(trace, scfg)
+    log2 = _replay(trace, scfg)
+    assert log1 == log2
+    reasons = {r for _, _, r in log1}
+    assert "fill" in reasons and "deadline" in reasons, reasons
+    # a full lane fires at exactly search_batch, never more
+    assert all(n <= 8 for lane, n, _ in log1 if lane == "search")
+    assert any(n == 8 for lane, n, r in log1
+               if lane == "search" and r == "fill")
+
+
+def test_fill_fires_before_deadline():
+    """A lane that reaches search_batch fires immediately ("fill") even
+    though no request has aged past the deadline."""
+    clock = FakeClock()
+    eng = ServingEngine(StubIndex(),
+                        ServingConfig(search_batch=4, tick_every=0,
+                                      search_deadline_s=1.0),
+                        clock=clock)
+    for i in range(4):
+        clock.t = i * 1e-6           # all well within the 1 s deadline
+        eng.submit_search(np.zeros(DIM))
+    assert eng.next_deadline() == clock.t     # due NOW
+    assert eng.pump() == 4
+    assert eng.batch_log == [("search", 4, "fill")]
+    # below fill, nothing fires until the deadline passes
+    eng.submit_search(np.zeros(DIM))
+    assert eng.pump() == 0
+    clock.t += 1.0
+    assert eng.pump() == 1
+    assert eng.batch_log[-1] == ("search", 1, "deadline")
+
+
+def test_ticket_result_correspondence_interleaved():
+    """Interleaved search + insert submissions: every ticket resolves
+    to ITS OWN request's result — search rows match a direct batch
+    search, insert tickets report their batch's counts."""
+    data = make_clustered(900, d=DIM, k=8, seed=11)
+    drv = UBISDriver(_cfg(), data[:300], round_size=256,
+                     bg_ops_per_round=4)
+    drv.insert(data[:600], np.arange(600))
+    drv.flush(max_ticks=30)
+    eng = ServingEngine(drv, ServingConfig(search_batch=8, tick_every=1))
+    direct = drv.search(data[:24], 5)          # ground truth, pre-churn
+
+    tickets = []
+    fresh = iter(range(600, 900))
+    for i in range(24):
+        tickets.append(("search", i, eng.submit_search(data[i], k=5)))
+        if i % 6 == 5:                         # weave the update lane in
+            j = next(fresh)
+            tickets.append(
+                ("insert", j,
+                 eng.submit_insert(data[j:j + 1], np.array([j]))))
+    eng.drain()
+    for kind, i, t in tickets:
+        assert t.done()
+        res = t.result()
+        if kind == "search":
+            assert isinstance(res, SearchResult)
+            assert res.ids.shape == (1, 5)
+            np.testing.assert_array_equal(res.ids[0], direct.ids[i])
+            assert res.seconds >= 0.0 and t.latency_s >= 0.0
+        else:
+            # the four single-row inserts are consecutive in the update
+            # lane, so one drain folds them into ONE driver call and
+            # each ticket resolves to the group aggregate (per-op
+            # exactness = drain per submit, i.e. QueuedIndex)
+            assert isinstance(res, UpdateResult)
+            assert res.accepted + res.cached == 4
+    assert eng.counters["search_requests"] == 24
+    assert eng.counters["update_jobs"] == 4
+
+
+def test_overlap_answers_for_dispatch_time_state():
+    """When a search batch and an insert flush share one pump, the
+    search answers for the index AS OF DISPATCH — the in-flight insert
+    is invisible to it, and visible to the next one."""
+    data = make_clustered(600, d=DIM, k=6, seed=19)
+    drv = UBISDriver(_cfg(), data[:200], round_size=256,
+                     bg_ops_per_round=4)
+    drv.insert(data[:400], np.arange(400))
+    drv.flush(max_ticks=30)
+    eng = ServingEngine(drv, ServingConfig(search_batch=4, tick_every=1))
+    probe = data[500]
+    t1 = eng.submit_search(probe, k=3)
+    # exact duplicate of the probe under a fresh id, queued behind it
+    eng.submit_insert(probe[None], np.array([8000]))
+    eng.drain()                      # one pump: dispatch, insert, collect
+    assert eng.counters["search_batches"] == 1
+    assert 8000 not in set(t1.result().ids.ravel().tolist())
+    t2 = eng.submit_search(probe, k=3)
+    eng.drain()
+    assert int(t2.result().ids[0, 0]) == 8000
+
+
+def test_tick_cadence_knob():
+    """tick_every=N runs one background tick per N update flushes;
+    0 never ticks."""
+    for every, flushes, want in ((1, 4, 4), (2, 4, 2), (0, 4, 0)):
+        idx = StubIndex()
+        eng = ServingEngine(idx, ServingConfig(tick_every=every))
+        for i in range(flushes):
+            eng.submit_insert(np.zeros((2, DIM), np.float32),
+                              np.arange(2) + 10 * i)
+            eng.drain()
+        assert idx.calls.count(("tick",)) == want, (every, idx.calls)
+
+
+def test_queued_index_matches_direct_driver():
+    """QueuedIndex (submit -> drain per op) is semantically transparent:
+    the same workload lands the same live contents and search answers
+    as the bare driver."""
+    data = make_clustered(1200, d=DIM, k=8, seed=23)
+    live = {}
+    res = {}
+    for queued in (False, True):
+        drv = UBISDriver(_cfg(), data[:300], round_size=256,
+                         bg_ops_per_round=8)
+        idx = QueuedIndex(drv) if queued else drv
+        idx.insert(data[:800], np.arange(800))
+        idx.delete(np.arange(100, 200))
+        idx.tick()
+        idx.insert(data[800:], np.arange(800, 1200))
+        idx.flush(max_ticks=40)
+        live[queued] = idx.live_count()
+        res[queued] = idx.search(data[:16], 5)
+    assert live[False] == live[True] == 1100
+    np.testing.assert_array_equal(res[False].ids, res[True].ids)
+    np.testing.assert_allclose(res[False].scores, res[True].scores,
+                               rtol=1e-5)
+
+
+TIER_KW = dict(use_pq=True, pq_m=4, pq_ksub=16, rerank_k=256,
+               use_tier=True, tier_hot_max=8)
+
+
+@pytest.mark.parametrize("engine", ("ubis", "ubis-sharded"))
+def test_tier_async_matches_sync_liveness(engine):
+    """Splitting the tier round into dispatch (tick start) / reconcile
+    (tick end) never changes WHAT is live: the same tiered churn under
+    tier_async holds the sync run's live multiset, keeps serving above
+    the recall floor, and actually spills."""
+    import jax
+    kw = {}
+    if engine == "ubis-sharded":
+        kw["mesh"] = jax.make_mesh((1, 1), ("data", "model"))
+    data = make_clustered(1500, d=DIM, k=8, seed=29)
+    stats = {}
+    for tier_async in (False, True):
+        drv = make_index(engine, _cfg(capacity=96, **TIER_KW),
+                         data[:300], round_size=256, bg_ops_per_round=8,
+                         tier_async=tier_async, **kw)
+        drv.insert(data[:900], np.arange(900))
+        drv.tick()
+        drv.force_spill(6)
+        drv.insert(data[900:], np.arange(900, 1500))
+        drv.delete(np.arange(0, 200))
+        for _ in range(6):
+            drv.tick()
+        drv.flush(max_ticks=40)
+        found = drv.search(data[300:332], 8).ids
+        true = drv.exact(data[300:332], 8).ids
+        hits = sum(len(set(f.tolist()) & set(t.tolist()))
+                   for f, t in zip(np.asarray(found), np.asarray(true)))
+        stats[tier_async] = dict(live=drv.live_count(),
+                                 spilled=drv.stats["tier_spilled"],
+                                 recall=hits / true.size)
+    assert stats[False]["live"] == stats[True]["live"] == 1300
+    assert stats[True]["spilled"] > 0
+    assert stats[True]["recall"] >= 0.9, stats
+
+
+def test_update_result_replace_keeps_counts():
+    """Folded tickets get the group result with their own latency — the
+    replace must never drop counts."""
+    r = UpdateResult(accepted=3, cached=1, rejected=0)
+    r2 = dataclasses.replace(r, seconds=0.5)
+    assert (r2.accepted, r2.cached, r2.applied) == (3, 1, 4)
+    assert r2.seconds == 0.5

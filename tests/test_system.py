@@ -27,11 +27,11 @@ def test_streaming_recall_ubis_beats_spfresh():
         for off in range(0, 8000, 1000):
             r = drv.insert(data[off:off + 1000],
                            np.arange(off, off + 1000))
-            ingested += r["accepted"] + r["cached"]
+            ingested += r.accepted + r.cached
             drv.search(q[:32], 10)
             drv.tick()
         drv.flush(max_ticks=40)
-        found, _ = drv.search(q, 10)
+        found = drv.search(q, 10).ids
         true, _ = brute_force(drv.state, cfg, jnp.asarray(q), 10)
         rec = metrics.recall_at_k(found, np.asarray(true))
         results[mode] = {"ingested": ingested, "recall": rec}
@@ -58,8 +58,8 @@ def test_retrieval_server_end_to_end():
         srv.ingest_tokens(toks)
     srv.index.flush(max_ticks=30)
     qt = rng.integers(0, vocab, (16, 16)).astype(np.int32)
-    found, scores = srv.query_tokens(qt, k=5)
-    assert found.shape == (16, 5)
+    res = srv.query_tokens(qt, k=5)
+    assert res.ids.shape == (16, 5)
     qv = srv.embedder.embed(qt)
     rec = srv.recall_check(qv, k=5)
     assert rec > 0.9, rec
@@ -75,10 +75,10 @@ def test_deletion_semantics():
     drv.flush(max_ticks=40)
     drv.delete(np.arange(0, 750))
     drv.flush(max_ticks=40)
-    found, _ = drv.search(data[:64], 10)
+    found = drv.search(data[:64], 10).ids
     bad = [int(f) for f in found.ravel() if 0 <= f < 750]
     assert not bad, f"deleted ids surfaced: {bad[:5]}"
     # reinsert deleted region with new ids
     drv.insert(data[:200], np.arange(2000, 2200))
-    found, _ = drv.search(data[:32], 5)
+    found = drv.search(data[:32], 5).ids
     assert any(f >= 2000 for f in found.ravel())
