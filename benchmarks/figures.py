@@ -10,7 +10,7 @@ from typing import Dict, List
 import numpy as np
 
 from .common import (QUICK, BenchScale, full_update_run, make_cfg,
-                     make_driver, streaming_run, eval_recall)
+                     make_driver, streaming_run, timed_search, eval_recall)
 
 
 def fig5_posting_cdf(scale: BenchScale = QUICK) -> List[Dict]:
@@ -161,20 +161,15 @@ def figpq_memory_recall(scale: BenchScale = QUICK) -> List[Dict]:
         drv.flush(max_ticks=40)
         recall = eval_recall(drv, queries, scale.k,
                              np.concatenate(seen_v), np.concatenate(seen_i))
-        lat = []
-        for off in range(0, len(queries), 32):
-            chunk = queries[off:off + 32]
-            t1 = time.perf_counter()
-            drv.search(chunk, scale.k)
-            lat.append((time.perf_counter() - t1) / len(chunk))
-        qps = 1.0 / float(np.mean(lat))
+        ts = timed_search(drv, queries, scale.k)
         # phase-2 bytes actually scanned per vector: float tiles vs codes
         bpv = cfg.pq_m if cfg.use_pq else cfg.dim * 4
         rows.append({"figure": "figpq", "variant": name,
                      "bytes_per_vector": bpv,
                      "compression_x": round(cfg.dim * 4 / bpv, 1),
                      "recall": round(recall, 4),
-                     "qps": round(qps, 1),
+                     "qps": round(ts["qps"], 1),
+                     "p99_ms": round(ts["p99_ms"], 2),
                      "memory_mb": round(
                          state_memory_bytes(drv.state) / 2 ** 20, 1),
                      "pq_retrains": int(drv.stats["pq_retrains"])})
@@ -266,13 +261,7 @@ def figmem_cold_tier(scale: BenchScale = QUICK) -> List[Dict]:
         drv.flush(max_ticks=40)
         recall = eval_recall(drv, queries, scale.k, data[:nid],
                              np.arange(nid))
-        lat = []
-        for off in range(0, len(queries), 32):
-            chunk = queries[off:off + 32]
-            t1 = time.perf_counter()
-            drv.search(chunk, scale.k)
-            lat.append((time.perf_counter() - t1) / len(chunk))
-        qps = 1.0 / float(np.mean(lat))
+        ts = timed_search(drv, queries, scale.k)
         mt = drv.memory_tiers()
         status = np.asarray(vm.unpack_status(drv.state.rec_meta))
         alive = np.asarray(drv.state.allocated) & (status != 3)
@@ -287,7 +276,8 @@ def figmem_cold_tier(scale: BenchScale = QUICK) -> List[Dict]:
             "live_postings": int(alive.sum()),
             "spilled": int((alive & spilled).sum()),
             "recall": round(recall, 4),
-            "qps": round(qps, 1),
+            "qps": round(ts["qps"], 1),
+            "p99_ms": round(ts["p99_ms"], 2),
             "tps": round(nid / t_upd, 1),
         })
     return rows

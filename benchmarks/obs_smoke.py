@@ -1,0 +1,103 @@
+"""CI smoke for the observability plane.
+
+    PYTHONPATH=src python -m benchmarks.obs_smoke [--out metrics_snapshot.json]
+
+Runs a short serving workload (figserve's trace shape, scaled down)
+with the full plane on — structured traces, request spans, live-recall
+probe — then asserts the plane's external contract:
+
+* the Prometheus text exposition parses (``repro.obs.parse_exposition``);
+* every required series is present (driver schema counters, request-span
+  histograms, the live-recall gauge);
+* planner trace events were actually emitted (tick + background mark);
+* the JSON snapshot round-trips through ``json``.
+
+Exit 0 on success; any broken contract raises.  The snapshot is written
+for ``benchmarks.report``'s metrics table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+sys.path.insert(0, ".")
+sys.path.insert(0, "src")
+
+REQUIRED_SERIES = (
+    # one per driver-schema family the plane promises (full set asserted
+    # key-by-key in tests/test_obs.py; this is the serving-path contract)
+    "index_inserted", "index_queries", "index_bg_ops",
+    "index_search_probed", "index_search_results",
+    # request spans
+    "serve_queue_wait_seconds", "serve_service_seconds",
+    "serve_latency_seconds", "serve_batch_fill",
+    # live-recall probe
+    "live_recall", "live_recall_probes",
+)
+
+
+def run(out: str = "metrics_snapshot.json") -> dict:
+    from repro.api import make_index
+    from repro.core.types import UBISConfig
+    from repro.obs import parse_exposition, required_series
+    from repro.serving import ServingConfig, ServingEngine
+
+    rng = np.random.default_rng(0)
+    dim, n = 32, 2048
+    cfg = UBISConfig(dim=dim, max_postings=256, capacity=96, l_min=10,
+                     l_max=80, cache_capacity=1024, max_ids=1 << 16,
+                     use_pallas="off")
+    data = rng.normal(size=(n, dim)).astype(np.float32)
+    idx = make_index("ubis", cfg, data[:512], seed=0, round_size=256,
+                     bg_ops_per_round=8)
+    eng = ServingEngine(idx, ServingConfig(
+        search_batch=16, search_deadline_s=0.0, insert_deadline_s=0.0,
+        tick_every=1, default_k=10, recall_probe=1.0,
+        recall_probe_rows=8))
+
+    tickets = []
+    for off in range(0, n, 256):
+        tickets.append(eng.submit_insert(
+            data[off:off + 256], np.arange(off, off + 256)))
+        for _ in range(4):
+            tickets.append(eng.submit_search(
+                data[rng.integers(0, n)][None, :], 10))
+        eng.drain()
+    assert all(t.done() for t in tickets), "serving tickets left pending"
+
+    # --- the external contract ---------------------------------------
+    text = eng.obs.to_prometheus()
+    series = parse_exposition(text)           # raises on malformed text
+    missing = required_series(series, REQUIRED_SERIES)
+    assert not missing, f"exposition is missing series: {missing}"
+
+    kinds = {e["kind"] for e in eng.obs.events()}
+    assert "tick" in kinds, f"no tick trace events (saw {sorted(kinds)})"
+    assert "insert" in kinds, f"no insert trace events (saw {sorted(kinds)})"
+
+    snap = eng.obs.snapshot()
+    js = json.dumps(snap, indent=1, allow_nan=False)
+    with open(out, "w") as f:
+        f.write(js)
+
+    probes = snap.get("live_recall_probes", 0)
+    assert probes > 0, "recall probe never fired at fraction=1.0"
+    print(f"obs_smoke: {len(series)} series, {len(list(eng.obs.events()))} "
+          f"trace events, {int(probes)} recall probes "
+          f"(live_recall={snap['live_recall']:.3f}); wrote {out}")
+    return snap
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="metrics_snapshot.json")
+    args = ap.parse_args(argv)
+    run(args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -84,6 +84,25 @@ LEVERS = {
 }
 
 
+def metrics_table(snap: dict) -> str:
+    """Render an observability snapshot (``benchmarks.obs_smoke`` /
+    ``Obs.snapshot()``) as one table: scalar series as name/value rows,
+    histogram series as count/mean/p50/p99."""
+    if not snap:
+        return "_no metrics snapshot (run `python -m benchmarks.obs_smoke`)_"
+    lines = ["| series | count | value / mean | p50 | p99 |",
+             "|---|---|---|---|---|"]
+    for name in sorted(snap):
+        v = snap[name]
+        if isinstance(v, dict):        # histogram summary
+            lines.append("| {} | {} | {} | {} | {} |".format(
+                name, v.get("count", 0), _fmt(v.get("mean")),
+                _fmt(v.get("p50")), _fmt(v.get("p99"))))
+        else:
+            lines.append(f"| {name} | - | {_fmt(v)} | - | - |")
+    return "\n".join(lines)
+
+
 def main():
     recs_dry = _load("dryrun_results.json")
     recs_roof = _load("roofline_results.json")
@@ -91,6 +110,9 @@ def main():
     print(dryrun_table(recs_dry))
     print("\n## §Roofline\n")
     print(roofline_table(recs_roof))
+    snap = _load("metrics_snapshot.json")
+    print("\n## §Observability\n")
+    print(metrics_table(snap if isinstance(snap, dict) else {}))
 
 
 if __name__ == "__main__":

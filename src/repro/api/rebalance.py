@@ -55,6 +55,10 @@ class RebalancePlanner:
     ratio_target: float = 1.2
     max_moves: int = 8
     min_gap: int = 80
+    #: per-move decision records from the most recent ``plan`` call:
+    #: ``{"src", "dst", "donor", "trigger": "watermark" | "spread"}`` —
+    #: the obs plane's rebalance trace payload
+    last_moves: list = dataclasses.field(default_factory=list)
 
     def _saturation(self, live, backlog):
         """Slot-saturation fraction per shard.  Parked-cache backlog
@@ -88,6 +92,10 @@ class RebalancePlanner:
         marks postings that may migrate (allocated + NORMAL — the
         migrate round re-checks on device, so a stale host view only
         costs a skipped job, never a lost posting).
+
+        Each accepted move is recorded in ``last_moves`` with its
+        trigger ("watermark" = slot saturation, "spread" = vector
+        imbalance) for the caller's trace events.
         """
         S, pool = self.n_shards, self.pool_per_shard
         p = np.asarray(pressure).astype(float)
@@ -107,6 +115,7 @@ class RebalancePlanner:
             cands.append(list(pids[np.argsort(-lengths[pids])]))
 
         src, dst = [], []
+        self.last_moves = []
         for _ in range(self.max_moves):
             sat = self._saturation(live, backlog)
             over = np.flatnonzero(sat > self.watermark)
@@ -145,6 +154,9 @@ class RebalancePlanner:
                 break
             src.append(pick)
             dst.append(r)
+            self.last_moves.append(
+                {"src": int(pick), "dst": int(r), "donor": int(d),
+                 "trigger": "watermark" if slot_mode else "spread"})
             mass = float(lengths[pick])
             occ[d] -= mass
             occ[r] += mass

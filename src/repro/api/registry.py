@@ -38,14 +38,14 @@ _DRIVER_KW = frozenset({
     "seed", "round_size", "bg_ops_per_round", "drain_per_tick",
     "insert_retries", "gc_lag", "reassign_after_split",
     "pq_retrain_every", "tier_moves_per_tick", "tier_rerank_host",
-    "tier_async"})
+    "tier_async", "obs", "obs_profile_dir"})
 _UBIS_KW = _DRIVER_KW | {"fused_tick"}
 _SHARDED_KW = _DRIVER_KW | {"mesh", "shard_cache_scan", "rebalance",
                             "rebalance_watermark", "rebalance_ratio",
                             "migrate_per_tick", "route_alpha"}
-_SPANN_KW = frozenset({"seed", "round_size"})
+_SPANN_KW = frozenset({"seed", "round_size", "obs"})
 _GRAPH_KW = frozenset({"max_nodes", "degree", "beam", "alpha",
-                       "consolidate_every"})
+                       "consolidate_every", "obs"})
 
 
 def _pick(kw: dict, allowed: frozenset) -> dict:
@@ -110,9 +110,10 @@ def _build_freshdiskann(cfg, seed_vectors, seed_ids, kw):
     from ..core.freshdiskann import FreshDiskANN, GraphConfig
     seeds, ids = _seed_arrays(seed_vectors, seed_ids)
     kw = dict(kw)
+    obs = kw.pop("obs", None)
     kw.setdefault("max_nodes", 1 << 17)
     gcfg = GraphConfig(dim=cfg.dim, **kw)
-    return FreshDiskANN(gcfg, seeds, ids)
+    return FreshDiskANN(gcfg, seeds, ids, obs=obs)
 
 
 _REGISTRY: dict[str, EngineSpec] = {spec.name: spec for spec in (

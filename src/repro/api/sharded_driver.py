@@ -54,7 +54,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
 from typing import Optional
 
 import jax
@@ -71,6 +70,7 @@ from ..core.sharded import (index_specs, make_sharded_background,
                             make_sharded_insert, make_sharded_migrate,
                             make_sharded_search)
 from ..core.types import STATUS_NORMAL, IndexState, UBISConfig
+from ..obs import Obs
 from .rebalance import RebalancePlanner
 from .types import SearchResult, TickReport, UpdateResult
 
@@ -102,7 +102,9 @@ class ShardedUBISDriver:
                  route_alpha: float = 0.0,
                  tier_moves_per_tick: int = 32,
                  tier_rerank_host: bool = True,
-                 tier_async: bool = False):
+                 tier_async: bool = False,
+                 obs: Optional[Obs] = None,
+                 obs_profile_dir: Optional[str] = None):
         if not cfg.is_ubis:
             raise ValueError("ShardedUBISDriver is UBIS-mode only "
                              "(SPFresh's lock model is single-device)")
@@ -120,7 +122,12 @@ class ShardedUBISDriver:
         self.pq_retrain_every = int(pq_retrain_every)
         self._ticks = 0
         self._pq_key = jax.random.key(seed + 0x517C0DE)
-        self.stats = defaultdict(float)
+        # observability plane: shared-schema stats facade + tracer (the
+        # same key set as UBISDriver — pinned by tests/test_obs.py)
+        self.obs = obs if obs is not None else Obs()
+        self.stats = self.obs.driver_stats()
+        self._profile_dir = obs_profile_dir
+        self._profiled = False
 
         specs = index_specs(cfg)
         self._shardings = jax.tree_util.tree_map(
@@ -135,7 +142,8 @@ class ShardedUBISDriver:
         # per-shard accounting rides on contiguous pid blocks
         self.tier = (tier_mod.TierManager(
             cfg, max_moves=int(tier_moves_per_tick),
-            rerank_host=tier_rerank_host) if cfg.use_tier else None)
+            rerank_host=tier_rerank_host, obs=self.obs)
+            if cfg.use_tier else None)
         # dispatch the tier DMA at tick start, reconcile at tick end
         self.tier_async = bool(tier_async)
         self._insert_fn = make_sharded_insert(cfg, self.mesh,
@@ -213,6 +221,8 @@ class ShardedUBISDriver:
         self.stats["insert_time"] += dt
         self.stats["inserted"] += n_acc + n_cache
         self.stats["rejected"] += n_rej
+        self.obs.emit("insert", accepted=n_acc, cached=n_cache,
+                      rejected=n_rej, seconds=round(dt, 6))
         return UpdateResult(accepted=n_acc, cached=n_cache, rejected=n_rej,
                             seconds=dt)
 
@@ -267,6 +277,8 @@ class ShardedUBISDriver:
         dt = time.perf_counter() - t0
         self.stats["delete_time"] += dt
         self.stats["deleted"] += n_done
+        self.obs.emit("delete", deleted=n_done, blocked=0,
+                      seconds=round(dt, 6))
         return UpdateResult(deleted=n_done, seconds=dt)
 
     def search(self, queries, k: int,
@@ -316,14 +328,22 @@ class ShardedUBISDriver:
             pid = loc[(found >= 0) & (loc >= 0)] // self.cfg.capacity
             self.tier.note_probes(pid)
             if self.tier.rerank_host and len(self.tier.pool):
-                found, scores = tier_mod.host_rerank(
+                found, scores, n_sp = tier_mod.host_rerank(
                     found, scores, disp.queries, self.tier.pool, loc,
                     np.asarray(disp.state.tier_spilled),
                     self.cfg.capacity)
+                self.stats["search_spilled_hits"] += n_sp
             found, scores = found[:, :disp.k], scores[:, :disp.k]
         dt = time.perf_counter() - disp.t0
         self.stats["search_time"] += dt
         self.stats["queries"] += Q
+        # introspection from the already-transferred result arrays (the
+        # sharded search exports no probe list — see note_probes above)
+        self.stats["search_results"] += int((found >= 0).sum())
+        if self.cfg.use_pq:
+            self.stats["search_adc_batches"] += 1
+        else:
+            self.stats["search_exact_batches"] += 1
         return SearchResult(ids=found, scores=scores, seconds=dt)
 
     # ------------------------------------------------------------------
@@ -335,6 +355,13 @@ class ShardedUBISDriver:
         select/mark/execute/GC program (which also reports per-shard
         pressure), then the cross-shard rebalance stage, then the host
         cache drain, then the PQ re-train on cadence."""
+        if self._profile_dir and not self._profiled:
+            self._profiled = True
+            with self.obs.profile(self._profile_dir):
+                return self._tick_impl()
+        return self._tick_impl()
+
+    def _tick_impl(self) -> TickReport:
         t0 = time.perf_counter()
         plan = None
         if self.tier is not None and self.tier_async:
@@ -368,6 +395,11 @@ class ShardedUBISDriver:
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed
         self.stats["bg_gc"] += reclaimed
+        self.stats["drained"] += drained
+        self.obs.emit("tick", executed=executed, drained=drained,
+                      migrated=migrated, gc=reclaimed, pq=retrained,
+                      spilled=spilled, promoted=promoted,
+                      seconds=round(dt, 6))
         # marked=0, honestly: the sharded round selects and executes in
         # ONE atomic program, so there is no separate mark phase to
         # count — quiescence is executed == 0 (+ empty cache), and a
@@ -423,6 +455,15 @@ class ShardedUBISDriver:
                     self.tier.pool.remap(int(src[j]), int(new_pids[j]))
         n = int(mig.sum())
         self.stats["migrated"] += n
+        # per-move decision trace: the planner recorded each accepted
+        # move's trigger; mark which ones the device round committed
+        self.obs.emit(
+            "rebalance",
+            trigger=(self.planner.last_moves[0]["trigger"]
+                     if self.planner.last_moves else "none"),
+            moves=[{**mv, "committed": bool(mig[j])}
+                   for j, mv in enumerate(self.planner.last_moves)],
+            migrated=n)
         return n
 
     def shard_pressure(self) -> Optional[np.ndarray]:
@@ -512,10 +553,15 @@ class ShardedUBISDriver:
             # round below re-pins the canonical shardings
             self.state, n = self.tier.promote_retrain_pinned(self.state)
             self.stats["tier_promoted"] += n
+        evict = (int(self.state.pq_active) + 1) % self.cfg.pq_versions
         self._pq_key, k = jax.random.split(self._pq_key)
         st = pq.retrain_round(self.state, self.cfg, k)
         self.state = jax.device_put(st, self._shardings)
         self.stats["pq_retrains"] += 1
+        self.stats["pq_generation"] = int(
+            self.state.pq_slot_gen[self.state.pq_active])
+        self.obs.emit("pq_retrain", reason="cadence", evicted_slot=evict,
+                      generation=int(self.stats["pq_generation"]))
         return 1
 
     # ---- cold-tier plane ----------------------------------------------

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
 from typing import Any, Iterable, Optional
 
 import jax
@@ -27,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.types import SearchResult, TickReport, UpdateResult
+from ..obs import Obs
 from . import balance, search as search_mod, tier as tier_mod, update
 from .build import initial_state
 from .types import (KIND_COMPACT, KIND_MERGE, KIND_SPLIT, IndexState,
@@ -78,7 +78,9 @@ class UBISDriver:
                  fused_tick: bool = False,
                  tier_moves_per_tick: int = 32,
                  tier_rerank_host: bool = True,
-                 tier_async: bool = False):
+                 tier_async: bool = False,
+                 obs: Optional[Obs] = None,
+                 obs_profile_dir: Optional[str] = None):
         self.cfg = cfg
         self.round_size = int(round_size)
         self.bg_ops = int(bg_ops_per_round)
@@ -86,6 +88,14 @@ class UBISDriver:
         self.retries = int(insert_retries)
         self.gc_lag = int(gc_lag)
         self.reassign_after_split = reassign_after_split
+        # observability plane: metrics registry + structured tracer; the
+        # stats mapping below is a schema-seeded facade registered with
+        # it, so every engine exposes the same key set
+        self.obs = obs if obs is not None else Obs()
+        # opt-in jax.profiler capture: the FIRST tick after construction
+        # is wrapped in a device trace written under this directory
+        self._profile_dir = obs_profile_dir
+        self._profiled = False
         # quant plane: codebook re-train cadence in ticks (0 = never);
         # only meaningful with cfg.use_pq
         self.pq_retrain_every = int(pq_retrain_every)
@@ -93,7 +103,8 @@ class UBISDriver:
         # cold-tier plane (cfg.use_tier): pinned host pool + planner
         self.tier = (tier_mod.TierManager(
             cfg, max_moves=int(tier_moves_per_tick),
-            rerank_host=tier_rerank_host) if cfg.use_tier else None)
+            rerank_host=tier_rerank_host, obs=self.obs)
+            if cfg.use_tier else None)
         # tier_async: dispatch the tick's spill/promote DMA at tick
         # START (overlapping the background round) and reconcile at tick
         # end, instead of the synchronous plan+move at tick end
@@ -114,7 +125,7 @@ class UBISDriver:
         # SPFresh strict-trigger candidate sets
         self._sp_split: set[int] = set()
         self._sp_merge: set[int] = set()
-        self.stats = defaultdict(float)
+        self.stats = self.obs.driver_stats()
 
     # ------------------------------------------------------------------
     # foreground
@@ -181,6 +192,8 @@ class UBISDriver:
         self.stats["insert_time"] += dt
         self.stats["inserted"] += n_acc + n_cache
         self.stats["rejected"] += n_rej
+        self.obs.emit("insert", accepted=n_acc, cached=n_cache,
+                      rejected=n_rej, seconds=round(dt, 6))
         return UpdateResult(accepted=n_acc, cached=n_cache, rejected=n_rej,
                             seconds=dt)
 
@@ -203,6 +216,9 @@ class UBISDriver:
         dt = time.perf_counter() - t0
         self.stats["delete_time"] += dt
         self.stats["deleted"] += n_done
+        self.stats["blocked"] += n_blocked
+        self.obs.emit("delete", deleted=n_done, blocked=n_blocked,
+                      seconds=round(dt, 6))
         return UpdateResult(deleted=n_done, blocked=n_blocked, seconds=dt)
 
     def search(self, queries, k: int,
@@ -249,6 +265,14 @@ class UBISDriver:
         dt = time.perf_counter() - disp.t0
         self.stats["search_time"] += dt
         self.stats["queries"] += disp.queries.shape[0]
+        # search introspection, piggybacked on arrays the result path
+        # already transferred (no added device syncs)
+        self.stats["search_probed"] += int((probe >= 0).sum())
+        self.stats["search_results"] += int((found >= 0).sum())
+        if self.cfg.use_pq:
+            self.stats["search_adc_batches"] += 1
+        else:
+            self.stats["search_exact_batches"] += 1
         if not self.cfg.is_ubis:
             self._note_spfresh_small(probe)
         return SearchResult(ids=found, scores=scores, seconds=dt)
@@ -262,6 +286,13 @@ class UBISDriver:
         detect + mark new candidates, GC, (quant plane) re-train the PQ
         codebooks on cadence, and (cold tier) run the spill/promote
         planner."""
+        if self._profile_dir and not self._profiled:
+            self._profiled = True
+            with self.obs.profile(self._profile_dir):
+                return self._tick_impl()
+        return self._tick_impl()
+
+    def _tick_impl(self) -> TickReport:
         t0 = time.perf_counter()
         plan = None
         if self.tier is not None and self.tier_async:
@@ -291,6 +322,12 @@ class UBISDriver:
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
         self.stats["bg_ops"] += executed
+        self.stats["bg_gc"] += reclaimed
+        self.stats["drained"] += drained
+        self.obs.emit("tick", executed=executed, drained=drained,
+                      marked=marked, gc=reclaimed, pq=retrained,
+                      spilled=spilled, promoted=promoted,
+                      seconds=round(dt, 6))
         return TickReport(executed=executed, drained=drained,
                           marked=marked, gc=reclaimed,
                           pq_retrained=retrained, spilled=spilled,
@@ -351,6 +388,11 @@ class UBISDriver:
         self.stats["bg_compact"] += int(rr.n_compact)
         self.stats["bg_deferred"] += int(rr.deferred)
         self.stats["bg_reassigned"] += int(rr.reassigned)
+        self.obs.emit("bg_exec", split=int(rr.n_split),
+                      merge=int(rr.n_merge), compact=int(rr.n_compact),
+                      deferred=int(rr.deferred),
+                      reassigned=int(rr.reassigned),
+                      executed=int(rr.executed))
         return int(rr.executed)
 
     def _drain_cache(self) -> int:
@@ -379,6 +421,10 @@ class UBISDriver:
                 self.state, self.cfg, self.bg_ops)
             n = int(n)
             self._marked_dev = (kinds, pids) if n else None
+            if n:
+                # pids stay on device by design — only the count leaves
+                self.obs.emit("bg_mark", reason="fused-device-round",
+                              marked=n)
             return n
         if self.cfg.is_ubis:
             split_due, merge_due, compact_due = jax.device_get(
@@ -438,6 +484,13 @@ class UBISDriver:
                 STATUS_MERGING)
         self._marked.extend(jobs)
         self._marked_set.update(p for _, p in jobs)
+        self.obs.emit(
+            "bg_mark",
+            reason=("balance-detector" if self.cfg.is_ubis
+                    else "strict-trigger"),
+            split=[p for kk, p in jobs if kk == "split"],
+            merge=[p for kk, p in jobs if kk == "merge"],
+            compact=[p for kk, p in jobs if kk == "compact"])
         return len(jobs)
 
     def _gc(self) -> int:
@@ -457,12 +510,16 @@ class UBISDriver:
             return 0
         from ..quant import pq
         self._promote_retrain_pinned()
+        evict = (int(self.state.pq_active) + 1) % self.cfg.pq_versions
         self._pq_key, k = jax.random.split(self._pq_key)
         self.state = pq.retrain_round(self.state, self.cfg, k)
         self.stats["pq_retrains"] += 1
         # live codebook generation, for monitors (throughput() readers)
         self.stats["pq_generation"] = int(
             self.state.pq_slot_gen[self.state.pq_active])
+        self.obs.emit("pq_retrain", reason="cadence",
+                      evicted_slot=evict,
+                      generation=int(self.stats["pq_generation"]))
         return 1
 
     def _promote_retrain_pinned(self) -> None:

@@ -150,7 +150,8 @@ class FreshDiskANN:
     paper's in-memory index + periodic consolidation)."""
 
     def __init__(self, cfg: GraphConfig, seed_vectors: np.ndarray,
-                 seed_ids: np.ndarray):
+                 seed_ids: np.ndarray, *, obs=None):
+        from ..obs import Obs
         self.cfg = cfg
         self.state = empty_graph(cfg)
         self._host_vec = np.zeros((cfg.max_nodes, cfg.dim), np.float32)
@@ -158,7 +159,10 @@ class FreshDiskANN:
                                   np.int32)
         self._id2node: dict = {}
         self._deletes_pending = 0
-        self.stats = defaultdict(float)
+        # same stats schema as every other engine (tests/test_obs.py);
+        # graph-irrelevant keys simply stay 0
+        self.obs = obs if obs is not None else Obs()
+        self.stats = self.obs.driver_stats()
         if len(seed_vectors):
             self.insert(seed_vectors, seed_ids)
 

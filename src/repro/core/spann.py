@@ -23,10 +23,11 @@ class SPANNStatic:
 
     def __init__(self, cfg: UBISConfig, vectors: np.ndarray,
                  ids: np.ndarray, *, round_size: int = 1024,
-                 seed: int = 0):
-        # bulk-load through the same machinery, then freeze
+                 seed: int = 0, obs=None):
+        # bulk-load through the same machinery, then freeze (the inner
+        # driver also supplies the shared-schema stats/obs plane)
         self._drv = UBISDriver(cfg, vectors, round_size=round_size,
-                               seed=seed)
+                               seed=seed, obs=obs)
         self._drv.insert(vectors, ids)
         self._drv.flush()
         self.state = self._drv.state
@@ -52,6 +53,10 @@ class SPANNStatic:
     @property
     def stats(self):
         return self._drv.stats
+
+    @property
+    def obs(self):
+        return self._drv.obs
 
     def snapshot(self):
         return self.state

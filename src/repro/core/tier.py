@@ -190,12 +190,18 @@ class TierPlanner:
     promote_heat: int
     max_moves: int = 32
 
+    #: pid -> reason for the most recent ``plan_promotes`` picks
+    #: ("structural-due" | "search-heat" | "wedge-recovery"), consumed by
+    #: the TierManager's trace events
+    last_promote_reasons: dict = dataclasses.field(default_factory=dict)
+
     def plan_promotes(self, heat, spilled, allocated, status, lengths,
                       used, *, l_min: int, l_max: int,
                       capacity: int) -> np.ndarray:
         """Spilled postings to promote this tick: structurally-due ones
         FIRST (split/merge/compact require float residency — the
         forced-promotion rule), then by search-heat, hottest first."""
+        self.last_promote_reasons = {}
         alive = np.asarray(allocated) & (np.asarray(status)
                                          != STATUS_DELETED)
         sp = np.asarray(spilled) & alive
@@ -210,6 +216,8 @@ class TierPlanner:
         hot_pids = np.flatnonzero(hot)
         hot_pids = hot_pids[np.argsort(-heat[hot_pids], kind="stable")]
         picks = np.concatenate([due_pids, hot_pids])
+        reasons = (["structural-due"] * len(due_pids)
+                   + ["search-heat"] * len(hot_pids))
         # wedge guard: with NO float-resident insertable posting left
         # (e.g. everything force-spilled), inserts can only park in the
         # cache — promote a batch unconditionally so the index recovers
@@ -219,7 +227,11 @@ class TierPlanner:
         if n_hot == 0 and picks.size == 0:
             rest = np.flatnonzero(sp)
             picks = rest[np.argsort(-heat[rest], kind="stable")]
-        return picks.astype(np.int32)[:self.max_moves]
+            reasons = ["wedge-recovery"] * len(picks)
+        picks = picks.astype(np.int32)[:self.max_moves]
+        self.last_promote_reasons = {int(p): r for p, r
+                                     in zip(picks, reasons)}
+        return picks
 
     def plan_spills(self, heat, spilled, allocated, status) -> np.ndarray:
         """Hot postings to spill this tick: only while the float-resident
@@ -266,6 +278,10 @@ def host_rerank(found, scores, queries, pool: HostTierPool, loc,
     their true ``||v||^2 - 2 q.v`` recomputed from the pooled tile and
     each row is re-sorted — the set cannot grow, only re-rank, which is
     exactly the 'optional host-side exact rerank' contract.
+
+    Returns ``(found, scores, n_spilled_hits)`` — the hit count is the
+    obs plane's spilled-candidate signal, computed from the mask this
+    function builds anyway (no extra transfers).
     """
     found = np.asarray(found)
     scores = np.array(scores, np.float32, copy=True)
@@ -283,7 +299,7 @@ def host_rerank(found, scores, queries, pool: HostTierPool, loc,
         member[pp] = True
     sp = in_post & tier_spilled[pid] & member[pid]
     if not sp.any():
-        return found, scores
+        return found, scores, 0
     qi, ci = np.nonzero(sp)
     # bulk-gather: one tile fetch per UNIQUE spilled posting, then one
     # fancy-index — the rerank stays cheap even when most of the final
@@ -295,7 +311,7 @@ def host_rerank(found, scores, queries, pool: HostTierPool, loc,
     scores[qi, ci] = (vs * vs).sum(-1) - 2.0 * (qs * vs).sum(-1)
     order = np.argsort(scores, axis=1, kind="stable")
     return (np.take_along_axis(found, order, axis=1),
-            np.take_along_axis(scores, order, axis=1))
+            np.take_along_axis(scores, order, axis=1), int(sp.sum()))
 
 
 def host_exact_candidates(pool: HostTierPool, sp_pids, ids_rows,
@@ -370,7 +386,7 @@ class TierManager:
     """
 
     def __init__(self, cfg: UBISConfig, *, max_moves: int = 32,
-                 rerank_host: bool = True):
+                 rerank_host: bool = True, obs=None):
         self.cfg = cfg
         self.pool = HostTierPool()
         self.planner = TierPlanner(cfg.tier_hot_max, cfg.tier_cold_heat,
@@ -378,6 +394,14 @@ class TierManager:
                                    max_moves=max_moves)
         self.rerank_host = bool(rerank_host)
         self._counts = np.zeros(cfg.max_postings, np.int64)
+        # shared obs plane (owned by the driver): tier_plan/tier_commit
+        # trace events + the spilled-hit search counter
+        self.obs = obs
+        self._stats = obs.driver_stats() if obs is not None else None
+
+    def _emit(self, kind: str, **fields) -> None:
+        if self.obs is not None:
+            self.obs.emit(kind, **fields)
 
     # ---- heat bookkeeping (host-side accumulation) --------------------
 
@@ -444,6 +468,15 @@ class TierManager:
             spills = spills[~np.isin(spills, promos)]
         if not len(promos) and not len(spills):
             return state, None
+        if self.obs is not None and (len(promos) or len(spills)):
+            self._emit(
+                "tier_plan",
+                promotes=[{"pid": int(p),
+                           "reason": self.planner.last_promote_reasons.get(
+                               int(p), "search-heat")}
+                          for p in promos],
+                spills=[{"pid": int(p), "reason": "watermark-cold"}
+                        for p in spills])
         B = self.planner.max_moves
         spill_pids = np.full(B, -1, np.int32)
         spill_pids[:len(spills)] = spills
@@ -511,6 +544,18 @@ class TierManager:
                 self.pool.put(int(s_pids[i]), tiles[i])
             state = spill_round(state, cfg, jnp.asarray(s_pids),
                                 jnp.asarray(s_valid))
+        if self.obs is not None:
+            self._emit(
+                "tier_commit",
+                spilled=[int(p) for p in s_pids[s_valid]],
+                promoted=[int(p) for p in p_pids[p_valid]],
+                dropped_spills=[{"pid": int(p),
+                                 "reason": "stale-signature"}
+                                for p in s_pids[(s_pids >= 0) & ~s_valid]],
+                dropped_promotes=[{"pid": int(p),
+                                   "reason": "pool-missing"}
+                                  for p in p_pids[(p_pids >= 0)
+                                                  & ~p_valid]])
         return state, n_s, n_p
 
     def force_spill(self, state: IndexState, n: int):
@@ -521,7 +566,7 @@ class TierManager:
             int(n), np.asarray(state.heat), np.asarray(state.tier_spilled),
             np.asarray(state.allocated),
             np.asarray(vm.unpack_status(state.rec_meta)))
-        return self._spill(state, pids)
+        return self._spill(state, pids, reason="forced")
 
     def force_promote(self, state: IndexState, n=None):
         """Promote up to ``n`` spilled postings (all of them when None),
@@ -532,7 +577,7 @@ class TierManager:
             pids = pids[np.argsort(-heat[pids], kind="stable")]
         if n is not None:
             pids = pids[:int(n)]
-        return self._promote(state, pids)
+        return self._promote(state, pids, reason="forced")
 
     def promote_retrain_pinned(self, state: IndexState):
         """Quant interplay, shared by both drivers: ``pq.retrain_round``
@@ -549,11 +594,13 @@ class TierManager:
         pinned = sp[pslot[sp] == evict]
         if not pinned.size:
             return state, 0
-        return self._promote(state, pinned)
+        return self._promote(state, pinned, reason="retrain-pinned")
 
     # ---- move execution (chunked at the planner's batch width) --------
 
-    def _spill(self, state: IndexState, pids):
+    def _spill(self, state: IndexState, pids, reason: str = ""):
+        # no reason = internal re-derivation (``adopt``), which carries
+        # no stats delta and therefore must not trace as a decision
         B = self.planner.max_moves
         M = self.cfg.max_postings
         n = 0
@@ -569,9 +616,14 @@ class TierManager:
             state = spill_round(state, self.cfg, jnp.asarray(padded),
                                 jnp.asarray(valid))
             n += len(chunk)
+        if reason and n:
+            self._emit("tier_commit",
+                       spilled=[int(p) for p in pids[:n]], promoted=[],
+                       dropped_spills=[], dropped_promotes=[],
+                       reason=reason)
         return state, n
 
-    def _promote(self, state: IndexState, pids):
+    def _promote(self, state: IndexState, pids, reason: str = ""):
         B = self.planner.max_moves
         C, d = state.vectors.shape[1:]
         n = 0
@@ -588,6 +640,11 @@ class TierManager:
                                   jnp.asarray(tiles),
                                   jnp.asarray(padded >= 0))
             n += len(chunk)
+        if reason and n:
+            self._emit("tier_commit",
+                       spilled=[], promoted=[int(p) for p in pids[:n]],
+                       dropped_spills=[], dropped_promotes=[],
+                       reason=reason)
         return state, n
 
     # ---- host-side exact serving --------------------------------------
@@ -599,9 +656,12 @@ class TierManager:
         found = np.asarray(found)
         safe = np.clip(found, 0, self.cfg.max_ids - 1)
         loc = np.asarray(state.id_loc[jnp.asarray(safe)])
-        return host_rerank(found, scores, queries, self.pool, loc,
-                           np.asarray(state.tier_spilled),
-                           self.cfg.capacity)
+        found, scores, n_sp = host_rerank(
+            found, scores, queries, self.pool, loc,
+            np.asarray(state.tier_spilled), self.cfg.capacity)
+        if self._stats is not None:
+            self._stats["search_spilled_hits"] += n_sp
+        return found, scores
 
     def exact_merge(self, state: IndexState, queries, found, scores,
                     k: int):

@@ -29,6 +29,7 @@ from repro.api import make_index
 from repro.core import UBISConfig, metrics as ubis_metrics
 from repro.models import get_model
 from repro.models.layers import values
+from repro.obs import Obs
 from repro.serving import ServingConfig, ServingEngine
 
 
@@ -44,6 +45,11 @@ class ServeConfig:
     # background-tick cadence: one index.tick() per N ingest batches
     # (0 = never; the old server ticked unconditionally per ingest)
     tick_every: int = 1
+    # observability plane: sampled live-recall probe fraction, optional
+    # JSONL trace sink, optional jax.profiler capture directory
+    recall_probe: float = 0.0
+    obs_trace_path: Optional[str] = None
+    obs_profile_dir: Optional[str] = None
 
 
 class EmbeddingServer:
@@ -101,12 +107,19 @@ class RetrievalServer:
         if seed_vectors is None:
             seed_vectors = np.random.default_rng(cfg.seed).normal(
                 size=(1024, index_cfg.dim)).astype(np.float32)
+        # one plane covers the driver's internals AND the request spans
+        self.obs = engine_kw.pop("obs", None) or Obs(
+            trace_path=cfg.obs_trace_path)
         self.index = make_index(engine, index_cfg, seed_vectors,
+                                obs=self.obs,
+                                obs_profile_dir=cfg.obs_profile_dir,
                                 **engine_kw)
         if serving_cfg is None:
             serving_cfg = ServingConfig(default_k=cfg.k,
-                                        tick_every=cfg.tick_every)
-        self.engine = ServingEngine(self.index, serving_cfg)
+                                        tick_every=cfg.tick_every,
+                                        recall_probe=cfg.recall_probe,
+                                        obs_profile_dir=cfg.obs_profile_dir)
+        self.engine = ServingEngine(self.index, serving_cfg, obs=self.obs)
         self._next_id = 0
         self.stats = {"ingested": 0, "queries": 0}
 
@@ -163,6 +176,21 @@ class RetrievalServer:
         true = self.index.exact(vecs, k).ids
         return ubis_metrics.recall_at_k(found, np.asarray(true))
 
+    # -- observability -------------------------------------------------------
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the whole plane (driver stats,
+        request-span histograms, live-recall gauge)."""
+        return self.obs.to_prometheus()
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-ready flat snapshot of every registered series."""
+        return self.obs.snapshot()
+
+    def trace_events(self, kind: Optional[str] = None):
+        """Structured planner/request trace events (newest-capped ring)."""
+        return self.obs.events(kind)
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -175,9 +203,22 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--tick-every", type=int, default=1,
                     help="background tick per N ingest batches (0=never)")
+    ap.add_argument("--recall-probe", type=float, default=0.0,
+                    help="shadow-execute this fraction of served query "
+                         "batches against exact() (live recall gauge)")
+    ap.add_argument("--obs-trace-path", default=None,
+                    help="append structured trace events to this JSONL file")
+    ap.add_argument("--obs-profile-dir", default=None,
+                    help="capture a jax.profiler trace of the first "
+                         "working pump/tick into this directory")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus exposition at exit")
     args = ap.parse_args(argv)
 
-    cfg = ServeConfig(arch=args.arch, tick_every=args.tick_every)
+    cfg = ServeConfig(arch=args.arch, tick_every=args.tick_every,
+                      recall_probe=args.recall_probe,
+                      obs_trace_path=args.obs_trace_path,
+                      obs_profile_dir=args.obs_profile_dir)
     server = RetrievalServer(cfg, engine=args.engine)
     rng = np.random.default_rng(0)
     vocab = server.embedder.model.cfg.vocab
@@ -197,6 +238,8 @@ def main(argv=None):
     print(f"ingested {server.stats['ingested']} docs in {t_ing:.1f}s "
           f"({server.stats['ingested']/t_ing:.0f} docs/s); "
           f"{res.ids.shape[0]} queries in {t_q:.2f}s; recall@10 {rec:.3f}")
+    if args.metrics:
+        print(server.metrics_text())
     return 0
 
 

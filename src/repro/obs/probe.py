@@ -1,0 +1,70 @@
+"""Sampled live-recall probe.
+
+The paper's accuracy-stability claim — recall holds while the index
+churns — is only observable offline today (benchmark ground-truth
+sweeps).  ``RecallProbe`` makes it a production signal: a configurable
+fraction of *served* query batches is shadow-executed against the
+engine's ``exact()`` oracle off the hot path, and the rolling mean over
+the last ``window`` probes is exported as a gauge.
+
+Sampling is seeded (deterministic per run) and decided per served
+batch with one RNG draw, so the obs-off / probe-off cost is zero and
+the probe-on cost is bounded by ``fraction`` exact scans.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .metrics import MetricsRegistry
+
+
+class RecallProbe:
+    """Shadow-execute sampled query batches against ``exact()``."""
+
+    def __init__(self, index, registry: MetricsRegistry, *,
+                 fraction: float = 0.0, window: int = 64,
+                 max_rows: int = 8, seed: int = 0):
+        self.index = index
+        self.fraction = float(fraction)
+        self.max_rows = int(max_rows)
+        self._rng = np.random.default_rng(seed)
+        self._window: deque = deque(maxlen=window)
+        self.gauge = registry.gauge("live_recall")
+        self.gauge.set(float("nan"))
+        self.samples = registry.counter("live_recall_probes")
+
+    def maybe_probe(self, queries: np.ndarray, k: int,
+                    found_ids: np.ndarray) -> Optional[float]:
+        """Sample this served batch with probability ``fraction``.
+
+        Probes at most ``max_rows`` rows of the batch (uniformly
+        chosen) so probe cost is independent of batch size.  Returns
+        the batch recall when probed, else ``None``.
+        """
+        # lazy: repro.core imports repro.obs at package load, so the
+        # oracle metric has to be resolved at probe time, not import time
+        from ..core.metrics import recall_at_k
+
+        if self.fraction <= 0.0:
+            return None
+        if float(self._rng.random()) >= self.fraction:
+            return None
+        n = min(len(queries), len(found_ids))
+        if n == 0:
+            return None
+        rows = (np.arange(n) if n <= self.max_rows else
+                self._rng.choice(n, size=self.max_rows, replace=False))
+        true = self.index.exact(np.asarray(queries)[rows], k)
+        true_ids = getattr(true, "ids", true)
+        r = recall_at_k(np.asarray(found_ids)[rows], true_ids)
+        self._window.append(r)
+        self.samples.inc()
+        self.gauge.set(float(np.mean(self._window)))
+        return r
+
+    @property
+    def rolling_recall(self) -> float:
+        return float(np.mean(self._window)) if self._window else float("nan")

@@ -1,0 +1,92 @@
+"""Structured trace events: a JSONL ring buffer with an optional file sink.
+
+Every planner decision (background mark/exec, rebalance moves, tier
+spill/promote commits and drops, PQ retrain slot evictions) emits one
+event *with a stated reason*, so a tick's behavior is reconstructable
+after the fact.  Events are plain dicts::
+
+    {"seq": 17, "t": 0.482913, "kind": "rebalance",
+     "trigger": "watermark", "moves": [...], "migrated": 4}
+
+Recording is append-to-deque (bounded, oldest dropped) plus an optional
+line write to a JSONL sink.  A disabled tracer short-circuits ``emit``
+before touching its arguments' values, so the obs-off cost is one
+attribute check.
+"""
+from __future__ import annotations
+
+import io
+import json
+import time
+from collections import deque
+from typing import Callable, Dict, Iterator, List, Optional
+
+
+def _jsonable(x):
+    """Best-effort conversion of numpy/jax scalars and arrays."""
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    item = getattr(x, "item", None)
+    if item is not None and getattr(x, "ndim", 1) == 0:
+        return item()
+    tolist = getattr(x, "tolist", None)
+    if tolist is not None:
+        return tolist()
+    return repr(x)
+
+
+class Tracer:
+    """Bounded in-memory event log + optional JSONL file sink."""
+
+    def __init__(self, capacity: int = 4096,
+                 path: Optional[str] = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 enabled: bool = True):
+        self.enabled = enabled
+        self.capacity = capacity
+        self.clock = clock
+        self._buf: deque = deque(maxlen=capacity)
+        self._seq = 0
+        self._fh: Optional[io.TextIOBase] = None
+        if path is not None:
+            self._fh = open(path, "a", encoding="utf-8")
+
+    def emit(self, kind: str, **fields) -> None:
+        if not self.enabled:
+            return
+        ev: Dict[str, object] = {"seq": self._seq,
+                                 "t": round(float(self.clock()), 6),
+                                 "kind": kind}
+        for k, v in fields.items():
+            ev[k] = _jsonable(v)
+        self._seq += 1
+        self._buf.append(ev)
+        if self._fh is not None:
+            self._fh.write(json.dumps(ev) + "\n")
+
+    def events(self, kind: Optional[str] = None) -> List[Dict[str, object]]:
+        if kind is None:
+            return list(self._buf)
+        return [e for e in self._buf if e["kind"] == kind]
+
+    def __iter__(self) -> Iterator[Dict[str, object]]:
+        return iter(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def to_jsonl(self) -> str:
+        return "\n".join(json.dumps(e) for e in self._buf)
+
+    def clear(self) -> None:
+        self._buf.clear()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+            self._fh.close()
+            self._fh = None

@@ -52,6 +52,7 @@ import numpy as np
 
 from ..api.types import (SearchRequest, SearchResult, Ticket,
                          UpdateResult)
+from ..obs import Obs
 
 
 @dataclasses.dataclass
@@ -62,6 +63,12 @@ class ServingConfig:
     search costs exactly one (B, d) program call, short batches ride
     with zero-padded rows.  Deadlines bound the queueing delay the
     batching may add to the OLDEST request in a lane.
+
+    Observability knobs: ``recall_probe`` shadow-executes that fraction
+    of served search batches against ``index.exact()`` off the hot path
+    (rolling ``live_recall`` gauge — the paper's accuracy-stability
+    claim as a production signal); ``obs_profile_dir`` wraps the first
+    pump that fires work in a ``jax.profiler`` trace capture.
     """
 
     search_batch: int = 32
@@ -71,6 +78,10 @@ class ServingConfig:
     tick_every: int = 1          # background tick per N update flushes
     overlap: bool = True         # use dispatch/collect when available
     default_k: int = 10
+    recall_probe: float = 0.0    # fraction of served batches probed
+    recall_probe_window: int = 64
+    recall_probe_rows: int = 8   # max queries probed per sampled batch
+    obs_profile_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -85,7 +96,8 @@ class ServingEngine:
     """Request queue + dynamic batcher over one ``StreamingIndex``."""
 
     def __init__(self, index, config: Optional[ServingConfig] = None, *,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 obs: Optional[Obs] = None):
         self.index = index
         self.cfg = config if config is not None else ServingConfig()
         self.clock = clock
@@ -99,6 +111,25 @@ class ServingEngine:
         self.batch_log: List[Tuple[str, int, str]] = []
         self._can_overlap = (hasattr(index, "dispatch_search")
                              and hasattr(index, "collect_search"))
+        # obs plane: reuse the index's so ONE exposition covers driver
+        # internals and request spans; fall back to a private one
+        self.obs = (obs if obs is not None
+                    else getattr(index, "obs", None) or Obs())
+        # request-span histograms (engine-clock seconds): queue wait
+        # (submit → fire), service (fire → resolve), end-to-end latency,
+        # and the update-flush work overlapped inside dispatch→collect
+        self._h_queue = self.obs.histogram("serve_queue_wait_seconds")
+        self._h_service = self.obs.histogram("serve_service_seconds")
+        self._h_latency = self.obs.histogram("serve_latency_seconds")
+        self._h_overlap = self.obs.histogram("serve_flush_overlap_seconds")
+        self._g_fill = self.obs.gauge("serve_batch_fill")
+        self.probe = (self.obs.make_probe(
+            index, fraction=self.cfg.recall_probe,
+            window=self.cfg.recall_probe_window,
+            max_rows=self.cfg.recall_probe_rows)
+            if self.cfg.recall_probe > 0 and hasattr(index, "exact")
+            else None)
+        self._profiled = False
 
     # ------------------------------------------------------------------
     # submission (returns immediately; tickets resolve on pump)
@@ -178,6 +209,16 @@ class ServingEngine:
         now = self.clock()
         s_reason = self._search_due(now, force)
         u_reason = self._update_due(now, force)
+        if ((s_reason or u_reason) and self.cfg.obs_profile_dir
+                and not self._profiled):
+            # opt-in device profiling: capture exactly one working pump
+            self._profiled = True
+            with self.obs.profile(self.cfg.obs_profile_dir):
+                return self._pump_lanes(s_reason, u_reason)
+        return self._pump_lanes(s_reason, u_reason)
+
+    def _pump_lanes(self, s_reason: Optional[str],
+                    u_reason: Optional[str]) -> int:
         resolved = 0
         if s_reason:
             reqs = self._take_search_batch()
@@ -246,10 +287,19 @@ class ServingEngine:
             vecs = np.concatenate(
                 [vecs, np.zeros((B - len(reqs), vecs.shape[1]),
                                 np.float32)])
+        t_fire = self.clock()
+        obs_on = self.obs.enabled
+        if obs_on:
+            for r in reqs:
+                self._h_queue.record(max(t_fire - r.t_submit, 0.0))
+            self._g_fill.set(len(reqs) / B)
         if self._can_overlap and self.cfg.overlap:
             disp = self.index.dispatch_search(vecs, reqs[0].k)
             if overlap_work is not None:
+                t_w = self.clock()
                 overlap_work()          # runs while the device searches
+                if obs_on:
+                    self._h_overlap.record(max(self.clock() - t_w, 0.0))
             res = self.index.collect_search(disp)
         else:
             res = self.index.search(vecs, reqs[0].k)
@@ -261,6 +311,15 @@ class ServingEngine:
                 SearchResult(ids=res.ids[i:i + 1],
                              scores=res.scores[i:i + 1],
                              seconds=now - r.t_submit), now)
+        if obs_on:
+            self._h_service.record(max(now - t_fire, 0.0))
+            for r in reqs:
+                self._h_latency.record(max(now - r.t_submit, 0.0))
+        if self.probe is not None:
+            # shadow-execute a sampled fraction against exact() — AFTER
+            # the tickets resolved, so the probe is off the hot path
+            self.probe.maybe_probe(vecs[:len(reqs)], reqs[0].k,
+                                   np.asarray(res.ids)[:len(reqs)])
         self.counters["search_batches"] += 1
         self.counters["search_requests"] += len(reqs)
         self.counters["search_padded"] += B - len(reqs)

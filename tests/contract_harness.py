@@ -80,6 +80,58 @@ def recall_at_k(found, true):
     return hits / total if total else 1.0
 
 
+def trace_baseline(idx):
+    """Capture the trace/stats watermark the end-of-run audit diffs
+    against (constructor-time events — e.g. SPANN's bulk build — and
+    any prior program on the same index are excluded by sequence
+    number).  Returns None when the index has no enabled obs plane."""
+    obs = getattr(idx, "obs", None)
+    if obs is None or not getattr(obs, "enabled", False):
+        return None
+    seqs = [e["seq"] for e in obs.events()]
+    s = idx.stats
+    return {"seq": max(seqs) if seqs else -1,
+            "tier_spilled": float(s["tier_spilled"]),
+            "tier_promoted": float(s["tier_promoted"]),
+            "migrated": float(s["migrated"])}
+
+
+def audit_trace(engine, idx, base, live0):
+    """Cross-check the structured trace stream against ground truth.
+
+    The trace events are *claims* about what the planners did; this
+    audit makes them load-bearing: (1) net insert/delete event sums must
+    equal the index's live-count delta — an insert that lied about
+    ``accepted`` or an unreported delete fails here; (2) every tier
+    spill/promote commit event must account 1:1 for the stats counters
+    (an untraced residency change, or a traced-but-uncommitted one,
+    both fail); (3) every cross-shard migrate the sharded driver counted
+    must appear in a ``rebalance`` event with its donor decision.
+    """
+    obs = idx.obs
+    if len(obs.tracer) >= obs.tracer.capacity:
+        return  # ring wrapped: sums would under-count, not meaningful
+    evs = [e for e in obs.events() if e["seq"] > base["seq"]]
+    by = {}
+    for e in evs:
+        by.setdefault(e["kind"], []).append(e)
+    net = (sum(e["accepted"] + e["cached"] for e in by.get("insert", []))
+           - sum(e["deleted"] for e in by.get("delete", [])))
+    assert net == idx.live_count() - live0, (
+        engine, "insert/delete trace events disagree with the live "
+        "multiset delta", net, idx.live_count() - live0)
+    ev_sp = sum(len(e["spilled"]) for e in by.get("tier_commit", []))
+    ev_pr = sum(len(e["promoted"]) for e in by.get("tier_commit", []))
+    st = idx.stats
+    assert ev_sp == float(st["tier_spilled"]) - base["tier_spilled"], (
+        engine, "tier_commit spill events disagree with stats", ev_sp)
+    assert ev_pr == float(st["tier_promoted"]) - base["tier_promoted"], (
+        engine, "tier_commit promote events disagree with stats", ev_pr)
+    ev_mig = sum(e["migrated"] for e in by.get("rebalance", []))
+    assert ev_mig == float(st["migrated"]) - base["migrated"], (
+        engine, "rebalance trace events disagree with stats", ev_mig)
+
+
 def random_ops(rng, n_ops, tiered: bool = False):
     """A seed-deterministic op tape.  Weights favour updates; ticks and
     searches interleave; one flush rides near the end so the audit sees
@@ -135,6 +187,10 @@ def run_program(engine, idx, data, seed, *, n_ops=12, k=8,
     queries = data[rng.integers(0, len(data), 24)]
     deleted_ever = set()
     n_checks = 0
+    # trace audit baseline: only state-audit engines report exact
+    # per-call accepted/cached/deleted counts in their events
+    trace_base = trace_baseline(idx) if audit == "state" else None
+    live0 = idx.live_count()
 
     def check_recall():
         found = idx.search(queries, k).ids
@@ -232,6 +288,8 @@ def run_program(engine, idx, data, seed, *, n_ops=12, k=8,
     idx.flush(max_ticks=60)
     rec = check_recall()
     check_multiset(strict=True)
+    if trace_base is not None:
+        audit_trace(engine, idx, trace_base, live0)
     if restore_fn is not None:
         # snapshot -> restore round-trip: the restored index answers
         # search identically (scores included) and holds the identical
