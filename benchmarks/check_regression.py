@@ -26,7 +26,8 @@ import sys
 THRESHOLD = 0.20
 TIMING_THRESHOLD = 0.50
 ID_KEYS = ("figure", "mode", "dataset", "batch", "fg", "bg",
-           "balance_factor", "variant", "stream", "rebalance", "shards")
+           "balance_factor", "variant", "stream", "rebalance", "shards",
+           "workers")
 # metric -> direction ("up" = larger is better).  occ_spread is the
 # figskew per-shard occupancy ratio max/mean (bounded by the shard
 # count, unlike max/min which explodes on an empty shard) — it gets the

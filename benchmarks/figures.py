@@ -376,6 +376,79 @@ def figskew_skewed_stream(scale: BenchScale = QUICK) -> List[Dict]:
     return rows
 
 
+def figdist_cluster_stream(scale: BenchScale = QUICK) -> List[Dict]:
+    """Beyond the paper: the *multi-host* imbalanced-distribution axis.
+
+    Replays a Zipfian-popularity insert stream into a 2-worker
+    ``ubis-cluster`` on the **multi-process backend** — the coordinator
+    in this process holds every planner, each worker is a separate OS
+    process speaking the frame protocol — and reports recall plus the
+    cross-worker live-vector occupancy per batch.  The acceptance axis:
+    the coordinator's water-filling insert routing plus the
+    extract/insert spread-balance stage keep the max/min worker
+    occupancy ratio ≤ 1.5 while recall holds the streaming floor.
+    """
+    import time
+
+    from repro.api import make_index
+    from repro.core.metrics import occupancy_spread
+
+    rng = np.random.default_rng(scale.seed)
+    K = 16
+    cents = (rng.normal(size=(K, scale.dim)) * 5).astype(np.float32)
+    queries = (cents[rng.integers(0, K, scale.queries)]
+               + rng.normal(size=(scale.queries, scale.dim))
+               ).astype(np.float32)
+    w = 1.0 / (np.arange(K) + 1) ** 1.5
+    p = w / w.sum()
+
+    def draw(n):
+        a = rng.choice(K, size=n, p=p)
+        return (cents[a] + rng.normal(size=(n, scale.dim))
+                ).astype(np.float32)
+
+    per_batch = scale.n // (2 * scale.batches)
+    batches = [draw(per_batch) for _ in range(scale.batches)]
+    drv = make_index("ubis-cluster", make_cfg(scale, "ubis"),
+                     batches[0], seed=scale.seed, workers=2,
+                     backend="multiprocess", round_size=512,
+                     bg_ops_per_round=8, spread_per_tick=256)
+    rows = []
+    try:
+        drv.search(queries[:8], scale.k)     # warm both workers' compiles
+        nid = 0
+        seen_v, seen_i = [], []
+        for bi, b in enumerate(batches):
+            ids = np.arange(nid, nid + len(b))
+            nid += len(b)
+            seen_v.append(b)
+            seen_i.append(ids)
+            t0 = time.perf_counter()
+            r = drv.insert(b, ids)
+            drv.flush(max_ticks=8)
+            t_upd = time.perf_counter() - t0
+            recall = eval_recall(drv, queries, scale.k,
+                                 np.concatenate(seen_v),
+                                 np.concatenate(seen_i))
+            spread = occupancy_spread(drv.worker_live())
+            rows.append({
+                "figure": "figdist", "stream": "zipf",
+                "rebalance": "on", "workers": drv.n_workers,
+                "batch": bi, "recall": round(recall, 4),
+                "tps": round((r.accepted + r.cached) / t_upd, 1),
+                "cached": r.cached, "rejected": r.rejected,
+                "migrated": int(drv.stats["migrated"]),
+                "occ_min": spread["occ_min"],
+                "occ_max": spread["occ_max"],
+                "occ_ratio": round(spread["occ_ratio"], 3),
+                "occ_spread": round(spread["occ_spread"], 3),
+            })
+        rows[-1]["final_recall"] = rows[-1]["recall"]
+    finally:
+        drv.close()
+    return rows
+
+
 def fig9_balance_factor(scale: BenchScale = QUICK) -> List[Dict]:
     """Paper Fig. 9: balance-factor sweep (recall up, QPS down)."""
     import time

@@ -39,6 +39,7 @@ def main(argv=None) -> None:
         "figpq": figures.figpq_memory_recall,
         "figengines": figures.figengines_comparison,
         "figskew": figures.figskew_skewed_stream,
+        "figdist": figures.figdist_cluster_stream,
         "figmem": figures.figmem_cold_tier,
         "figserve": figserve.figserve_serving,
     }
@@ -111,6 +112,11 @@ def _headline(name: str, rows) -> str:
             off = last[("zipf", "off")]
             return (f"zipf occ_ratio on={on['occ_ratio']} "
                     f"off={off['occ_ratio']} recall on={on['recall']}")
+        if name == "figdist":
+            last = rows[-1]
+            worst = max(r["occ_ratio"] for r in rows)
+            return (f"2-proc zipf occ_ratio last={last['occ_ratio']} "
+                    f"worst={worst} recall={last['recall']}")
         if name == "figmem":
             by = {r["variant"]: r for r in rows}
             off_, on_ = by["tier-off"], by["tier-on"]

@@ -1,96 +1,81 @@
-"""Fault-tolerance demo: train, checkpoint, then restore the SAME
-checkpoint onto a *different* mesh (elastic rescale) and keep training.
+"""Fault-tolerance demo on the cluster plane: stream into a 2-worker
+multi-process cluster, checkpoint, SIGKILL a worker mid-stream, and
+watch the coordinator restart it and replay the journal — the live
+multiset digest proves nothing was lost or duplicated.  A second,
+freshly-built cluster then restores the manifest and serves the same
+index.
 
-On real hardware this is the node-failure / cluster-resize path: the
-checkpoint stores host-assembled global arrays keyed by tree path, so a
-restore may target any device count; shardings are re-derived from the
-new mesh and arrays are placed (= resharded) on load.
-
-This demo runs in two subprocesses with different fake device counts
-(4 then 8) to prove the reshard-on-restore path end to end.
+Workers are real OS processes (``python -m repro.cluster.worker``)
+speaking the schema-versioned frame protocol over pipes; the
+coordinator here holds every planner and no device state.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import os
-import subprocess
-import sys
 import tempfile
-import textwrap
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-PHASE = """
-import os, sys
-import jax, jax.numpy as jnp, numpy as np
-from repro.models import get_model
-from repro.models.layers import values, axes_of, sharding_rules
-from repro.distributed.sharding import make_rules, to_named_sharding
-from repro.checkpoint import CheckpointManager
-from repro.optim import AdamW, AdamWConfig
-from repro.data import TokenStream
-
-ckpt_dir, data_ax, model_ax, steps = sys.argv[1:5]
-data_ax, model_ax, steps = int(data_ax), int(model_ax), int(steps)
-mesh = jax.make_mesh((data_ax, model_ax), ("data", "model"))
-rules = make_rules(mesh, "train")
-model = get_model("tinyllama-1.1b", reduced=True)
-tree = model.init(jax.random.key(0))
-pshard = to_named_sharding(mesh, axes_of(tree), rules)
-params = jax.device_put(values(tree), pshard)
-opt = AdamW(AdamWConfig(), lr=1e-3)
-ostate = opt.init(params)
-oshard = to_named_sharding(mesh, opt.state_axes(axes_of(tree)), rules)
-mgr = CheckpointManager(ckpt_dir, async_save=False)
-stream = TokenStream(vocab=model.cfg.vocab, seq_len=32, batch_per_host=4)
-start = 0
-s0, restored, extra = mgr.restore_latest(
-    {"params": params, "opt": ostate},
-    shardings={"params": pshard, "opt": oshard})
-if s0 is not None:
-    params, ostate = restored["params"], restored["opt"]
-    stream.load_state_dict(extra["stream"])
-    start = s0
-    print(f"[mesh {data_ax}x{model_ax}] resumed from step {s0} "
-          f"(resharded onto {mesh.devices.size} devices)")
-ctx = dict(rules, __mesh__=mesh)
-def step_fn(p, o, b):
-    with sharding_rules(ctx):
-        (l, _), g = jax.value_and_grad(model.train_loss,
-                                       has_aux=True)(p, b)
-        p, o, _ = opt.apply(p, g, o)
-    return p, o, l
-step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-for s in range(start, steps):
-    b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
-    params, ostate, loss = step_fn(params, ostate, b)
-    print(f"[mesh {data_ax}x{model_ax}] step {s} loss {float(loss):.4f}")
-mgr.save(steps, {"params": params, "opt": ostate},
-         extra={"stream": stream.state_dict()})
-mgr.wait()
-"""
-
-
-def run_phase(ckpt, devices, data_ax, model_ax, steps):
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(ROOT, "src"),
-               TF_CPP_MIN_LOG_LEVEL="2")
-    r = subprocess.run(
-        [sys.executable, "-c", PHASE, ckpt, str(data_ax), str(model_ax),
-         str(steps)], env=env, capture_output=True, text=True)
-    print(r.stdout, end="")
-    if r.returncode != 0:
-        print(r.stderr[-2000:])
-        raise SystemExit(1)
+import numpy as np
 
 
 def main():
-    ckpt = tempfile.mkdtemp(prefix="elastic_")
-    print("phase 1: 4 devices (2x2 mesh), steps 0-3")
-    run_phase(ckpt, 4, 2, 2, 3)
-    print("phase 2: 8 devices (2x4 mesh) — elastic restore + steps 3-6")
-    run_phase(ckpt, 8, 2, 4, 6)
-    print("elastic restart OK")
+    from repro.cluster import ClusterCoordinator
+    from repro.core.types import UBISConfig
+    from repro.obs import Obs
+
+    rng = np.random.default_rng(0)
+    cfg = UBISConfig(dim=16, max_postings=64, capacity=96, l_min=10,
+                     l_max=80, nprobe=64, max_ids=1 << 13,
+                     cache_capacity=2048, use_pallas="off")
+    cents = rng.normal(size=(20, 16)) * 5.0
+    draw = rng.integers(0, 20, 1100)
+    data = (cents[draw] + rng.normal(size=(1100, 16))).astype(np.float32)
+
+    obs = Obs()
+    cluster = ClusterCoordinator(cfg, data[:100], workers=2,
+                                 backend="multiprocess", round_size=128,
+                                 spread_per_tick=64, obs=obs, seed=0)
+    ckpt = tempfile.mkdtemp(prefix="cluster_ck_")
+    try:
+        print("phase 1: stream 400 vectors into 2 worker processes")
+        cluster.insert(data[100:500], np.arange(400))
+        cluster.flush()
+        print(f"  live={cluster.live_count()} "
+              f"per-worker={cluster.worker_live().tolist()}")
+
+        manifest = cluster.checkpoint(ckpt)
+        print(f"phase 2: checkpoint -> {ckpt} "
+              f"(digest {manifest['combined_digest']:#x})")
+
+        print("phase 3: stream 300 more, then SIGKILL worker 0")
+        cluster.insert(data[500:800], np.arange(400, 700))
+        cluster.tick()
+        before = cluster.snapshot().digest
+        cluster.backend.kill_worker(0)
+        after = cluster.snapshot().digest   # first call trips recovery
+        lost = obs.events("worker_lost")[-1]
+        rst = obs.events("worker_restarted")[-1]
+        print(f"  worker {lost['worker']} lost ({lost['reason']}); "
+              f"restarted from checkpoint={rst['from_checkpoint']} "
+              f"+ {rst['replayed']} replayed commands")
+        assert after == before, "live multiset changed across restart"
+        print(f"  multiset digest preserved ({after:#x}), "
+              f"live={cluster.live_count()}")
+
+        print("phase 4: fresh cluster restores the manifest")
+        cluster2 = ClusterCoordinator(cfg, data[:100], workers=2,
+                                      backend="multiprocess",
+                                      round_size=128, seed=0)
+        try:
+            cluster2.restore(ckpt)
+            assert (cluster2.snapshot().digest
+                    == manifest["combined_digest"])
+            r = cluster2.search(data[150:156], 8)
+            print(f"  restored live={cluster2.live_count()}, "
+                  f"search ok ({int((np.asarray(r.ids) >= 0).sum())} hits)")
+        finally:
+            cluster2.close()
+        print("elastic restart OK")
+    finally:
+        cluster.close()
 
 
 if __name__ == "__main__":

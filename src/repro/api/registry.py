@@ -20,8 +20,8 @@ hard-coded name tuples (figengines, the contract harness, the tiered
 property tests) now ask the registry.
 
 ``seed_vectors`` semantics follow each engine's construction story:
-the cluster engines (ubis/spfresh/ubis-sharded) use them for k-means
-seeding only (NOT inserted); the build-once engines (spann,
+the cluster engines (ubis/spfresh/ubis-sharded/ubis-cluster) use them
+for k-means seeding only (NOT inserted); the build-once engines (spann,
 freshdiskann) ingest them under ``seed_ids`` (default ``arange``).
 """
 from __future__ import annotations
@@ -43,6 +43,14 @@ _UBIS_KW = _DRIVER_KW | {"fused_tick"}
 _SHARDED_KW = _DRIVER_KW | {"mesh", "shard_cache_scan", "rebalance",
                             "rebalance_watermark", "rebalance_ratio",
                             "migrate_per_tick", "route_alpha"}
+_CLUSTER_KW = frozenset({
+    "seed", "round_size", "bg_ops_per_round", "drain_per_tick",
+    "insert_retries", "gc_lag", "reassign_after_split",
+    "pq_retrain_every", "tier_moves_per_tick", "tier_rerank_host",
+    "obs", "shard_cache_scan", "rebalance", "rebalance_watermark",
+    "rebalance_ratio", "migrate_per_tick", "route_alpha", "workers",
+    "backend", "worker_devices", "mesh_shape", "spread_ratio",
+    "spread_per_tick", "rpc_timeout"})
 _SPANN_KW = frozenset({"seed", "round_size", "obs"})
 _GRAPH_KW = frozenset({"max_nodes", "degree", "beam", "alpha",
                        "consolidate_every", "obs"})
@@ -91,6 +99,11 @@ def _build_ubis_mode(mode):
 def _build_sharded(cfg, seed_vectors, seed_ids, kw):
     from .sharded_driver import ShardedUBISDriver
     return ShardedUBISDriver(_with_mode(cfg, "ubis"), seed_vectors, **kw)
+
+
+def _build_cluster(cfg, seed_vectors, seed_ids, kw):
+    from ..cluster import ClusterCoordinator
+    return ClusterCoordinator(_with_mode(cfg, "ubis"), seed_vectors, **kw)
 
 
 def _seed_arrays(seed_vectors, seed_ids):
@@ -143,6 +156,14 @@ _REGISTRY: dict[str, EngineSpec] = {spec.name: spec for spec in (
         description="ShardedUBISDriver: host orchestration over the "
                     "jitted pod-sharded programs",
         build=_build_sharded, kwargs=_SHARDED_KW,
+        supports_tier=True, supports_pq=True, supports_shards=True,
+        audit="state"),
+    EngineSpec(
+        name="ubis-cluster",
+        description="coordinator/worker cluster plane: all planners on "
+                    "the coordinator, ShardedUBISDriver workers behind "
+                    "the serializable command protocol",
+        build=_build_cluster, kwargs=_CLUSTER_KW,
         supports_tier=True, supports_pq=True, supports_shards=True,
         audit="state"),
 )}

@@ -168,9 +168,10 @@ class ShardedUBISDriver:
         # built for every multi-shard mesh (compile is lazy), so
         # toggling ``self.rebalance`` after construction — as figskew's
         # on/off comparison does — can never hit a missing attribute
+        self._migrate_jobs = int(migrate_per_tick)
         if self.n_shards > 1:
             self._migrate_fn = make_sharded_migrate(
-                cfg, self.mesh, jobs=int(migrate_per_tick))
+                cfg, self.mesh, jobs=self._migrate_jobs)
         self._shard_cache_scan = shard_cache_scan
         self._search_fns = {}
         self._exact_fns = {}
@@ -371,15 +372,9 @@ class ShardedUBISDriver:
             st, plan = self.tier.dispatch(self.state, decayed=True)
             if st is not self.state:
                 self.state = jax.device_put(st, self._shardings)
-        ver = int(jax.device_get(self.state.global_version))
-        gc_min = ver - self.gc_lag if ver > self.gc_lag else 0
-        self.state, ex, gc, press = self._background_fn(self.state,
-                                                        jnp.uint32(gc_min))
-        executed, reclaimed = int(ex), int(gc)
-        self._pressure = np.asarray(press)
-        self.stats["bg_exec_time"] += time.perf_counter() - t0
+        executed, reclaimed, _ = self.exec_background()
         migrated = self._rebalance() if self.rebalance else 0
-        drained = self._drain_cache()
+        drained = self.exec_drain()
         retrained = self._pq_retrain()
         if self.tier is not None and self.tier_async:
             st, n_s, n_p = self.tier.reconcile(self.state, plan)
@@ -393,8 +388,6 @@ class ShardedUBISDriver:
             spilled, promoted = self._tier_step()
         dt = time.perf_counter() - t0
         self.stats["bg_time"] += dt
-        self.stats["bg_ops"] += executed
-        self.stats["bg_gc"] += reclaimed
         self.stats["drained"] += drained
         self.obs.emit("tick", executed=executed, drained=drained,
                       migrated=migrated, gc=reclaimed, pq=retrained,
@@ -420,23 +413,46 @@ class ShardedUBISDriver:
                 return i + 1
         return max_ticks
 
-    # ---- cross-shard rebalance ----------------------------------------
+    # ---- plan/execute halves (the coordinator/worker seam) ------------
+    # The cluster worker (``repro.cluster.worker``) drives these pieces
+    # directly: observations (pressure, plan inputs) ship up to the
+    # coordinator, plans (migrate moves, retrain slot, tier lanes) ship
+    # back down, and ``_tick_impl`` above is just the in-process
+    # composition of the same halves — one code path, two deployments.
 
-    def _rebalance(self) -> int:
-        """Plan + execute one migration round when the tick's pressure
-        rows cross a trigger.  The planner's cheap ``needs`` gate keeps
-        quiescent ticks free of the (M,)-sized host reads."""
-        press = self._pressure
-        if press is None or not self.planner.needs(press):
-            return 0
+    def exec_background(self):
+        """Run ONE sharded background program (select/mark/execute/GC)
+        and record the pressure rows.  Returns
+        (executed, reclaimed, pressure)."""
+        t0 = time.perf_counter()
+        ver = int(jax.device_get(self.state.global_version))
+        gc_min = ver - self.gc_lag if ver > self.gc_lag else 0
+        self.state, ex, gc, press = self._background_fn(self.state,
+                                                        jnp.uint32(gc_min))
+        executed, reclaimed = int(ex), int(gc)
+        self._pressure = np.asarray(press)
+        self.stats["bg_exec_time"] += time.perf_counter() - t0
+        self.stats["bg_ops"] += executed
+        self.stats["bg_gc"] += reclaimed
+        return executed, reclaimed, self._pressure
+
+    def rebalance_inputs(self):
+        """The migrate planner's (M,)-sized observation: live lengths
+        plus the movable mask (allocated NORMAL postings).  Serializable
+        — the cluster worker ships these to the coordinator."""
         lengths = np.asarray(self.state.lengths)
         status = np.asarray(vm.unpack_status(self.state.rec_meta))
         movable = (np.asarray(self.state.allocated)
                    & (status == STATUS_NORMAL))
-        src, dst = self.planner.plan(press, lengths, movable)
-        if len(src) == 0:
-            return 0
-        B = self.planner.max_moves
+        return lengths, movable
+
+    def exec_migrate(self, src, dst) -> np.ndarray:
+        """Execute one already-planned migration round (owner extract,
+        free-stack install, id-map rewrite + tier-pool remap).  Returns
+        the per-move committed mask."""
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        B = self._migrate_jobs
         pad = B - len(src)
         valid = np.concatenate([np.ones(len(src), bool),
                                 np.zeros(pad, bool)])
@@ -445,7 +461,7 @@ class ShardedUBISDriver:
         self.state, mig, new_pids = self._migrate_fn(
             self.state, jnp.asarray(src), jnp.asarray(dst),
             jnp.asarray(valid))
-        mig = np.asarray(mig)
+        mig = np.asarray(mig)[:B - pad] if pad else np.asarray(mig)
         if self.tier is not None:
             # spilled postings migrate WITHOUT promotion: the device
             # round carried codes + flags, the host pool entry follows
@@ -453,8 +469,22 @@ class ShardedUBISDriver:
             for j in np.flatnonzero(mig):
                 if int(src[j]) in self.tier.pool:
                     self.tier.pool.remap(int(src[j]), int(new_pids[j]))
+        self.stats["migrated"] += int(mig.sum())
+        return mig
+
+    def _rebalance(self) -> int:
+        """Plan + execute one migration round when the tick's pressure
+        rows cross a trigger.  The planner's cheap ``needs`` gate keeps
+        quiescent ticks free of the (M,)-sized host reads."""
+        press = self._pressure
+        if press is None or not self.planner.needs(press):
+            return 0
+        lengths, movable = self.rebalance_inputs()
+        src, dst = self.planner.plan(press, lengths, movable)
+        if len(src) == 0:
+            return 0
+        mig = self.exec_migrate(src, dst)
         n = int(mig.sum())
-        self.stats["migrated"] += n
         # per-move decision trace: the planner recorded each accepted
         # move's trigger; mark which ones the device round committed
         self.obs.emit(
@@ -536,16 +566,26 @@ class ShardedUBISDriver:
             self._cache_put(rej_v, rej_i, targets=rej_t)
         return n_acc
 
+    # public plan/execute name for the cluster worker (same op)
+    exec_drain = _drain_cache
+
     def _pq_retrain(self) -> int:
-        """Versioned codebook re-train on tick cadence (quant plane).
-        ``retrain_round`` is a plain jit program: GSPMD partitions it
-        over the existing shardings; the output is re-pinned to the
-        canonical specs so later shard_map calls see exact layouts."""
+        """Versioned codebook re-train on tick cadence (quant plane):
+        the cadence decision half; execution is ``exec_pq_retrain``.
+        The cluster coordinator owns this counter instead — it sends an
+        explicit retrain slot in the tick plan."""
         if not self.cfg.use_pq or self.pq_retrain_every <= 0:
             return 0
         self._ticks += 1
         if self._ticks % self.pq_retrain_every:
             return 0
+        return self.exec_pq_retrain()
+
+    def exec_pq_retrain(self) -> int:
+        """Execute one codebook re-train round now.  ``retrain_round``
+        is a plain jit program: GSPMD partitions it over the existing
+        shardings; the output is re-pinned to the canonical specs so
+        later shard_map calls see exact layouts."""
         from ..quant import pq
         if self.tier is not None:
             # promote spilled postings pinned to the evicted slot first

@@ -89,6 +89,101 @@ def restore_pytree(template, path: str, *, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, out), meta.get("extra", {})
 
 
+# ---------------------------------------------------------------------
+# cluster checkpoints: per-worker snapshots + a digest-carrying manifest
+# ---------------------------------------------------------------------
+
+CLUSTER_MANIFEST = "manifest.json"
+
+
+class ClusterManifestError(RuntimeError):
+    """A cluster checkpoint is partial, corrupt, or from a different
+    protocol schema — restores must fail LOUDLY, never half-load."""
+
+
+def save_cluster_checkpoint(directory: str, states, digests,
+                            extra: Optional[dict] = None) -> dict:
+    """Write one npz per worker state plus ``manifest.json``.
+
+    ``states`` are flat field->numpy dicts
+    (``cluster.protocol.state_to_payload``); ``digests`` the matching
+    live-multiset digests.  Worker files land first, the manifest is
+    renamed into place LAST — a crash mid-save leaves either a complete
+    checkpoint or one with no manifest (which restore rejects), never a
+    silently-partial one.
+    """
+    from ..cluster import protocol as _proto
+    os.makedirs(directory, exist_ok=True)
+    paths = []
+    for w, st in enumerate(states):
+        name = f"worker_{w:03d}.npz"
+        tmp = os.path.join(directory, name + ".tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k: np.asarray(v) for k, v in st.items()})
+        os.replace(tmp, os.path.join(directory, name))
+        paths.append(name)
+    manifest = {
+        "schema_version": _proto.SCHEMA_VERSION,
+        "n_workers": len(paths),
+        "paths": paths,
+        "digests": [int(d) for d in digests],
+        "combined_digest": _proto.combine_digests(digests),
+        "extra": extra or {},
+    }
+    tmp = os.path.join(directory, CLUSTER_MANIFEST + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(directory, CLUSTER_MANIFEST))
+    return manifest
+
+
+def load_cluster_checkpoint(directory: str, *,
+                            expect_workers: Optional[int] = None):
+    """Load and VERIFY a cluster checkpoint -> (payloads, manifest).
+
+    Raises :class:`ClusterManifestError` on a missing manifest (partial
+    write), schema mismatch, missing worker file, worker-count mismatch,
+    or a per-worker live-multiset digest that disagrees with the
+    manifest (corrupt or swapped shard file).
+    """
+    from ..cluster import protocol as _proto
+    mpath = os.path.join(directory, CLUSTER_MANIFEST)
+    if not os.path.exists(mpath):
+        raise ClusterManifestError(
+            f"no {CLUSTER_MANIFEST} in {directory!r} — partial or "
+            "foreign checkpoint")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if manifest.get("schema_version") != _proto.SCHEMA_VERSION:
+        raise ClusterManifestError(
+            f"checkpoint schema {manifest.get('schema_version')!r} != "
+            f"this build's {_proto.SCHEMA_VERSION}")
+    if (expect_workers is not None
+            and manifest.get("n_workers") != expect_workers):
+        raise ClusterManifestError(
+            f"checkpoint has {manifest.get('n_workers')} workers, "
+            f"cluster has {expect_workers}")
+    payloads = []
+    for w, name in enumerate(manifest["paths"]):
+        path = os.path.join(directory, name)
+        if not os.path.exists(path):
+            raise ClusterManifestError(
+                f"worker file {name!r} missing from {directory!r} — "
+                "partial checkpoint")
+        with np.load(path) as data:
+            payload = {k: data[k] for k in data.files}
+        import types as _types
+        digest = _proto.live_multiset_digest(
+            _types.SimpleNamespace(**payload))
+        if digest != manifest["digests"][w]:
+            raise ClusterManifestError(
+                f"worker {w} digest mismatch: file {digest} != "
+                f"manifest {manifest['digests'][w]} (corrupt or "
+                "swapped shard file)")
+        payloads.append(payload)
+    return payloads, manifest
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
                  async_save: bool = True):

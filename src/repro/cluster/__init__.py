@@ -1,0 +1,27 @@
+"""Multi-host coordinator plane: coordinator/worker split over a
+serializable command protocol with pluggable transports.
+
+See ``cluster/coordinator.py`` for the control plane,
+``cluster/worker.py`` for the data plane, ``cluster/protocol.py`` for
+the wire format, and ``cluster/backend.py`` for the transports.
+"""
+from .backend import (ClusterBackend, LocalBackend, MultiProcessBackend,
+                      WorkerError, WorkerLost)
+from .coordinator import (ClusterCoordinator, ClusterSnapshot,
+                          plan_insert_split)
+from .protocol import (SCHEMA_VERSION, ProtocolError, combine_digests,
+                       decode_message, encode_message,
+                       live_multiset_digest)
+
+# NOTE: cluster.worker is deliberately NOT imported here — the package
+# import would otherwise pre-load it in the `python -m
+# repro.cluster.worker` subprocess and trip runpy's double-import
+# warning.  Import WorkerRuntime from repro.cluster.worker directly.
+
+__all__ = [
+    "SCHEMA_VERSION", "ClusterBackend", "ClusterCoordinator",
+    "ClusterSnapshot", "LocalBackend", "MultiProcessBackend",
+    "ProtocolError", "WorkerError", "WorkerLost",
+    "combine_digests", "decode_message", "encode_message",
+    "live_multiset_digest", "plan_insert_split",
+]

@@ -1,0 +1,242 @@
+"""The coordinator/worker wire protocol: schema-versioned messages of
+plain-numpy payloads.
+
+Every message that crosses the process boundary is a dict
+
+    {"v": SCHEMA_VERSION, "kind": <command>, "seq": <int>, "payload": {...}}
+
+whose payload is built from JSON-native values plus numpy arrays.  The
+codec separates the two: arrays are lifted out of the tree into a side
+table and shipped as raw little-endian bytes (``tobytes`` — lossless,
+which is what makes the LocalBackend's codec round-trip *bit-identical*
+to the in-process driver), while the remaining tree plus the array
+dtypes/shapes travel as a JSON header.  A frame on a byte stream is
+
+    [u32 frame length][u32 header length][header JSON][array bytes...]
+
+so a worker subprocess speaks the protocol over plain pipes with no
+serialization dependencies.
+
+Message catalog (worker commands; see ``cluster/worker.py``):
+
+  control   — ``init``, ``ping``, ``sleep``, ``shutdown``
+  foreground— ``insert_rounds``, ``cache_put``, ``delete``, ``search``,
+              ``exact``
+  tick legs — ``tick_begin`` (background program; observation up),
+              ``tick_exec`` (migrate moves + drain + retrain slot down;
+              tier observation up), ``tick_end`` (tier lanes down;
+              commits + report up)
+  tier      — ``force_spill``, ``force_promote``
+  state     — ``snapshot``, ``load_state``, ``live_count``,
+              ``posting_lengths``, ``memory``, ``occupancy``,
+              ``extract`` (cross-worker balance donor), ``stats``
+
+Schema versioning: ``decode_message`` refuses any frame whose ``v``
+differs from :data:`SCHEMA_VERSION` — a coordinator can never silently
+drive a worker speaking a different protocol revision, and snapshots
+carry the same version in their manifest (``checkpoint/manager.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import zlib
+from typing import Optional
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+_ND = "__nd__"
+
+
+class ProtocolError(RuntimeError):
+    """Malformed frame or schema-version mismatch."""
+
+
+def _pack_tree(x, arrays: list):
+    if isinstance(x, np.ndarray):
+        a = np.ascontiguousarray(x)
+        arrays.append(a)
+        return {_ND: len(arrays) - 1, "dtype": a.dtype.name,
+                "shape": list(a.shape)}
+    if isinstance(x, np.generic):
+        return x.item()
+    if isinstance(x, dict):
+        if _ND in x:
+            raise ProtocolError("payload dicts may not use the "
+                                f"reserved key {_ND!r}")
+        return {str(k): _pack_tree(v, arrays) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_pack_tree(v, arrays) for v in x]
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    raise ProtocolError(f"unserializable payload value: {type(x)}")
+
+
+def _unpack_tree(x, arrays: list):
+    if isinstance(x, dict):
+        if _ND in x:
+            return arrays[x[_ND]]
+        return {k: _unpack_tree(v, arrays) for k, v in x.items()}
+    if isinstance(x, list):
+        return [_unpack_tree(v, arrays) for v in x]
+    return x
+
+
+def encode_message(kind: str, payload: Optional[dict], seq: int,
+                   v: int = SCHEMA_VERSION) -> bytes:
+    """One serialized message (header JSON + raw array bytes)."""
+    arrays: list = []
+    tree = _pack_tree(payload or {}, arrays)
+    header = json.dumps({
+        "v": int(v), "kind": str(kind), "seq": int(seq),
+        "payload": tree,
+        "nbytes": [a.nbytes for a in arrays],
+    }).encode()
+    return b"".join([struct.pack("<I", len(header)), header]
+                    + [a.tobytes() for a in arrays])
+
+
+def decode_message(buf: bytes) -> dict:
+    """Inverse of :func:`encode_message`; validates the schema version."""
+    if len(buf) < 4:
+        raise ProtocolError("truncated frame")
+    (hlen,) = struct.unpack_from("<I", buf, 0)
+    try:
+        head = json.loads(buf[4:4 + hlen].decode())
+    except Exception as e:  # noqa: BLE001 - re-raise as protocol error
+        raise ProtocolError(f"bad frame header: {e}") from e
+    if head.get("v") != SCHEMA_VERSION:
+        raise ProtocolError(
+            f"schema version mismatch: got {head.get('v')!r}, "
+            f"this build speaks {SCHEMA_VERSION}")
+    # rebuild the array table from the concatenated raw bytes
+    arrays = []
+    off = 4 + hlen
+    meta = _array_meta(head["payload"])
+    for i, nb in enumerate(head["nbytes"]):
+        dtype, shape = meta[i]
+        arrays.append(np.frombuffer(buf[off:off + nb],
+                                    dtype=np.dtype(dtype)).reshape(shape)
+                      .copy())
+        off += nb
+    return {"v": head["v"], "kind": head["kind"], "seq": head["seq"],
+            "payload": _unpack_tree(head["payload"], arrays)}
+
+
+def _array_meta(tree, out=None):
+    out = {} if out is None else out
+    if isinstance(tree, dict):
+        if _ND in tree:
+            out[tree[_ND]] = (tree["dtype"], tree["shape"])
+        else:
+            for v in tree.values():
+                _array_meta(v, out)
+    elif isinstance(tree, list):
+        for v in tree:
+            _array_meta(v, out)
+    return out
+
+
+# ---------------------------------------------------------------- framing
+
+
+def write_frame(fh, buf: bytes) -> None:
+    fh.write(struct.pack("<Q", len(buf)))
+    fh.write(buf)
+    fh.flush()
+
+
+def read_frame(fh) -> Optional[bytes]:
+    """Read one length-prefixed frame; None on clean EOF."""
+    head = fh.read(8)
+    if not head:
+        return None
+    if len(head) < 8:
+        raise ProtocolError("truncated frame length")
+    (n,) = struct.unpack("<Q", head)
+    buf = b""
+    while len(buf) < n:
+        chunk = fh.read(n - len(buf))
+        if not chunk:
+            raise ProtocolError("EOF mid-frame")
+        buf += chunk
+    return buf
+
+
+# ------------------------------------------------------- state transport
+
+
+def state_to_payload(state) -> dict:
+    """An ``IndexState`` as a flat field->numpy dict (protocol-safe)."""
+    return {f.name: np.asarray(getattr(state, f.name))
+            for f in dataclasses.fields(state)}
+
+
+def payload_to_state(payload: dict):
+    """Rebuild an ``IndexState`` from :func:`state_to_payload` output."""
+    import jax.numpy as jnp
+
+    from ..core.types import IndexState
+    names = {f.name for f in dataclasses.fields(IndexState)}
+    if set(payload) != names:
+        raise ProtocolError(
+            f"state payload fields mismatch: missing "
+            f"{sorted(names - set(payload))}, "
+            f"unexpected {sorted(set(payload) - names)}")
+    return IndexState(**{k: jnp.asarray(v) for k, v in payload.items()})
+
+
+def cfg_to_payload(cfg) -> dict:
+    """A ``UBISConfig`` as a JSON-safe dict (dtype by name)."""
+    d = dataclasses.asdict(cfg)
+    d["dtype"] = np.dtype(d["dtype"]).name
+    return d
+
+
+def payload_to_cfg(payload: dict):
+    from ..core.types import UBISConfig
+    d = dict(payload)
+    d["dtype"] = np.dtype(d["dtype"])
+    return UBISConfig(**d)
+
+
+# ------------------------------------------------------ multiset digest
+
+
+def live_multiset_digest(state) -> int:
+    """Order-independent digest of the live id->vector multiset
+    (postings + cache), combinable across workers by uint64 addition.
+
+    This is the checkpoint manifest's integrity field: a restore that
+    loads a mismatched / partially-written shard set produces a digest
+    that disagrees with the manifest and fails LOUDLY
+    (``checkpoint.manager.load_cluster_checkpoint``).
+    """
+    from ..core import version_manager as vm
+    status = np.asarray(vm.unpack_status(np.asarray(state.rec_meta)))
+    vis = np.asarray(state.allocated) & (status != 3)
+    ids = np.asarray(state.ids)
+    sv = np.asarray(state.slot_valid)
+    vecs = np.asarray(state.vectors)
+    total = 0
+    for p in np.flatnonzero(vis):
+        for c in np.flatnonzero(sv[p]):
+            row = struct.pack("<q", int(ids[p, c])) + vecs[p, c].tobytes()
+            total = (total + zlib.crc32(row)) & 0xFFFFFFFFFFFFFFFF
+    cv = np.asarray(state.cache_valid)
+    cids = np.asarray(state.cache_ids)
+    cvecs = np.asarray(state.cache_vecs)
+    for s in np.flatnonzero(cv):
+        row = struct.pack("<q", int(cids[s])) + cvecs[s].tobytes()
+        total = (total + zlib.crc32(row)) & 0xFFFFFFFFFFFFFFFF
+    return total
+
+
+def combine_digests(digests) -> int:
+    total = 0
+    for d in digests:
+        total = (total + int(d)) & 0xFFFFFFFFFFFFFFFF
+    return total

@@ -1,0 +1,315 @@
+"""The cluster worker: device programs behind the command protocol.
+
+A worker owns ONE ``ShardedUBISDriver`` (its local mesh = the "host's"
+device set) and exposes the driver's plan/execute halves as protocol
+commands — it makes **no planning decisions**.  The coordinator owns
+every planner (rebalance, tier, PQ cadence, insert routing) and drives
+the worker through the three tick legs:
+
+  ``tick_begin``  — run the sharded background program; ship the
+                    pressure rows up (plus executed/GC counts);
+  ``tick_exec``   — execute the coordinator's migrate moves, drain the
+                    cache, run the retrain slot if granted; ship the
+                    tier observation rows up;
+  ``tick_end``    — execute the coordinator's spill/promote lanes
+                    (dispatch + reconcile under staleness signatures);
+                    ship the commit log + occupancy report up.
+
+The worker's driver is built with ``Obs(enabled=False)``: the stats
+mapping stays live (the device programs need it) but tracing is a
+no-op — *decisions* are traced on the coordinator's plane, and the
+worker ships its tier ``commit_log`` up so commit outcomes land there
+too.
+
+Run as a subprocess via ``python -m repro.cluster.worker``: frames in
+on stdin, frames out on stdout.  The real fd 1 is duplicated into a
+private handle and then pointed at stderr, so any stray ``print`` (or
+library chatter) inside handlers cannot corrupt the frame stream.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import protocol
+
+
+class WorkerRuntime:
+    """Command dispatch over one driver (backend-agnostic: the
+    LocalBackend calls ``handle`` in-process, the subprocess ``main``
+    loop calls it behind stdin/stdout frames)."""
+
+    def __init__(self):
+        self.drv = None
+        self.worker = 0
+        self._tier_rows: Optional[dict] = None
+
+    # ------------------------------------------------------------- util
+
+    def handle(self, kind: str, payload: dict) -> dict:
+        fn = getattr(self, "_cmd_" + kind, None)
+        if fn is None:
+            raise protocol.ProtocolError(f"unknown command {kind!r}")
+        if self.drv is None and kind not in ("init", "ping", "sleep",
+                                             "shutdown"):
+            raise protocol.ProtocolError(f"{kind!r} before init")
+        return fn(payload)
+
+    def _repin(self, state) -> None:
+        """Adopt a tier-mutated state re-pinned to the driver's mesh."""
+        import jax
+        if state is not self.drv.state:
+            self.drv.state = jax.device_put(state, self.drv._shardings)
+
+    # ---------------------------------------------------------- control
+
+    def _cmd_init(self, p: dict) -> dict:
+        import jax
+
+        from ..api.sharded_driver import ShardedUBISDriver, default_mesh
+        from ..obs import Obs
+        cfg = protocol.payload_to_cfg(p["cfg"])
+        mesh_shape = p.get("mesh_shape")
+        mesh = (jax.make_mesh(tuple(mesh_shape), ("data", "model"))
+                if mesh_shape else default_mesh(cfg))
+        kw = dict(p.get("kwargs") or {})
+        self.worker = int(p.get("worker", 0))
+        self.drv = ShardedUBISDriver(
+            cfg, np.asarray(p["seed_vectors"], np.float32), mesh=mesh,
+            obs=Obs(enabled=False), **kw)
+        return {"n_shards": self.drv.n_shards,
+                "devices": len(jax.devices())}
+
+    def _cmd_ping(self, p: dict) -> dict:
+        return {"ok": True, "worker": self.worker}
+
+    def _cmd_sleep(self, p: dict) -> dict:
+        # test hook: fake a straggling worker
+        time.sleep(float(p["seconds"]))
+        return {"ok": True}
+
+    def _cmd_shutdown(self, p: dict) -> dict:
+        return {"ok": True}
+
+    # ------------------------------------------------------- foreground
+
+    def _cmd_insert_rounds(self, p: dict) -> dict:
+        n_acc, rej_v, rej_i, rej_t = self.drv._insert_rounds(
+            np.asarray(p["vecs"], np.float32),
+            np.asarray(p["ids"], np.int32))
+        return {"accepted": int(n_acc),
+                "rej_vecs": rej_v, "rej_ids": rej_i, "rej_targets": rej_t}
+
+    def _cmd_cache_put(self, p: dict) -> dict:
+        tg = p.get("targets")
+        n = self.drv._cache_put(np.asarray(p["vecs"], np.float32),
+                                np.asarray(p["ids"], np.int32),
+                                targets=tg)
+        return {"cached": int(n)}
+
+    def _cmd_delete(self, p: dict) -> dict:
+        r = self.drv.delete(np.asarray(p["ids"], np.int64))
+        return {"deleted": int(r.deleted)}
+
+    def _cmd_search(self, p: dict) -> dict:
+        r = self.drv.search(np.asarray(p["queries"], np.float32),
+                            int(p["k"]), p.get("nprobe"))
+        return {"ids": np.asarray(r.ids), "scores": np.asarray(r.scores)}
+
+    def _cmd_exact(self, p: dict) -> dict:
+        r = self.drv.exact(np.asarray(p["queries"], np.float32),
+                           int(p["k"]))
+        return {"ids": np.asarray(r.ids), "scores": np.asarray(r.scores)}
+
+    # -------------------------------------------------------- tick legs
+
+    def _cmd_tick_begin(self, p: dict) -> dict:
+        executed, reclaimed, press = self.drv.exec_background()
+        return {"executed": int(executed), "gc": int(reclaimed),
+                "pressure": np.asarray(press)}
+
+    def _cmd_plan_inputs(self, p: dict) -> dict:
+        lengths, movable = self.drv.rebalance_inputs()
+        return {"lengths": lengths, "movable": movable}
+
+    def _cmd_tick_exec(self, p: dict) -> dict:
+        drv = self.drv
+        src = np.asarray(p.get("src", []), np.int32)
+        dst = np.asarray(p.get("dst", []), np.int32)
+        mig = (drv.exec_migrate(src, dst) if len(src)
+               else np.zeros(0, bool))
+        drained = drv.exec_drain()
+        retrained = drv.exec_pq_retrain() if p.get("retrain") else 0
+        rows = None
+        if drv.tier is not None:
+            # decayed=True — the sharded background round ran in leg 1
+            st, rows = drv.tier.observe(drv.state, decayed=True)
+            self._repin(st)
+            self._tier_rows = rows
+        return {"migrated": np.asarray(mig, bool), "drained": int(drained),
+                "retrained": int(retrained), "tier_rows": rows,
+                "commits": (drv.tier.drain_commits()
+                            if drv.tier is not None else [])}
+
+    def _cmd_tick_end(self, p: dict) -> dict:
+        drv = self.drv
+        n_s = n_p = 0
+        commits: list = []
+        if drv.tier is not None:
+            rows = self._tier_rows
+            if rows is None:
+                raise protocol.ProtocolError("tick_end before tick_exec")
+            self._tier_rows = None
+            st, plan = drv.tier.dispatch_planned(
+                drv.state, rows,
+                np.asarray(p.get("promotes", []), np.int64),
+                np.asarray(p.get("spills", []), np.int64))
+            self._repin(st)
+            st, n_s, n_p = drv.tier.reconcile(drv.state, plan)
+            self._repin(st)
+            drv.stats["tier_spilled"] += n_s
+            drv.stats["tier_promoted"] += n_p
+            drv.stats["tier_resident"] = len(drv.tier.pool)
+            commits = drv.tier.drain_commits()
+        return {"spilled": int(n_s), "promoted": int(n_p),
+                "commits": commits,
+                "cache_backlog": int(np.asarray(
+                    drv.state.cache_valid).sum()),
+                "tier_resident": (len(drv.tier.pool)
+                                  if drv.tier is not None else 0),
+                "live": int(drv.live_count())}
+
+    # ------------------------------------------------------------- tier
+
+    def _cmd_force_spill(self, p: dict) -> dict:
+        moved = self.drv.force_spill(int(p["n"]))
+        tier = self.drv.tier
+        return {"moved": int(moved),
+                "commits": tier.drain_commits() if tier is not None else [],
+                "tier_resident": len(tier.pool) if tier is not None else 0}
+
+    def _cmd_force_promote(self, p: dict) -> dict:
+        n = p.get("n")
+        moved = self.drv.force_promote(None if n is None else int(n))
+        tier = self.drv.tier
+        return {"moved": int(moved),
+                "commits": tier.drain_commits() if tier is not None else [],
+                "tier_resident": len(tier.pool) if tier is not None else 0}
+
+    # ------------------------------------------------------------ state
+
+    def _cmd_snapshot(self, p: dict) -> dict:
+        snap = self.drv.snapshot()
+        return {"state": protocol.state_to_payload(snap),
+                "digest": protocol.live_multiset_digest(snap)}
+
+    def _cmd_load_state(self, p: dict) -> dict:
+        self.drv.load_snapshot(protocol.payload_to_state(p["state"]))
+        self._tier_rows = None
+        return {"ok": True, "live": int(self.drv.live_count())}
+
+    def _cmd_live_count(self, p: dict) -> dict:
+        return {"live": int(self.drv.live_count())}
+
+    def _cmd_posting_lengths(self, p: dict) -> dict:
+        return {"lengths": np.asarray(self.drv.posting_lengths())}
+
+    def _cmd_occupancy(self, p: dict) -> dict:
+        return {"occ": np.asarray(self.drv.shard_occupancy()),
+                "live": int(self.drv.live_count())}
+
+    def _cmd_memory(self, p: dict) -> dict:
+        tiers = self.drv.memory_tiers()
+        return {"bytes": int(self.drv.memory_bytes()),
+                "tiers": {k: int(v) for k, v in tiers.items()}}
+
+    def _cmd_stats(self, p: dict) -> dict:
+        return {"stats": {k: float(self.drv.stats[k])
+                          for k in self.drv.stats}}
+
+    def _cmd_extract(self, p: dict) -> dict:
+        """Cross-worker balance donor: hand over up to ``n`` live
+        vectors from this worker's longest float-resident NORMAL
+        postings (ids + float32 vectors), deleting them locally.  The
+        coordinator re-inserts them on the receiving worker — together
+        one logical migration, so the live multiset is conserved."""
+        from ..core import version_manager as vm
+        from ..core.types import STATUS_NORMAL
+        drv = self.drv
+        want = int(p["n"])
+        st = drv.state
+        status = np.asarray(vm.unpack_status(st.rec_meta))
+        ok = (np.asarray(vm.visible(st.rec_meta, st.allocated,
+                                    st.global_version))
+              & (status == STATUS_NORMAL)
+              & ~np.asarray(st.tier_spilled))
+        lengths = np.asarray(st.lengths)
+        order = np.flatnonzero(ok)
+        order = order[np.argsort(-lengths[order], kind="stable")]
+        ids_rows = np.asarray(st.ids)
+        sv = np.asarray(st.slot_valid)
+        vecs_all = np.asarray(st.vectors)
+        sel_ids, sel_vecs = [], []
+        got = 0
+        for pid in order:
+            if got >= want:
+                break
+            slots = np.flatnonzero(sv[pid])[:want - got]
+            if slots.size == 0:
+                continue
+            sel_ids.append(ids_rows[pid, slots])
+            sel_vecs.append(vecs_all[pid, slots].astype(np.float32))
+            got += slots.size
+        if not got:
+            return {"ids": np.empty(0, np.int32),
+                    "vecs": np.empty((0, drv.cfg.dim), np.float32)}
+        ids = np.concatenate(sel_ids).astype(np.int32)
+        vecs = np.concatenate(sel_vecs)
+        r = drv.delete(ids)
+        if int(r.deleted) != len(ids):
+            # tombstoning raced something structural — hand over only
+            # what actually left this worker (never duplicate a vector)
+            raise protocol.ProtocolError(
+                f"extract deleted {r.deleted} of {len(ids)} planned ids")
+        return {"ids": ids, "vecs": vecs}
+
+
+def serve(inp, out) -> None:
+    """Frame loop: one reply frame per command frame.  Errors reply as
+    ``kind="error"`` (the coordinator raises); only a transport-level
+    failure kills the loop."""
+    rt = WorkerRuntime()
+    while True:
+        buf = protocol.read_frame(inp)
+        if buf is None:
+            break
+        msg = protocol.decode_message(buf)
+        try:
+            payload = rt.handle(msg["kind"], msg["payload"])
+            reply = protocol.encode_message("ok", payload, msg["seq"])
+        except Exception as e:  # noqa: BLE001 - ship the failure up
+            reply = protocol.encode_message(
+                "error", {"command": msg["kind"], "error": repr(e)},
+                msg["seq"])
+        protocol.write_frame(out, reply)
+        if msg["kind"] == "shutdown":
+            break
+
+
+def main() -> None:
+    import os
+    import sys
+    # claim the frame stream before anything can print to it: keep a
+    # private handle on the real stdout, then point fd 1 at stderr so
+    # stray prints (ours or a library's) never corrupt a frame
+    out = os.fdopen(os.dup(1), "wb")
+    os.dup2(2, 1)
+    sys.stdout = sys.stderr
+    inp = os.fdopen(os.dup(0), "rb")
+    serve(inp, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -369,6 +369,42 @@ class TierPlan:
                    + (self.promote_pids >= 0).sum())
 
 
+def plan_tier_moves(planner: TierPlanner, rows: dict, cfg: UBISConfig):
+    """The tier tick's *decision half*, as a pure function of observed
+    rows — runnable by a process that does not hold the index.
+
+    ``rows`` is the numpy observation ``TierManager.observe`` returns
+    (heat / spilled / alloc / status / lengths / used); the output is
+    ``(promote_pids, spill_pids)``.  Extracted from ``dispatch`` so the
+    cluster coordinator can own the plan (the worker ships rows up and
+    receives pids back) while the in-process drivers keep the identical
+    decision path — including the promote-heat mirroring and the
+    same-tick promote/spill exclusion that prevent the
+    promote->re-evict livelock.
+    """
+    promos = planner.plan_promotes(
+        rows["heat"], rows["spilled"], rows["alloc"], rows["status"],
+        rows["lengths"], rows["used"],
+        l_min=cfg.l_min, l_max=cfg.l_max, capacity=cfg.capacity)
+    spilled = rows["spilled"].copy()
+    spilled[promos] = False
+    # mirror promote_round's device heat write (promoted postings land
+    # warm) in the host view, or the spill plan below would see the
+    # STALE cold heat and re-evict a just-promoted posting in the same
+    # tick — with promote_heat <= cold_heat that is a permanent
+    # promote/spill livelock
+    heat = rows["heat"].copy()
+    heat[promos] = planner.promote_heat
+    spills = planner.plan_spills(heat, spilled, rows["alloc"],
+                                 rows["status"])
+    # hard guarantee regardless of the knob ordering (a degenerate
+    # promote_heat <= cold_heat config must not livelock either):
+    # nothing promoted this tick may be spilled in the same tick
+    if len(promos):
+        spills = spills[~np.isin(spills, promos)]
+    return promos, spills
+
+
 class TierManager:
     """Host orchestration of the cold tier, shared by both drivers.
 
@@ -398,10 +434,23 @@ class TierManager:
         # trace events + the spilled-hit search counter
         self.obs = obs
         self._stats = obs.driver_stats() if obs is not None else None
+        # every commit decision (reconcile + the force/adopt/retrain
+        # paths) is also appended here so a remote coordinator can drain
+        # and re-emit it on ITS obs plane; in-process drivers may ignore
+        # it (bounded: drained per cluster command, cleared on adopt)
+        self.commit_log: list = []
 
     def _emit(self, kind: str, **fields) -> None:
         if self.obs is not None:
             self.obs.emit(kind, **fields)
+
+    def _commit(self, **fields) -> None:
+        self.commit_log.append(fields)
+        self._emit("tier_commit", **fields)
+
+    def drain_commits(self) -> list:
+        out, self.commit_log = self.commit_log, []
+        return out
 
     # ---- heat bookkeeping (host-side accumulation) --------------------
 
@@ -434,46 +483,54 @@ class TierManager:
 
         ``decayed`` says whether a background round will carry (or, for
         the sync tick, carried) the heat decay this tick.
+
+        Decomposed into ``observe`` (rows out) + module-level
+        ``plan_tier_moves`` (decision) + ``dispatch_planned`` (DMA) so
+        the cluster coordinator can run the decision remotely.
         """
+        state, rows = self.observe(state, decayed=decayed)
+        promos, spills = plan_tier_moves(self.planner, rows, self.cfg)
+        return self.dispatch_planned(
+            state, rows, promos, spills,
+            reasons=self.planner.last_promote_reasons)
+
+    def observe(self, state: IndexState, *, decayed: bool):
+        """Apply accumulated touches/decay, then read the planner's
+        observation rows (plain numpy, serializable).  Returns
+        (state, rows)."""
         from . import version_manager as vm
-        cfg = self.cfg
         if self._counts.any():
             state = touch_round(state, jnp.asarray(self._counts))
             self._counts[:] = 0
         if not decayed:
             state = decay_round(state)
-        heat = np.asarray(state.heat)
-        spilled = np.asarray(state.tier_spilled)
-        alloc = np.asarray(state.allocated)
-        status = np.asarray(vm.unpack_status(state.rec_meta))
-        lengths = np.asarray(state.lengths)
-        used = np.asarray(state.used)
-        promos = self.planner.plan_promotes(
-            heat, spilled, alloc, status, lengths, used,
-            l_min=cfg.l_min, l_max=cfg.l_max, capacity=cfg.capacity)
-        spilled = spilled.copy()
-        spilled[promos] = False
-        # mirror promote_round's device heat write (promoted postings
-        # land warm) in the host view, or the spill plan below would see
-        # the STALE cold heat and re-evict a just-promoted posting in
-        # the same tick — with promote_heat <= cold_heat that is a
-        # permanent promote/spill livelock
-        heat = heat.copy()
-        heat[promos] = self.planner.promote_heat
-        spills = self.planner.plan_spills(heat, spilled, alloc, status)
-        # hard guarantee regardless of the knob ordering (a degenerate
-        # promote_heat <= cold_heat config must not livelock either):
-        # nothing promoted this tick may be spilled in the same tick
-        if len(promos):
-            spills = spills[~np.isin(spills, promos)]
+        rows = {
+            "heat": np.asarray(state.heat),
+            "spilled": np.asarray(state.tier_spilled),
+            "alloc": np.asarray(state.allocated),
+            "status": np.asarray(vm.unpack_status(state.rec_meta)),
+            "lengths": np.asarray(state.lengths),
+            "used": np.asarray(state.used),
+        }
+        return state, rows
+
+    def dispatch_planned(self, state: IndexState, rows: dict, promos,
+                         spills, reasons: Optional[dict] = None):
+        """Execution half of ``dispatch``: start the DMA for an
+        already-planned move set (``rows`` must be the observation the
+        plan was made from — its lengths/used become the spill staleness
+        signatures).  Returns (state, plan | None)."""
+        promos = np.asarray(promos, np.int64).ravel()
+        spills = np.asarray(spills, np.int64).ravel()
+        lengths, used = rows["lengths"], rows["used"]
         if not len(promos) and not len(spills):
             return state, None
         if self.obs is not None and (len(promos) or len(spills)):
+            reasons = reasons or {}
             self._emit(
                 "tier_plan",
                 promotes=[{"pid": int(p),
-                           "reason": self.planner.last_promote_reasons.get(
-                               int(p), "search-heat")}
+                           "reason": reasons.get(int(p), "search-heat")}
                           for p in promos],
                 spills=[{"pid": int(p), "reason": "watermark-cold"}
                         for p in spills])
@@ -491,7 +548,7 @@ class TierManager:
             for i, pid in enumerate(promos):
                 staged[i] = self.pool.get(int(pid))
             promote_tiles = jax.device_put(staged)
-        safe = np.clip(spill_pids, 0, cfg.max_postings - 1)
+        safe = np.clip(spill_pids, 0, self.cfg.max_postings - 1)
         plan = TierPlan(
             spill_pids=spill_pids, spill_tiles=spill_tiles,
             spill_sig_len=lengths[safe].copy(),
@@ -544,18 +601,16 @@ class TierManager:
                 self.pool.put(int(s_pids[i]), tiles[i])
             state = spill_round(state, cfg, jnp.asarray(s_pids),
                                 jnp.asarray(s_valid))
-        if self.obs is not None:
-            self._emit(
-                "tier_commit",
-                spilled=[int(p) for p in s_pids[s_valid]],
-                promoted=[int(p) for p in p_pids[p_valid]],
-                dropped_spills=[{"pid": int(p),
-                                 "reason": "stale-signature"}
-                                for p in s_pids[(s_pids >= 0) & ~s_valid]],
-                dropped_promotes=[{"pid": int(p),
-                                   "reason": "pool-missing"}
-                                  for p in p_pids[(p_pids >= 0)
-                                                  & ~p_valid]])
+        self._commit(
+            spilled=[int(p) for p in s_pids[s_valid]],
+            promoted=[int(p) for p in p_pids[p_valid]],
+            dropped_spills=[{"pid": int(p),
+                             "reason": "stale-signature"}
+                            for p in s_pids[(s_pids >= 0) & ~s_valid]],
+            dropped_promotes=[{"pid": int(p),
+                               "reason": "pool-missing"}
+                              for p in p_pids[(p_pids >= 0)
+                                              & ~p_valid]])
         return state, n_s, n_p
 
     def force_spill(self, state: IndexState, n: int):
@@ -617,10 +672,9 @@ class TierManager:
                                 jnp.asarray(valid))
             n += len(chunk)
         if reason and n:
-            self._emit("tier_commit",
-                       spilled=[int(p) for p in pids[:n]], promoted=[],
-                       dropped_spills=[], dropped_promotes=[],
-                       reason=reason)
+            self._commit(spilled=[int(p) for p in pids[:n]], promoted=[],
+                         dropped_spills=[], dropped_promotes=[],
+                         reason=reason)
         return state, n
 
     def _promote(self, state: IndexState, pids, reason: str = ""):
@@ -641,10 +695,9 @@ class TierManager:
                                   jnp.asarray(padded >= 0))
             n += len(chunk)
         if reason and n:
-            self._emit("tier_commit",
-                       spilled=[], promoted=[int(p) for p in pids[:n]],
-                       dropped_spills=[], dropped_promotes=[],
-                       reason=reason)
+            self._commit(spilled=[], promoted=[int(p) for p in pids[:n]],
+                         dropped_spills=[], dropped_promotes=[],
+                         reason=reason)
         return state, n
 
     # ---- host-side exact serving --------------------------------------
@@ -703,6 +756,7 @@ class TierManager:
         (see ``snapshot_fill``) and re-zero the spilled device tiles."""
         self.pool = HostTierPool()
         self._counts[:] = 0
+        self.commit_log = []
         sp = np.flatnonzero(np.asarray(state.tier_spilled)
                             & np.asarray(state.allocated))
         # clear the flags, then re-spill through the normal path: the

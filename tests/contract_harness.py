@@ -35,7 +35,7 @@ import numpy as np
 # drifting/clustered streams (the paper's motivation), so its floor only
 # guards against catastrophic breakage (empty/garbage results).
 RECALL_FLOOR = {"ubis": 0.9, "spfresh": 0.9, "ubis-sharded": 0.9,
-                "freshdiskann": 0.15, "spann": 0.8}
+                "ubis-cluster": 0.9, "freshdiskann": 0.15, "spann": 0.8}
 
 
 def make_clustered(n, d=16, k=10, seed=1, scale=5.0):
