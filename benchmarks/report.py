@@ -1,5 +1,7 @@
-"""Generate the EXPERIMENTS.md tables from the saved dry-run / roofline
-artifacts (dryrun_results.json, roofline_results.json, perf_*.json)."""
+"""Render saved benchmark artifacts as markdown tables: the per-kernel
+roofline report (``roofline_results.json``, written by
+``benchmarks.roofline``) and an observability snapshot
+(``metrics_snapshot.json``, written by ``benchmarks.obs_smoke``)."""
 from __future__ import annotations
 
 import json
@@ -7,11 +9,11 @@ import os
 import sys
 
 
-def _load(path):
+def _load(path, default):
     if os.path.exists(path):
         with open(path) as f:
             return json.load(f)
-    return []
+    return default
 
 
 def _fmt(x, nd=2):
@@ -26,62 +28,26 @@ def _fmt(x, nd=2):
     return str(x)
 
 
-def dryrun_table(recs):
-    lines = ["| arch | cell | mesh | params | lower s | compile s | "
-             "HLO GFLOP/dev (scan-counted) | status |",
-             "|---|---|---|---|---|---|---|---|"]
-    for r in sorted(recs, key=lambda r: (r.get("arch", ""),
-                                         r.get("cell", ""),
-                                         r.get("mesh", ""))):
+def roofline_table(rows) -> str:
+    """Per-kernel roofline rows (see ``benchmarks.roofline``): executed
+    vs useful FLOPs, HBM bytes, arithmetic intensity, and the attainable
+    fraction of peak under the memory roof."""
+    if not rows:
+        return ("_no roofline rows (run `python -m benchmarks.roofline "
+                "--out roofline_results.json`)_")
+    lines = ["| kernel | backend | shapes | GFLOP | useful GFLOP | MiB | "
+             "FLOP/B | bound | roofline frac | measured ms |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: r.get("kernel", "")):
         lines.append(
-            "| {} | {} | {} | {} | {} | {} | {} | {} |".format(
-                r.get("arch"), r.get("cell"), r.get("mesh"),
-                _fmt(r.get("n_params", 0) / 1e9, 2) + "B"
-                if r.get("n_params") else "-",
-                _fmt(r.get("lower_s")), _fmt(r.get("compile_s")),
-                _fmt(r.get("hlo_flops", 0) / 1e9, 1),
-                r.get("status", "?")))
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |".format(
+                r.get("kernel"), r.get("backend", "-"), r.get("shapes"),
+                _fmt(r.get("flops", 0) / 1e9, 3),
+                _fmt(r.get("useful_flops", 0) / 1e9, 3),
+                _fmt(r.get("bytes", 0) / 2 ** 20),
+                _fmt(r.get("intensity"), 1), r.get("bound"),
+                _fmt(r.get("roofline_frac")), _fmt(r.get("measured_ms"))))
     return "\n".join(lines)
-
-
-def roofline_table(recs):
-    from benchmarks.roofline import model_flops
-    lines = ["| arch | cell | t_compute | t_memory | t_collective | "
-             "dominant | MODEL_FLOPS | useful ratio | lever |",
-             "|---|---|---|---|---|---|---|---|---|"]
-    for r in recs:
-        if r.get("status") != "ok":
-            lines.append(f"| {r.get('arch')} | {r.get('cell')} | - | - | "
-                         f"- | FAIL | - | - | {r.get('error', '')[:60]} |")
-            continue
-        try:
-            mf = model_flops(r["arch"], r["cell"])
-        except Exception:
-            mf = r.get("model_flops_global", 0)
-        hlo_global = r["hlo_flops"] * r["n_devices"]
-        useful = mf / hlo_global if hlo_global else 0
-        lines.append(
-            "| {} | {} | {} s | {} s | {} s | {} | {} | {} | {} |".format(
-                r["arch"], r["cell"],
-                _fmt(r["t_compute_s"], 3), _fmt(r["t_memory_s"], 3),
-                _fmt(r["t_collective_s"], 3), r["dominant"],
-                _fmt(mf), _fmt(useful),
-                LEVERS.get((r["arch"], r["cell"]),
-                           LEVERS.get(r["dominant"], ""))))
-    return "\n".join(lines)
-
-
-LEVERS = {
-    "memory": "fuse attention score chain (Pallas flash path on TPU)",
-    "collective": "reshard / reduce-scatter grads; overlap with compute",
-    "compute": "already near the MXU roof for this shape",
-    ("granite-moe-3b-a800m", "train_4k"):
-        "EP needs experts%mesh==0 -> pad experts (see §Perf)",
-    ("deepseek-67b", "train_4k"):
-        "attention score traffic -> dots remat + flash kernel",
-    ("jamba-1.5-large-398b", "train_4k"):
-        "mamba scan materialisation -> chunked assoc-scan block sizes",
-}
 
 
 def metrics_table(snap: dict) -> str:
@@ -104,13 +70,10 @@ def metrics_table(snap: dict) -> str:
 
 
 def main():
-    recs_dry = _load("dryrun_results.json")
-    recs_roof = _load("roofline_results.json")
-    print("## §Dry-run\n")
-    print(dryrun_table(recs_dry))
-    print("\n## §Roofline\n")
-    print(roofline_table(recs_roof))
-    snap = _load("metrics_snapshot.json")
+    rows = _load("roofline_results.json", [])
+    print("## §Roofline\n")
+    print(roofline_table(rows if isinstance(rows, list) else []))
+    snap = _load("metrics_snapshot.json", {})
     print("\n## §Observability\n")
     print(metrics_table(snap if isinstance(snap, dict) else {}))
 

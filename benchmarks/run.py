@@ -1,8 +1,8 @@
 """Benchmark entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract, plus
-the full per-figure rows, and (optionally) the roofline table from the
-dry-run artifacts.
+the full per-figure rows.  The per-kernel roofline report is its own
+entry point (``python -m benchmarks.roofline``).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--figures fig5,...]
 """

@@ -70,6 +70,7 @@ from ..core.sharded import (index_specs, make_sharded_background,
                             make_sharded_insert, make_sharded_migrate,
                             make_sharded_search)
 from ..core.types import STATUS_NORMAL, IndexState, UBISConfig
+from ..kernels import ops
 from ..obs import Obs
 from .rebalance import RebalancePlanner
 from .types import SearchResult, TickReport, UpdateResult
@@ -125,6 +126,7 @@ class ShardedUBISDriver:
         # observability plane: shared-schema stats facade + tracer (the
         # same key set as UBISDriver — pinned by tests/test_obs.py)
         self.obs = obs if obs is not None else Obs()
+        ops.observe_fallbacks(self.obs)
         self.stats = self.obs.driver_stats()
         self._profile_dir = obs_profile_dir
         self._profiled = False

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.types import SearchResult, TickReport, UpdateResult
+from ..kernels import ops
 from ..obs import Obs
 from . import balance, search as search_mod, tier as tier_mod, update
 from .build import initial_state
@@ -92,6 +93,7 @@ class UBISDriver:
         # stats mapping below is a schema-seeded facade registered with
         # it, so every engine exposes the same key set
         self.obs = obs if obs is not None else Obs()
+        ops.observe_fallbacks(self.obs)
         # opt-in jax.profiler capture: the FIRST tick after construction
         # is wrapped in a device trace written under this directory
         self._profile_dir = obs_profile_dir

@@ -35,9 +35,10 @@ def search(state: IndexState, cfg: UBISConfig, queries: jax.Array,
     queries = queries.astype(jnp.float32)
 
     vis = vm.visible(state.rec_meta, state.allocated, state.global_version)
-    csc = ops.centroid_score(queries, state.centroids, vis,
-                             backend=cfg.use_pallas)          # (Q, M)
-    _, probe = jax.lax.top_k(-csc, nprobe)
+    # fused phase 1: centroid scores + running top-nprobe in one kernel
+    # (no (Q, M) score matrix on the pallas path)
+    _, probe = ops.centroid_topk(queries, state.centroids, vis, k=nprobe,
+                                 backend=cfg.use_pallas)
     probe = probe.astype(jnp.int32)
 
     if cfg.use_pq:
@@ -47,17 +48,23 @@ def search(state: IndexState, cfg: UBISConfig, queries: jax.Array,
         # stays the oracle — use_pq=False is bit-identical to it.
         pscores, pids = _pq_stage(state, cfg, queries, probe, vis)
     else:
-        pscores = ops.posting_scan_gather(
-            queries, state.vectors, state.slot_valid, vis, probe,
-            backend=cfg.use_pallas).reshape(Q, -1)            # (Q, P*C)
-        pids = state.ids[probe].reshape(Q, -1)                # (Q, P*C)
+        C = state.vectors.shape[1]
+        kf = min(k, probe.shape[1] * C)
+        pscores, cand = ops.posting_scan_topk(
+            queries, state.vectors, state.slot_valid, vis, probe, k=kf,
+            backend=cfg.use_pallas)                           # (Q, kf)
+        pids = state.ids.reshape(-1)[cand]
 
-    cscores = ops.centroid_score(queries, state.cache_vecs,
-                                 state.cache_valid,
-                                 backend=cfg.use_pallas)      # (Q, K)
-    cids = jnp.broadcast_to(state.cache_ids[None, :],
-                            (Q, cfg.cache_capacity))
+    kc = min(k, cfg.cache_capacity)
+    cscores, cpos = ops.centroid_topk(queries, state.cache_vecs,
+                                      state.cache_valid, k=kc,
+                                      backend=cfg.use_pallas)  # (Q, kc)
+    cids = state.cache_ids[cpos]
 
+    # final merge over the two already-selected candidate lists (kf + kc
+    # entries, not P*C + cache_capacity): both lists preserve the
+    # position-major tie order of the unfused full-matrix top_k, so the
+    # merged result is bit-identical to it.
     all_scores = jnp.concatenate([pscores, cscores], axis=1)
     all_ids = jnp.concatenate([pids, cids], axis=1)
     neg, idx = jax.lax.top_k(-all_scores, k)
@@ -75,20 +82,17 @@ def _pq_stage(state: IndexState, cfg: UBISConfig, queries: jax.Array,
     candidates, ready to merge with the cache scan.  R = rerank_k.
     """
     from ..quant import pq
-    Q = queries.shape[0]
     M, C, _ = state.vectors.shape
     P = probe.shape[1]
     R = min(cfg.rerank_k, P * C)
 
     luts = pq.lookup_tables(state.pq_codebooks, queries)     # (Q, V, m, ksub)
-    adc = ops.pq_scan_gather(luts, state.codes, state.pq_posting_slot,
-                             state.slot_valid, vis, probe,
-                             backend=cfg.use_pallas)          # (Q, P, C)
-    neg, ridx = jax.lax.top_k(-adc.reshape(Q, -1), R)
-    adc_top = -neg
-    flat_all = (probe[:, :, None] * C
-                + jnp.arange(C, dtype=jnp.int32)[None, None, :])
-    cand = jnp.take_along_axis(flat_all.reshape(Q, -1), ridx, axis=1)
+    # fused ADC scan + on-chip top-R: the (Q, P, C) ADC score tensor is
+    # never materialized on the pallas path — the kernel streams probed
+    # code tiles and returns the R best (score, flat-slot) pairs
+    adc_top, cand = ops.pq_scan_topk(
+        luts, state.codes, state.pq_posting_slot, state.slot_valid, vis,
+        probe, k=R, backend=cfg.use_pallas)                   # (Q, R)
     cand_vecs = state.vectors.reshape(M * C, -1)[cand].astype(jnp.float32)
     exact = (jnp.sum(cand_vecs * cand_vecs, -1)
              - 2.0 * jnp.einsum("qd,qrd->qr", queries, cand_vecs))

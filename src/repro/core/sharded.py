@@ -113,19 +113,14 @@ def _pq_phase2(state: IndexState, cfg: UBISConfig, queries, probe, mine,
     ready for the existing merge all-gather.
     """
     from ..quant import pq
-    Q = queries.shape[0]
     M_local, C, d = state.vectors.shape
     R = min(cfg.rerank_k, probe.shape[1] * C)
     luts = pq.lookup_tables(state.pq_codebooks, queries)  # (Q, V, m, ksub)
-    adc = ops.pq_scan_gather(luts, state.codes, state.pq_posting_slot,
-                             state.slot_valid, vis, probe,
-                             backend=cfg.use_pallas)       # (Q, P, C)
-    adc = jnp.where(mine[..., None], adc, BIG)
-    neg, ridx = jax.lax.top_k(-adc.reshape(Q, -1), R)
-    adc_top = -neg
-    flat_all = (probe[:, :, None] * C
-                + jnp.arange(C, dtype=jnp.int32)[None, None, :])
-    cand = jnp.take_along_axis(flat_all.reshape(Q, -1), ridx, axis=1)
+    # fused ADC scan + on-chip top-R with the ownership mask applied
+    # in-kernel — no (Q, P, C) score tensor on the pallas path
+    adc_top, cand = ops.pq_scan_topk(
+        luts, state.codes, state.pq_posting_slot, state.slot_valid, vis,
+        probe, k=R, qp_ok=mine, backend=cfg.use_pallas)    # (Q, R)
     cand_vecs = state.vectors.reshape(M_local * C, d)[cand].astype(
         jnp.float32)
     exact = (jnp.sum(cand_vecs * cand_vecs, -1)
@@ -167,12 +162,12 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
 
         vis = vm.visible(state.rec_meta, state.allocated,
                          state.global_version)
-        sc = ref.centroid_score(queries, state.centroids)
-        sc = jnp.where(vis[None, :], sc, BIG)
-        # phase 1 local: per-shard top-nprobe candidates
+        # phase 1 local: fused centroid score + per-shard top-nprobe
+        # (no (Q, M_local) score matrix on the pallas path)
         p_local = min(nprobe, M_local)
-        s1, local_pid = _local_topk(
-            sc, jnp.broadcast_to(jnp.arange(M_local), sc.shape), p_local)
+        s1, local_pid = ops.centroid_topk(queries, state.centroids, vis,
+                                          k=p_local,
+                                          backend=cfg.use_pallas)
         # global re-rank of gathered candidates
         s1_all = jax.lax.all_gather(s1, "model", axis=1, tiled=True)
         pid_all = jax.lax.all_gather(
@@ -204,29 +199,28 @@ def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,
             s2, i2 = _pq_phase2(state, cfg, queries, safe_pid, mine_cap,
                                 vis, k)
         else:
-            scores2 = ref.posting_scan_gather(
-                queries, state.vectors, state.slot_valid, vis, safe_pid)
-            scores2 = jnp.where(mine_cap[..., None], scores2, BIG)
-            ids2 = state.ids[safe_pid]
-            k_local = min(k, scores2.shape[1] * scores2.shape[2])
-            s2, i2 = _local_topk(scores2.reshape(Q, -1),
-                                 ids2.reshape(Q, -1), k_local)
+            C_ = state.vectors.shape[1]
+            k_local = min(k, safe_pid.shape[1] * C_)
+            # fused gather scan + top-k with the ownership mask applied
+            # in-kernel (no (Q, P, C) score tensor on the pallas path)
+            s2, cand2 = ops.posting_scan_topk(
+                queries, state.vectors, state.slot_valid, vis, safe_pid,
+                k=k_local, qp_ok=mine_cap, backend=cfg.use_pallas)
+            i2 = state.ids.reshape(-1)[cand2]
         # cache scan: each shard takes a 1/S slice of the replicated
         # cache (or shard 0 scans everything when disabled)
         if shard_cache_scan:
             cvs, cval_own, cid = _owned_cache_slice(state, my, n_shard)
-            csc = ref.centroid_score(queries, cvs)
-            csc = jnp.where(cval_own[None, :], csc, BIG)
-            ck = min(k, csc.shape[1])
-            s3, i3 = _local_topk(csc, jnp.broadcast_to(
-                cid[None, :], csc.shape), ck)
+            ck = min(k, cvs.shape[0])
+            s3, cpos = ops.centroid_topk(queries, cvs, cval_own, k=ck,
+                                         backend=cfg.use_pallas)
+            i3 = cid[cpos]
         else:
-            csc = ref.centroid_score(queries, state.cache_vecs)
-            csc = jnp.where(state.cache_valid[None, :] & (my == 0), csc,
-                            BIG)
-            ck = min(k, csc.shape[1])
-            s3, i3 = _local_topk(csc, jnp.broadcast_to(
-                state.cache_ids[None, :], csc.shape), ck)
+            cval = state.cache_valid & (my == 0)
+            ck = min(k, state.cache_vecs.shape[0])
+            s3, cpos = ops.centroid_topk(queries, state.cache_vecs, cval,
+                                         k=ck, backend=cfg.use_pallas)
+            i3 = state.cache_ids[cpos]
         s2 = jnp.concatenate([s2, s3], axis=1)
         i2 = jnp.concatenate([i2, i3], axis=1)
         # global merge

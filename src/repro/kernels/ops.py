@@ -12,6 +12,8 @@ Callers pass logical shapes; wrappers pad to hardware-aligned tiles
 from __future__ import annotations
 
 import functools
+import warnings
+import weakref
 from typing import Optional
 
 import jax
@@ -20,6 +22,7 @@ import jax.numpy as jnp
 from . import ref
 from .posting_scan import BIG, posting_scan as _ps_pallas
 from .centroid_score import centroid_score as _cs_pallas
+from .centroid_topk import centroid_topk as _ct_pallas
 from .kmeans_assign import kmeans_assign as _ka_pallas
 from .flash_attention import flash_attention as _fa_pallas
 
@@ -34,6 +37,41 @@ def _use_pallas(backend: str) -> bool:
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Kernel-fallback observability.  The gather/topk kernels require the
+# TPU storage layout (C/ksub/d multiples of 128); a misconfigured
+# deployment that requests the pallas backend with misaligned shapes
+# silently serves the slow jnp path.  Alignment is checked at trace
+# time (shapes are static), so the signal rides the PR 7 obs plane:
+# every registered Obs gets a ``kernel_fallback`` counter bump per
+# fallback dispatch and a one-time trace event per (kernel, reason).
+# ---------------------------------------------------------------------------
+
+_FALLBACK_SINKS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_FALLBACK_WARNED: set = set()
+
+
+def observe_fallbacks(obs) -> None:
+    """Register an ``Obs`` bundle to receive kernel-fallback signals
+    (drivers call this at construction).  Weakly held."""
+    if obs not in _FALLBACK_SINKS:
+        _FALLBACK_SINKS[obs] = set()
+
+
+def _note_fallback(kernel: str, reason: str) -> None:
+    key = (kernel, reason)
+    for obs, emitted in _FALLBACK_SINKS.items():
+        obs.counter("kernel_fallback").inc()
+        if key not in emitted:
+            emitted.add(key)
+            obs.emit("kernel_fallback", kernel=kernel, reason=reason)
+    if not _FALLBACK_SINKS and key not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(key)
+        warnings.warn(f"kernel {kernel} fell back to the jnp reference "
+                      f"({reason}); the pallas path requires 128-aligned "
+                      "storage shapes", stacklevel=3)
 
 
 def _ceil(x: int, m: int) -> int:
@@ -72,6 +110,34 @@ def centroid_score(q: jax.Array, c: jax.Array,
     return out[:Q, :M]
 
 
+def centroid_topk(q: jax.Array, c: jax.Array,
+                  vis: Optional[jax.Array] = None, *, k: int,
+                  backend: str = "auto"):
+    """Fused phase 1: (Q, d), (M, d)[, (M,) bool] -> (scores (Q, k)
+    ascending, idx (Q, k) int32); masked centroids -> BIG.
+
+    Replaces ``centroid_score`` + ``lax.top_k``: on the pallas path no
+    (Q, M) score matrix is materialized.  Both backends break ties
+    lowest-index-first, so the pair is bit-identical."""
+    Q, d = q.shape
+    M = c.shape[0]
+    assert k <= M, (k, M)
+    if vis is None:
+        vis = jnp.ones((M,), bool)
+    if not _use_pallas(backend):
+        return ref.centroid_topk(q, c, vis, k)
+    bq = 128 if Q >= 128 else _ceil(Q, 8)
+    bm = 512 if M >= 512 else _ceil(M, 128)
+    Qp, Mp, dp = _ceil(Q, bq), _ceil(M, bm), _ceil(d, 128)
+    qp = _pad2(q, Qp, dp)
+    cp = _pad2(c, Mp, dp, value=_PAD_CENTROID)
+    vp = jnp.pad(vis, (0, Mp - M))[None, :]   # padded rows masked -> BIG;
+    # k <= M real candidates always outrank the padded tail on ties
+    s, i = _ct_pallas(qp, cp, vp, k=k, bq=bq, bm=bm,
+                      interpret=_interpret())
+    return s[:Q], i[:Q]
+
+
 def posting_scan(q: jax.Array, tiles: jax.Array, valid: jax.Array,
                  *, backend: str = "auto") -> jax.Array:
     """(Q, d), (G, C, d), (G, C) -> (Q, G*C) scores; invalid -> BIG."""
@@ -101,7 +167,7 @@ def kmeans_assign(points: jax.Array, centroids: jax.Array,
         a, b = ref.kmeans_assign(points, centroids, mask)
         return a, jnp.where(jnp.isfinite(b), b, BIG)
     bn = 256 if N >= 256 else _ceil(N, 8)
-    bk = 128 if K >= 128 else _ceil(K, 128)
+    bk = 128  # lane-width tile; K pads up to a multiple (sentinel rows)
     Np, Kp, dp = _ceil(N, bn), _ceil(K, bk), _ceil(d, 128)
     pp = _pad2(points, Np, dp)
     cp = _pad2(centroids, Kp, dp, value=_PAD_CENTROID)
@@ -158,12 +224,50 @@ def pq_scan_gather(luts: jax.Array, codes: jax.Array,
     ksub = luts.shape[3]
     slot = jnp.clip(posting_slot.astype(jnp.int32), 0, V - 1)
     if not _use_pallas(backend) or C % 128 or ksub % 128:
+        if _use_pallas(backend):
+            _note_fallback("pq_scan_gather",
+                           f"C={C}, ksub={ksub} not 128-aligned")
         raw = ref.pq_scan_gather(luts, codes, slot, probe)
     else:
         raw = _pq_pallas(luts, codes, slot, probe.astype(jnp.int32),
                          interpret=_interpret())
     ok = slot_valid[probe] & vis[probe][..., None]
     return jnp.where(ok, raw, BIG)
+
+
+def pq_scan_topk(luts: jax.Array, codes: jax.Array,
+                 posting_slot: jax.Array, slot_valid: jax.Array,
+                 vis: jax.Array, probe: jax.Array, *, k: int,
+                 qp_ok: Optional[jax.Array] = None,
+                 backend: str = "auto"):
+    """Fused ADC scan + top-k (quant-plane phase 2).
+
+    Same inputs as :func:`pq_scan_gather` plus ``k`` and an optional
+    per-(query, probe) mask ``qp_ok`` (the sharded plane's ownership
+    mask); returns (scores (Q, k) ascending, cand (Q, k) int32 flat
+    slot index ``probe*C + c``) with BIG at masked candidates.  On the
+    pallas path the (Q, P, C) score tensor is never materialized —
+    selection runs on-chip against the streamed code tiles.  Alignment
+    gates as for ``pq_scan_gather``; misaligned pallas requests fall
+    back to the ref twin with a ``kernel_fallback`` obs signal."""
+    from .pq_scan import pq_scan_topk as _pqt_pallas
+    Q, V, m, ksub = luts.shape
+    C = codes.shape[2]
+    P = probe.shape[1]
+    assert k <= P * C, (k, P, C)
+    slot = jnp.clip(posting_slot.astype(jnp.int32), 0, V - 1)
+    valid = slot_valid & vis[:, None]
+    if qp_ok is None:
+        qp_ok = jnp.ones((Q, P), jnp.int32)
+    qp_ok = qp_ok.astype(jnp.int32)
+    if not _use_pallas(backend) or C % 128 or ksub % 128:
+        if _use_pallas(backend):
+            _note_fallback("pq_scan_topk",
+                           f"C={C}, ksub={ksub} not 128-aligned")
+        return ref.pq_scan_topk(luts, codes, slot, valid, qp_ok, probe, k)
+    return _pqt_pallas(luts, codes, slot, valid, qp_ok,
+                       probe.astype(jnp.int32), k=k,
+                       interpret=_interpret())
 
 
 def posting_scan_gather(q: jax.Array, vectors: jax.Array,
@@ -178,8 +282,43 @@ def posting_scan_gather(q: jax.Array, vectors: jax.Array,
     Q, d = q.shape
     M, C, _ = vectors.shape
     if not _use_pallas(backend) or d % 128 or C % 128:
+        if _use_pallas(backend):
+            _note_fallback("posting_scan_gather",
+                           f"d={d}, C={C} not 128-aligned")
         return ref.posting_scan_gather(q, vectors, slot_valid, vis, probe)
     raw = _psg_pallas(q, vectors, probe.astype(jnp.int32),
                       interpret=_interpret())
     ok = slot_valid[probe] & vis[probe][..., None]
     return jnp.where(ok, raw, BIG)
+
+
+def posting_scan_topk(q: jax.Array, vectors: jax.Array,
+                      slot_valid: jax.Array, vis: jax.Array,
+                      probe: jax.Array, *, k: int,
+                      qp_ok: Optional[jax.Array] = None,
+                      backend: str = "auto"):
+    """Fused float phase 2: probe scan + top-k in one kernel.
+
+    Same inputs as :func:`posting_scan_gather` plus ``k`` and an
+    optional per-(query, probe) mask; returns (scores (Q, k) ascending,
+    cand (Q, k) int32 flat slot index) — no (Q, P, C) score tensor on
+    the pallas path.  Alignment gates as for ``posting_scan_gather``;
+    misaligned pallas requests fall back with a ``kernel_fallback``
+    obs signal."""
+    from .posting_scan import posting_scan_topk as _pst_pallas
+    Q, d = q.shape
+    M, C, _ = vectors.shape
+    P = probe.shape[1]
+    assert k <= P * C, (k, P, C)
+    valid = slot_valid & vis[:, None]
+    if qp_ok is None:
+        qp_ok = jnp.ones((Q, P), jnp.int32)
+    qp_ok = qp_ok.astype(jnp.int32)
+    if not _use_pallas(backend) or d % 128 or C % 128:
+        if _use_pallas(backend):
+            _note_fallback("posting_scan_topk",
+                           f"d={d}, C={C} not 128-aligned")
+        return ref.posting_scan_topk(q, vectors, valid, qp_ok, probe, k)
+    return _pst_pallas(q, vectors, valid, qp_ok,
+                       probe.astype(jnp.int32), k=k,
+                       interpret=_interpret())

@@ -118,3 +118,84 @@ def posting_scan_gather(q: jax.Array, vectors: jax.Array, probe: jax.Array,
         out_shape=jax.ShapeDtypeStruct((Q, P, C), jnp.float32),
         interpret=interpret,
     )(probe, q, vectors)
+
+
+# ---------------------------------------------------------------------------
+# Fused gather scan + on-chip top-k (float phase-2 twin of
+# ``pq_scan.pq_scan_topk``): same double-buffered probe-indexed tile
+# streaming as the gather kernel above, but the (Q, P, C) score tensor
+# never hits HBM — a running top-k (score, flat-slot) list per query is
+# carried in the output refs (``merge_topk``, the flash-attention
+# online-reduction idiom), with validity and per-(query, probe)
+# ownership masks applied in-kernel before selection.
+# ---------------------------------------------------------------------------
+
+
+def _gather_topk_kernel(probe_ref, ok_ref, q_ref, v_ref, valid_ref,
+                        s_ref, i_ref, *, k):
+    from .centroid_topk import merge_topk
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.full_like(s_ref, jnp.inf)
+        i_ref[...] = jnp.zeros_like(i_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (1, d)
+    v = v_ref[0].astype(jnp.float32)              # (C, d)
+    C = v.shape[0]
+    vn = jnp.sum(v * v, axis=-1)                  # (C,)
+    dots = jax.lax.dot_general(
+        v, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (C, 1)
+    ok = valid_ref[...] & (ok_ref[i, j] != 0)     # (1, C)
+    score = jnp.where(ok, (vn - 2.0 * dots[:, 0])[None, :], BIG)
+    cand = (jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+            + probe_ref[i, j] * C)
+    s, ids = merge_topk(s_ref[...], i_ref[...], score, cand, k)
+    s_ref[...] = s
+    i_ref[...] = ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def posting_scan_topk(q: jax.Array, vectors: jax.Array, valid: jax.Array,
+                      qp_ok: jax.Array, probe: jax.Array,
+                      *, k: int, interpret: bool = False):
+    """Fused probe scan + running top-k.
+
+    q: (Q, d); vectors: (M, C, d); valid: (M, C) bool (slot validity &
+    posting visibility, precombined); qp_ok: (Q, P) int32 per-(query,
+    probe) mask; probe: (Q, P) int32.  Returns (scores (Q, k) f32
+    ascending, cand (Q, k) int32 flat slot index ``probe*C + c``);
+    masked candidates carry BIG.  Bit-identical to
+    ``ref.posting_scan_topk`` including tie order.  d % 128 == 0 and
+    C % 128 == 0 are guaranteed by the ops.py wrapper.
+    """
+    Q, d = q.shape
+    M, C, _ = vectors.shape
+    P = probe.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, probe, ok: (i, 0)),
+            pl.BlockSpec((1, C, d),
+                         lambda i, j, probe, ok: (probe[i, j], 0, 0)),
+            pl.BlockSpec((1, C),
+                         lambda i, j, probe, ok: (probe[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j, probe, ok: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, probe, ok: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_topk_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probe, qp_ok, q, vectors, valid)

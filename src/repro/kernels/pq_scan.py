@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .posting_scan import BIG
+
 
 def _kernel(probe_ref, slot_ref, lut_ref, codes_ref, o_ref):
     del probe_ref, slot_ref                       # consumed by index maps
@@ -76,3 +78,98 @@ def pq_scan_gather(luts: jax.Array, codes: jax.Array, slot: jax.Array,
         out_shape=jax.ShapeDtypeStruct((Q, P, C), jnp.float32),
         interpret=interpret,
     )(probe, slot, luts, codes)
+
+
+# ---------------------------------------------------------------------------
+# Fused ADC scan + on-chip top-k: the (Q, P, C) score tensor above only
+# exists to feed ``lax.top_k`` — at nprobe=32, C=128 that is 16 KiB of
+# HBM write+read per query for <= rerank_k survivors.  This variant
+# keeps a running top-k (score, flat-candidate) list per query in the
+# output refs (``merge_topk``, the flash-attention online-reduction
+# idiom) while the scalar-prefetched probe list streams exactly one
+# posting's code tile HBM->VMEM per grid step; Pallas double-buffers
+# consecutive steps' tile DMAs against the current step's compute.  No
+# score matrix ever hits HBM: the kernel writes 2*k words per query.
+#
+# The validity mask (slot_valid & vis, precombined by ops.py into one
+# (M, C) row table) and the per-(query, probe) mask (the sharded plane's
+# ``mine``) are applied in-kernel *before* selection — post-hoc masking
+# is impossible once top-k is fused.
+# ---------------------------------------------------------------------------
+
+
+def _topk_kernel(probe_ref, slot_ref, ok_ref, lut_ref, codes_ref,
+                 valid_ref, s_ref, i_ref, *, k):
+    from .centroid_topk import merge_topk
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.full_like(s_ref, jnp.inf)
+        i_ref[...] = jnp.zeros_like(i_ref)
+
+    lut = lut_ref[0, 0].astype(jnp.float32)       # (m, ksub)
+    code = codes_ref[0].astype(jnp.int32)         # (m, C)
+    m, C = code.shape
+    ksub = lut.shape[1]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (C, ksub), 1)
+    acc = jnp.zeros((C,), jnp.float32)
+    for jj in range(m):                           # static unroll, m small
+        onehot = (code[jj][:, None] == k_iota).astype(jnp.float32)
+        acc = acc + jax.lax.dot_general(
+            onehot, lut[jj], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    ok = valid_ref[...] & (ok_ref[i, j] != 0)     # (1, C)
+    score = jnp.where(ok, acc[None, :], BIG)      # (1, C)
+    cand = (jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+            + probe_ref[i, j] * C)
+    s, ids = merge_topk(s_ref[...], i_ref[...], score, cand, k)
+    s_ref[...] = s
+    i_ref[...] = ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def pq_scan_topk(luts: jax.Array, codes: jax.Array, slot: jax.Array,
+                 valid: jax.Array, qp_ok: jax.Array, probe: jax.Array,
+                 *, k: int, interpret: bool = False):
+    """Fused ADC scan + running top-k.
+
+    luts: (Q, V, m, ksub) f32; codes: (M, m, C) uint8; slot: (M,) int32;
+    valid: (M, C) bool (slot_valid & posting visibility, precombined);
+    qp_ok: (Q, P) int32 per-(query, probe) mask; probe: (Q, P) int32.
+    Returns (scores (Q, k) f32 ascending, cand (Q, k) int32 flat slot
+    index ``probe*C + c``); masked candidates carry BIG.  Bit-identical
+    to ``ref.pq_scan_topk`` including tie order (probe-position-major).
+    C % 128 == 0 and ksub % 128 == 0 guaranteed by the ops.py wrapper.
+    """
+    Q, V, m, ksub = luts.shape
+    M, _, C = codes.shape
+    P = probe.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, m, ksub),
+                         lambda i, j, probe, slot, ok: (i,
+                                                        slot[probe[i, j]],
+                                                        0, 0)),
+            pl.BlockSpec((1, m, C),
+                         lambda i, j, probe, slot, ok: (probe[i, j], 0, 0)),
+            pl.BlockSpec((1, C),
+                         lambda i, j, probe, slot, ok: (probe[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j, probe, slot, ok: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, probe, slot, ok: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probe, slot, qp_ok, luts, codes, valid)

@@ -111,6 +111,69 @@ def pq_scan_gather(luts: jax.Array, codes: jax.Array, slot: jax.Array,
     return jnp.sum(picked.reshape(codes_g.shape), axis=2)   # (Q, P, C)
 
 
+def centroid_topk(queries: jax.Array, centroids: jax.Array,
+                  vis: jax.Array, k: int):
+    """Fused phase-1 oracle: masked centroid scores + top-k.
+
+    queries: (Q, d); centroids: (M, d); vis: (M,) bool.
+    Returns (scores (Q, k) f32 ascending, idx (Q, k) int32); masked
+    centroids carry BIG.  ``lax.top_k`` breaks ties lowest-index-first;
+    the Pallas twin reproduces that order bit-identically.
+    """
+    s = centroid_score(queries, centroids)
+    s = jnp.where(vis[None, :], s, BIG)
+    neg, idx = jax.lax.top_k(-s, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def pq_scan_topk(luts: jax.Array, codes: jax.Array, slot: jax.Array,
+                 valid: jax.Array, qp_ok: jax.Array, probe: jax.Array,
+                 k: int):
+    """Fused ADC-scan oracle: masked probe scores + top-k.
+
+    luts: (Q, V, m, ksub); codes: (M, m, C) uint8; slot: (M,) int32;
+    valid: (M, C) bool (slot validity & posting visibility combined);
+    qp_ok: (Q, P) per-(query, probe) mask; probe: (Q, P) int32.
+    Returns (scores (Q, k) ascending, cand (Q, k) int32 flat slot index
+    ``probe*C + c``); masked candidates carry BIG.  Tie order is
+    probe-position-major (the flattened (P, C) order), matching the
+    running-merge order of the Pallas twin bit-identically.
+    """
+    raw = pq_scan_gather(luts, codes, slot, probe)          # (Q, P, C)
+    Q, P, C = raw.shape
+    ok = valid[probe] & (qp_ok != 0)[:, :, None]
+    s = jnp.where(ok, raw, BIG)
+    neg, pos = jax.lax.top_k(-s.reshape(Q, P * C), k)
+    cand_all = (probe[:, :, None] * C
+                + jnp.arange(C, dtype=jnp.int32)[None, None, :])
+    cand = jnp.take_along_axis(cand_all.reshape(Q, P * C), pos, axis=1)
+    return -neg, cand.astype(jnp.int32)
+
+
+def posting_scan_topk(queries: jax.Array, vectors: jax.Array,
+                      valid: jax.Array, qp_ok: jax.Array,
+                      probe: jax.Array, k: int):
+    """Fused float phase-2 oracle: masked probe scan + top-k.
+
+    queries: (Q, d); vectors: (M, C, d); valid: (M, C) bool; qp_ok:
+    (Q, P); probe: (Q, P) int32.  Returns (scores (Q, k) ascending,
+    cand (Q, k) int32 flat slot index); same tie discipline as
+    :func:`pq_scan_topk`.
+    """
+    q = queries.astype(jnp.float32)
+    tiles = vectors[probe].astype(jnp.float32)              # (Q, P, C, d)
+    Q, P, C, _ = tiles.shape
+    vn = jnp.sum(tiles * tiles, axis=-1)
+    dots = jnp.einsum("qd,qpcd->qpc", q, tiles)
+    ok = valid[probe] & (qp_ok != 0)[:, :, None]
+    s = jnp.where(ok, vn - 2.0 * dots, BIG)
+    neg, pos = jax.lax.top_k(-s.reshape(Q, P * C), k)
+    cand_all = (probe[:, :, None] * C
+                + jnp.arange(C, dtype=jnp.int32)[None, None, :])
+    cand = jnp.take_along_axis(cand_all.reshape(Q, P * C), pos, axis=1)
+    return -neg, cand.astype(jnp.int32)
+
+
 def posting_scan_gather(queries: jax.Array, vectors: jax.Array,
                         slot_valid: jax.Array, vis: jax.Array,
                         probe: jax.Array) -> jax.Array:

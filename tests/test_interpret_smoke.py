@@ -5,8 +5,9 @@ This is the ROADMAP "run the kernel path periodically" item: the weekly
 ``kernels-interpret`` CI job runs it (marked slow, so the per-PR quick
 suite skips it).  Shapes satisfy every kernel-path alignment gate:
 dim % 128 == 0, capacity % 128 == 0, pq_ksub % 128 == 0 — so search
-exercises the Pallas ``centroid_score``, ``posting_scan_gather`` and
-``pq_scan`` kernels end to end through the driver.
+exercises the fused Pallas ``centroid_topk``, ``posting_scan_topk``
+and ``pq_scan_topk`` kernels (plus ``posting_scan``/``centroid_score``
+via the exact oracle) end to end through the driver.
 """
 import numpy as np
 import jax.numpy as jnp

@@ -128,6 +128,186 @@ def test_flash_attention(Lq, Lk, D, Hq, Hkv, causal, window, rng):
     np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
 
 
+# ---------------------------------------------------------------------------
+# Fused score+select kernels: the pallas path must be BIT-identical to
+# the ref twin (scores and indices), including tie order — integer-
+# valued float32 data makes every sum exact and ties frequent.
+# ---------------------------------------------------------------------------
+
+
+def _int_normal(rng, shape, lo=-3, hi=4):
+    return jnp.asarray(rng.integers(lo, hi, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("Q,M,d,k", [(1, 7, 5, 3), (9, 33, 24, 33),
+                                     (128, 512, 64, 16), (5, 130, 16, 10)])
+def test_centroid_topk_parity(Q, M, d, k, rng):
+    q = _int_normal(rng, (Q, d))
+    c = _int_normal(rng, (M, d))
+    vis = jnp.asarray(rng.random(M) > 0.3)
+    s1, i1 = ops.centroid_topk(q, c, vis, k=k, backend="ref")
+    s2, i2 = ops.centroid_topk(q, c, vis, k=k, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_centroid_topk_all_masked(rng):
+    """No visible centroid: every score is the BIG sentinel and both
+    backends agree on the (degenerate) index order."""
+    q = _int_normal(rng, (4, 8))
+    c = _int_normal(rng, (12, 8))
+    vis = jnp.zeros((12,), bool)
+    s1, i1 = ops.centroid_topk(q, c, vis, k=5, backend="ref")
+    s2, i2 = ops.centroid_topk(q, c, vis, k=5, backend="pallas")
+    assert np.all(np.asarray(s1) >= ref.BIG / 2)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_centroid_topk_ties(rng):
+    """Duplicate centroids: ties must break lowest-index-first on both
+    backends (the lax.top_k discipline)."""
+    q = _int_normal(rng, (6, 16))
+    base = _int_normal(rng, (8, 16))
+    c = jnp.concatenate([base, base, base], axis=0)  # every score x3
+    vis = jnp.ones((24,), bool)
+    s1, i1 = ops.centroid_topk(q, c, vis, k=24, backend="ref")
+    s2, i2 = ops.centroid_topk(q, c, vis, k=24, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.parametrize("Q,M,C,P,d,k", [(1, 12, 128, 1, 128, 5),
+                                         (6, 12, 128, 4, 128, 17),
+                                         (3, 9, 128, 5, 128, 128)])
+def test_posting_scan_topk_parity(Q, M, C, P, d, k, rng):
+    q = _int_normal(rng, (Q, d))
+    vectors = _int_normal(rng, (M, C, d), lo=-2, hi=3)
+    slot_valid = jnp.asarray(rng.random((M, C)) > 0.3)
+    vis = jnp.asarray(rng.random(M) > 0.2)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    s1, i1 = ops.posting_scan_topk(q, vectors, slot_valid, vis, probe,
+                                   k=k, backend="ref")
+    s2, i2 = ops.posting_scan_topk(q, vectors, slot_valid, vis, probe,
+                                   k=k, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_posting_scan_topk_sparse_and_qp_ok(rng):
+    """k beyond the live-candidate count: the tail is BIG on both
+    backends; a per-(query, probe) ownership mask is honoured."""
+    Q, M, C, P, d = 4, 6, 128, 3, 128
+    q = _int_normal(rng, (Q, d))
+    vectors = _int_normal(rng, (M, C, d), lo=-2, hi=3)
+    slot_valid = jnp.asarray(rng.random((M, C)) > 0.95)  # ~6 live per tile
+    vis = jnp.ones((M,), bool)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    qp_ok = jnp.asarray(rng.integers(0, 2, (Q, P)).astype(np.int32))
+    k = P * C  # every candidate requested
+    s1, i1 = ops.posting_scan_topk(q, vectors, slot_valid, vis, probe,
+                                   k=k, qp_ok=qp_ok, backend="ref")
+    s2, i2 = ops.posting_scan_topk(q, vectors, slot_valid, vis, probe,
+                                   k=k, qp_ok=qp_ok, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert np.any(np.asarray(s1) >= ref.BIG / 2)  # sparse -> BIG tail
+
+
+@pytest.mark.parametrize("Q,V,m,ksub,M,C,P,k", [(1, 2, 8, 128, 12, 128, 1, 3),
+                                                (6, 2, 8, 128, 12, 128, 4, 20),
+                                                (3, 3, 4, 256, 9, 128, 5, 64)])
+def test_pq_scan_topk_parity(Q, V, m, ksub, M, C, P, k, rng):
+    luts = _int_normal(rng, (Q, V, m, ksub), lo=0, hi=8)
+    codes = jnp.asarray(rng.integers(0, ksub, (M, m, C)).astype(np.uint8))
+    slot = jnp.asarray(rng.integers(0, V, (M,)).astype(np.int32))
+    slot_valid = jnp.asarray(rng.random((M, C)) > 0.3)
+    vis = jnp.asarray(rng.random(M) > 0.2)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    s1, i1 = ops.pq_scan_topk(luts, codes, slot, slot_valid, vis, probe,
+                              k=k, backend="ref")
+    s2, i2 = ops.pq_scan_topk(luts, codes, slot, slot_valid, vis, probe,
+                              k=k, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_pq_scan_topk_all_invalid(rng):
+    """Every probed posting invisible: scores are all BIG and the
+    degenerate candidate order still matches the ref twin."""
+    Q, V, m, ksub, M, C, P, k = 3, 2, 4, 128, 8, 128, 3, 7
+    luts = _int_normal(rng, (Q, V, m, ksub), lo=0, hi=8)
+    codes = jnp.asarray(rng.integers(0, ksub, (M, m, C)).astype(np.uint8))
+    slot = jnp.zeros((M,), jnp.int32)
+    slot_valid = jnp.ones((M, C), bool)
+    vis = jnp.zeros((M,), bool)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    s1, i1 = ops.pq_scan_topk(luts, codes, slot, slot_valid, vis, probe,
+                              k=k, backend="ref")
+    s2, i2 = ops.pq_scan_topk(luts, codes, slot, slot_valid, vis, probe,
+                              k=k, backend="pallas")
+    assert np.all(np.asarray(s1) >= ref.BIG / 2)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_kmeans_assign_large_nonmultiple_k(rng):
+    """K > 128 and not a multiple of the 128-lane tile, mask=None: the
+    sentinel-row padding must never win an assignment."""
+    N, K, d = 64, 200, 24
+    pts = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    cen = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+    a1, b1 = ops.kmeans_assign(pts, cen, backend="ref")
+    a2, b2 = ops.kmeans_assign(pts, cen, backend="pallas")
+    np.testing.assert_allclose(b1, b2, rtol=1e-4, atol=1e-3)
+    assert np.all(np.asarray(a2) < K)
+    same = np.asarray(a1) == np.asarray(a2)
+    assert same.mean() > 0.99
+
+
+def test_kernel_fallback_observability(rng):
+    """A pallas-backend request with misaligned storage shapes serves
+    the ref path AND reports it: counter bump per dispatch, one trace
+    event per (kernel, reason)."""
+    from repro.obs import Obs
+    obs = Obs()
+    ops.observe_fallbacks(obs)
+    Q, V, m, ksub, M, C, P = 2, 1, 2, 16, 4, 24, 2  # C, ksub misaligned
+    luts = jnp.asarray(rng.normal(size=(Q, V, m, ksub)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, ksub, (M, m, C)).astype(np.uint8))
+    slot = jnp.zeros((M,), jnp.int32)
+    slot_valid = jnp.ones((M, C), bool)
+    vis = jnp.ones((M,), bool)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    ops.pq_scan_gather(luts, codes, slot, slot_valid, vis, probe,
+                       backend="pallas")
+    assert obs.counter("kernel_fallback").value == 1.0
+    evs = obs.events("kernel_fallback")
+    assert len(evs) == 1 and evs[0]["kernel"] == "pq_scan_gather"
+    # repeat dispatch: counter counts every fallback, the trace event
+    # stays one-per-(kernel, reason)
+    ops.pq_scan_gather(luts, codes, slot, slot_valid, vis, probe,
+                       backend="pallas")
+    assert obs.counter("kernel_fallback").value == 2.0
+    assert len(obs.events("kernel_fallback")) == 1
+    # a different kernel falling back emits its own event
+    q = jnp.asarray(rng.normal(size=(Q, 24)).astype(np.float32))
+    vecs = jnp.asarray(rng.normal(size=(M, C, 24)).astype(np.float32))
+    ops.posting_scan_topk(q, vecs, slot_valid, vis, probe, k=3,
+                          backend="pallas")
+    assert obs.counter("kernel_fallback").value == 3.0
+    assert len(obs.events("kernel_fallback")) == 2
+    # aligned pallas dispatch does NOT report a fallback
+    before = obs.counter("kernel_fallback").value
+    qa = jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32))
+    va = jnp.asarray(rng.normal(size=(4, 128, 128)).astype(np.float32))
+    ops.posting_scan_topk(qa, va, jnp.ones((4, 128), bool),
+                          jnp.ones((4,), bool),
+                          jnp.zeros((2, 2), jnp.int32), k=3,
+                          backend="pallas")
+    assert obs.counter("kernel_fallback").value == before
+
+
 def test_flash_attention_matches_chunked(rng):
     """The pure-JAX chunked attention (model fast path) agrees with the
     kernel oracle."""
