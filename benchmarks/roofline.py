@@ -36,13 +36,18 @@ PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip (TPU v5e)
 HBM_BW = 819e9           # HBM B/s per chip
 
 # shape presets: smoke is small enough for CPU interpret mode in CI;
-# full approximates the fig5 serving configuration
+# full approximates the fig5 serving configuration; misaligned pins the
+# alignment-free contract (real-world d=100, odd capacity, ksub=100 —
+# the wrappers pad, the fused kernels serve, nothing falls back)
 PRESETS = {
     "smoke": dict(Q=8, d=128, M=128, C=128, P=4, k=8,
-                  m=2, ksub=128, V=2, N=256, K=128,
+                  m=2, ksub=128, V=2, N=256, K=128, R=32,
                   B=1, Hq=2, Hkv=1, L=128, D=128),
+    "misaligned": dict(Q=8, d=100, M=33, C=100, P=4, k=8,
+                       m=4, ksub=100, V=2, N=200, K=100, R=24,
+                       B=1, Hq=2, Hkv=1, L=96, D=64),
     "full": dict(Q=128, d=128, M=1024, C=256, P=32, k=64,
-                 m=8, ksub=256, V=4, N=4096, K=512,
+                 m=8, ksub=256, V=4, N=4096, K=512, R=256,
                  B=4, Hq=8, Hkv=2, L=512, D=128),
 }
 
@@ -83,6 +88,7 @@ def build_cases(p: Dict, backend: str) -> List[Dict]:
     Q, d, M, C, P, k = p["Q"], p["d"], p["M"], p["C"], p["P"], p["k"]
     m, ksub, V, N, K = p["m"], p["ksub"], p["V"], p["N"], p["K"]
     B, Hq, Hkv, L, D = p["B"], p["Hq"], p["Hkv"], p["L"], p["D"]
+    R = p["R"]
     f32 = 4
 
     q = jax.random.normal(kq, (Q, d), jnp.float32)
@@ -155,6 +161,19 @@ def build_cases(p: Dict, backend: str) -> List[Dict]:
              bytes_=adc_bytes + f32 * 2 * Q * k),
         lambda: ops.pq_scan_topk(luts, codes, pslot, slot_valid, vis,
                                  probe, k=k, backend=backend))
+
+    # --- rerank: fused candidate gather + exact ||v||^2 - 2 q.v + ADC
+    # passthrough + top-k (replaces the XLA gather+einsum rerank tail) --
+    spilled = jnp.zeros((M,), bool)
+    cand = jax.random.randint(kp, (Q, R), 0, M * C, jnp.int32)
+    adc = jax.random.normal(kq, (Q, R), jnp.float32)
+    add(_row("rerank_topk", "rerank",
+             f"Q={Q} R={R} d={d} k={k}",
+             flops=4.0 * Q * R * d + 1.0 * Q * R * k,
+             useful_flops=4.0 * Q * R * d,
+             bytes_=f32 * (Q * d + Q * R * d + 2 * Q * R + 2 * Q * k)),
+        lambda: ops.rerank_topk(q, vecs, spilled, cand, adc,
+                                k=min(k, R), backend=backend))
 
     # --- build/maintenance: k-means assignment --------------------------
     add(_row("kmeans_assign", "kmeans_assign", f"N={N} K={K} d={d}",

@@ -312,7 +312,12 @@ class ShardedUBISDriver:
         if pad:
             qp = np.concatenate([q, np.zeros((pad, q.shape[1]),
                                              np.float32)])
-        found, scores = fn(self.state, jnp.asarray(qp))
+        # per-dispatch fallback accounting (see the single-device
+        # driver): the signature covers routing, not batch shape
+        sig = ("sharded-search", self.cfg.use_pallas, self.cfg.dim,
+               self.cfg.capacity, self.cfg.use_pq, self.cfg.pq_ksub)
+        with ops.count_fallback_dispatches(self.obs, sig):
+            found, scores = fn(self.state, jnp.asarray(qp))
         return SearchDispatch(state=self.state, queries=q, k=k,
                               found=found, scores=scores, probe=None,
                               t0=t0)
@@ -724,3 +729,8 @@ class ShardedUBISDriver:
     def throughput(self) -> dict:
         from ..core.metrics import throughput_from_stats
         return throughput_from_stats(self.stats)
+
+    def close(self) -> None:
+        """Detach this driver's ``Obs`` bundle from the process-global
+        kernel-fallback plane (weakly held; see ``UBISDriver.close``)."""
+        ops.discard_fallback_sink(self.obs)

@@ -243,8 +243,15 @@ class UBISDriver:
         k_eff = (max(k, self.cfg.rerank_k)
                  if self.tier is not None and self.tier.rerank_host
                  else k)
-        found, scores, probe = search_mod.search(
-            self.state, self.cfg, jnp.asarray(queries), k_eff, nprobe)
+        # per-dispatch fallback accounting: the signature carries every
+        # routing decision (backend knob + plane shape); the query batch
+        # size is deliberately omitted — re-traces of the same signature
+        # route identically (see ops.count_fallback_dispatches)
+        sig = ("ubis-search", self.cfg.use_pallas, self.cfg.dim,
+               self.cfg.capacity, self.cfg.use_pq, self.cfg.pq_ksub)
+        with ops.count_fallback_dispatches(self.obs, sig):
+            found, scores, probe = search_mod.search(
+                self.state, self.cfg, jnp.asarray(queries), k_eff, nprobe)
         return SearchDispatch(state=self.state, queries=queries, k=k,
                               found=found, scores=scores, probe=probe,
                               t0=t0)
@@ -650,3 +657,11 @@ class UBISDriver:
     def throughput(self) -> dict:
         from .metrics import throughput_from_stats
         return throughput_from_stats(self.stats)
+
+    def close(self) -> None:
+        """Detach this driver's ``Obs`` bundle from the process-global
+        kernel-fallback plane (the sinks are weakly held, so this only
+        matters when the caller keeps the bundle alive past the driver —
+        test suites and notebooks building many indexes call it, or
+        ``ops.reset_fallback_state()`` between builds)."""
+        ops.discard_fallback_sink(self.obs)

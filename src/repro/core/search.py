@@ -46,7 +46,7 @@ def search(state: IndexState, cfg: UBISConfig, queries: jax.Array,
         # (C*m bytes per posting instead of C*d*4), then exact rerank of
         # the top ``rerank_k`` float candidates.  The float path below
         # stays the oracle — use_pq=False is bit-identical to it.
-        pscores, pids = _pq_stage(state, cfg, queries, probe, vis)
+        pscores, pids = _pq_stage(state, cfg, queries, probe, vis, k)
     else:
         C = state.vectors.shape[1]
         kf = min(k, probe.shape[1] * C)
@@ -75,11 +75,15 @@ def search(state: IndexState, cfg: UBISConfig, queries: jax.Array,
 
 
 def _pq_stage(state: IndexState, cfg: UBISConfig, queries: jax.Array,
-              probe: jax.Array, vis: jax.Array):
-    """ADC scan + candidate gather + exact rerank.
+              probe: jax.Array, vis: jax.Array, k: int):
+    """ADC scan + fused exact rerank.
 
-    Returns (scores (Q, R), ids (Q, R)) of the exact-reranked float
-    candidates, ready to merge with the cache scan.  R = rerank_k.
+    Returns (scores (Q, kk), ids (Q, kk)) of the exact-reranked float
+    candidates, kk = min(k, rerank_k-capped R), ready to merge with the
+    cache scan.  Selecting the top kk here (instead of handing all R
+    candidates to the final merge) is bit-identical: the merge keeps at
+    most k entries from this list, and top-k-of-top-k preserves both the
+    multiset and the tie order of the one-shot selection.
     """
     from ..quant import pq
     M, C, _ = state.vectors.shape
@@ -93,17 +97,17 @@ def _pq_stage(state: IndexState, cfg: UBISConfig, queries: jax.Array,
     adc_top, cand = ops.pq_scan_topk(
         luts, state.codes, state.pq_posting_slot, state.slot_valid, vis,
         probe, k=R, backend=cfg.use_pallas)                   # (Q, R)
-    cand_vecs = state.vectors.reshape(M * C, -1)[cand].astype(jnp.float32)
-    exact = (jnp.sum(cand_vecs * cand_vecs, -1)
-             - 2.0 * jnp.einsum("qd,qrd->qr", queries, cand_vecs))
-    # cold-tier plane: candidates in spilled postings have no device
-    # float tile (zeroed) — they keep their ADC score and are served
-    # codes-only; the driver may exact-rerank them host-side from the
-    # pinned pool.  All-False mask when tiering is off (bit-identical).
-    exact = jnp.where(state.tier_spilled[cand // C], adc_top, exact)
-    exact = jnp.where(adc_top < BIG / 2, exact, BIG)
-    cand_ids = state.ids.reshape(-1)[cand]
-    cand_ids = jnp.where(adc_top < BIG / 2, cand_ids, -1)
+    # fused rerank: candidate gather + ``||v||^2 - 2 q.v`` + the
+    # cold-tier ADC passthrough (spilled postings have no device float
+    # tile — they are served codes-only; the driver may exact-rerank
+    # them host-side from the pinned pool) + final top-kk, one kernel —
+    # the (Q, R, d) candidate gather never hits HBM on the pallas path
+    kk = min(k, R)
+    exact, cand_sel = ops.rerank_topk(
+        queries, state.vectors, state.tier_spilled, cand, adc_top,
+        k=kk, backend=cfg.use_pallas)                         # (Q, kk)
+    cand_ids = jnp.where(exact < BIG / 2,
+                         state.ids.reshape(-1)[cand_sel], -1)
     return exact, cand_ids
 
 

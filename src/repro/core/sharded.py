@@ -105,9 +105,9 @@ def _pq_phase2(state: IndexState, cfg: UBISConfig, queries, probe, mine,
     """Sharded search phase 2 served from PQ codes (``cfg.use_pq``).
 
     Per shard: ADC-scan the owned probed tiles' codes (``C * m`` bytes
-    per posting instead of ``C * d * 4``), then gather the local top
-    ``cfg.rerank_k`` candidates' float vectors for an exact rerank —
-    the shard-local form of ``search._pq_stage``.  The (small) versioned
+    per posting instead of ``C * d * 4``), then fused-rerank the local
+    top ``cfg.rerank_k`` candidates against their float rows — the
+    shard-local form of ``search._pq_stage``.  The (small) versioned
     codebooks are replicated, so every shard builds the same per-query
     lookup tables.  Returns this shard's (scores, ids) candidate lists,
     ready for the existing merge all-gather.
@@ -121,18 +121,16 @@ def _pq_phase2(state: IndexState, cfg: UBISConfig, queries, probe, mine,
     adc_top, cand = ops.pq_scan_topk(
         luts, state.codes, state.pq_posting_slot, state.slot_valid, vis,
         probe, k=R, qp_ok=mine, backend=cfg.use_pallas)    # (Q, R)
-    cand_vecs = state.vectors.reshape(M_local * C, d)[cand].astype(
-        jnp.float32)
-    exact = (jnp.sum(cand_vecs * cand_vecs, -1)
-             - 2.0 * jnp.einsum("qd,qrd->qr", queries, cand_vecs))
-    # cold-tier plane: spilled postings have no device float tile —
-    # their candidates keep the ADC score (codes-only serving; the
-    # driver's optional host rerank refines them from the pinned pool)
-    exact = jnp.where(state.tier_spilled[cand // C], adc_top, exact)
-    exact = jnp.where(adc_top < BIG / 2, exact, BIG)
-    cand_ids = jnp.where(adc_top < BIG / 2,
-                         state.ids.reshape(-1)[cand], -1)
-    return _local_topk(exact, cand_ids, min(k, R))
+    # fused rerank: gather + exact rescore + cold-tier ADC passthrough
+    # (spilled postings have no device float tile — codes-only serving;
+    # the driver's optional host rerank refines them from the pinned
+    # pool) + local top-k, one kernel — no (Q, R, d) gather in HBM
+    exact, cand_sel = ops.rerank_topk(
+        queries, state.vectors, state.tier_spilled, cand, adc_top,
+        k=min(k, R), backend=cfg.use_pallas)
+    cand_ids = jnp.where(exact < BIG / 2,
+                         state.ids.reshape(-1)[cand_sel], -1)
+    return exact, cand_ids
 
 
 def make_sharded_search(cfg: UBISConfig, mesh: Mesh, k: int,

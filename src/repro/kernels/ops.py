@@ -11,7 +11,7 @@ Callers pass logical shapes; wrappers pad to hardware-aligned tiles
 """
 from __future__ import annotations
 
-import functools
+import contextlib
 import warnings
 import weakref
 from typing import Optional
@@ -40,17 +40,29 @@ def _interpret() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Kernel-fallback observability.  The gather/topk kernels require the
-# TPU storage layout (C/ksub/d multiples of 128); a misconfigured
-# deployment that requests the pallas backend with misaligned shapes
-# silently serves the slow jnp path.  Alignment is checked at trace
-# time (shapes are static), so the signal rides the PR 7 obs plane:
-# every registered Obs gets a ``kernel_fallback`` counter bump per
-# fallback dispatch and a one-time trace event per (kernel, reason).
+# Kernel-fallback observability.  All fused kernels are alignment-free
+# (wrappers pad storage shapes to the TPU layout and mask in-kernel), so
+# today NO pallas request ever falls back — but the plane stays wired so
+# any future gate that re-opens the silent-slow-path hole is loud.
+#
+# Two signals with different clocks:
+#   * ``kernel_fallback_traces`` — bumped by ``_note_fallback`` at TRACE
+#     time (shape checks are static, so the note runs once per
+#     compilation of the enclosing jitted program), plus a one-shot
+#     ``kernel_fallback`` trace event per (kernel, reason);
+#   * ``kernel_fallback``        — per-DISPATCH count.  Python inside a
+#     jitted function does not re-run on cache-warm calls, so drivers
+#     wrap each dispatch in ``count_fallback_dispatches``: the first
+#     wrap of a signature captures the keys noted while the program
+#     traces, and every wrap bumps the counter by the memoized count —
+#     under steady-state serving the counter now moves every call
+#     instead of freezing after the first compilation.
 # ---------------------------------------------------------------------------
 
 _FALLBACK_SINKS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 _FALLBACK_WARNED: set = set()
+_CAPTURE_STACK: list = []       # active trace-capture sets (LIFO)
+_DISPATCH_MEMO: dict = {}       # signature -> frozenset[(kernel, reason)]
 
 
 def observe_fallbacks(obs) -> None:
@@ -60,18 +72,67 @@ def observe_fallbacks(obs) -> None:
         _FALLBACK_SINKS[obs] = set()
 
 
+def discard_fallback_sink(obs) -> None:
+    """Unregister one ``Obs`` bundle (driver teardown)."""
+    _FALLBACK_SINKS.pop(obs, None)
+
+
+def reset_fallback_state() -> None:
+    """Clear ALL process-global fallback bookkeeping: sinks, one-shot
+    warn/event dedup sets, capture scopes and the dispatch memo.
+    Back-to-back driver constructions in one process (a test suite, a
+    notebook) call this between indexes so one index's one-shot state
+    never suppresses the next one's signals."""
+    _FALLBACK_SINKS.clear()
+    _FALLBACK_WARNED.clear()
+    _CAPTURE_STACK.clear()
+    _DISPATCH_MEMO.clear()
+
+
 def _note_fallback(kernel: str, reason: str) -> None:
+    """Record one kernel-fallback decision.  Runs at TRACE time."""
     key = (kernel, reason)
+    for cap in _CAPTURE_STACK:
+        cap.add(key)
     for obs, emitted in _FALLBACK_SINKS.items():
-        obs.counter("kernel_fallback").inc()
+        obs.counter("kernel_fallback_traces").inc()
         if key not in emitted:
             emitted.add(key)
             obs.emit("kernel_fallback", kernel=kernel, reason=reason)
     if not _FALLBACK_SINKS and key not in _FALLBACK_WARNED:
         _FALLBACK_WARNED.add(key)
         warnings.warn(f"kernel {kernel} fell back to the jnp reference "
-                      f"({reason}); the pallas path requires 128-aligned "
-                      "storage shapes", stacklevel=3)
+                      f"({reason})", stacklevel=3)
+
+
+@contextlib.contextmanager
+def count_fallback_dispatches(obs, signature):
+    """Wrap ONE dispatch of a jitted program and count its fallbacks.
+
+    ``signature`` must cover everything that decides backend routing for
+    the wrapped program (backend knob + the plane identity) — shapes
+    that merely retrigger jit tracing (e.g. the query-batch size) may be
+    omitted, since re-traces of the same signature make the same
+    routing decisions.  The first wrap of a signature captures the
+    (kernel, reason) keys ``_note_fallback`` records while the program
+    traces; every wrap bumps ``obs.counter("kernel_fallback")`` by the
+    memoized key count.  Caveat: if the program was first compiled
+    OUTSIDE any wrap, the first wrap sees a warm cache and memoizes an
+    empty set — drivers avoid this by wrapping every dispatch.
+    """
+    first = signature not in _DISPATCH_MEMO
+    if first:
+        cap: set = set()
+        _CAPTURE_STACK.append(cap)
+    try:
+        yield
+    finally:
+        if first:
+            _CAPTURE_STACK.remove(cap)
+            _DISPATCH_MEMO[signature] = frozenset(cap)
+    n = len(_DISPATCH_MEMO[signature])
+    if n and obs is not None:
+        obs.counter("kernel_fallback").inc(n)
 
 
 def _ceil(x: int, m: int) -> int:
@@ -215,22 +276,25 @@ def pq_scan_gather(luts: jax.Array, codes: jax.Array,
     posting_slot: (M,) int32; probe: (Q, P) -> (Q, P, C) scores, BIG at
     invalid slots / invisible postings.
 
-    Kernel path requires C % 128 == 0 and ksub % 128 == 0 (the TPU
-    storage layout, as for posting_scan_gather); ref fallback otherwise.
+    Alignment-free: C and ksub zero-pad up to the TPU storage layout
+    (128 lanes) here — padded lut columns are unreachable (codes < the
+    logical ksub) and padded code lanes are sliced back off, so any
+    C/ksub serves the fused kernel.  Aligned storage makes both pads
+    no-ops; misaligned storage pays one codes-layout copy per call.
     """
     from .pq_scan import pq_scan_gather as _pq_pallas
     V = luts.shape[1]
     C = codes.shape[2]
     ksub = luts.shape[3]
     slot = jnp.clip(posting_slot.astype(jnp.int32), 0, V - 1)
-    if not _use_pallas(backend) or C % 128 or ksub % 128:
-        if _use_pallas(backend):
-            _note_fallback("pq_scan_gather",
-                           f"C={C}, ksub={ksub} not 128-aligned")
+    if not _use_pallas(backend):
         raw = ref.pq_scan_gather(luts, codes, slot, probe)
     else:
-        raw = _pq_pallas(luts, codes, slot, probe.astype(jnp.int32),
-                         interpret=_interpret())
+        Cp, ksubp = _ceil(C, 128), _ceil(ksub, 128)
+        lp = jnp.pad(luts, ((0, 0), (0, 0), (0, 0), (0, ksubp - ksub)))
+        cdp = jnp.pad(codes, ((0, 0), (0, 0), (0, Cp - C)))
+        raw = _pq_pallas(lp, cdp, slot, probe.astype(jnp.int32),
+                         interpret=_interpret())[:, :, :C]
     ok = slot_valid[probe] & vis[probe][..., None]
     return jnp.where(ok, raw, BIG)
 
@@ -247,9 +311,10 @@ def pq_scan_topk(luts: jax.Array, codes: jax.Array,
     mask); returns (scores (Q, k) ascending, cand (Q, k) int32 flat
     slot index ``probe*C + c``) with BIG at masked candidates.  On the
     pallas path the (Q, P, C) score tensor is never materialized —
-    selection runs on-chip against the streamed code tiles.  Alignment
-    gates as for ``pq_scan_gather``; misaligned pallas requests fall
-    back to the ref twin with a ``kernel_fallback`` obs signal."""
+    selection runs on-chip against the streamed code tiles.
+    Alignment-free (same padding as ``pq_scan_gather``; padded lanes are
+    masked to +inf in-kernel so the BIG-tie order stays bit-identical to
+    the ref twin)."""
     from .pq_scan import pq_scan_topk as _pqt_pallas
     Q, V, m, ksub = luts.shape
     C = codes.shape[2]
@@ -260,13 +325,14 @@ def pq_scan_topk(luts: jax.Array, codes: jax.Array,
     if qp_ok is None:
         qp_ok = jnp.ones((Q, P), jnp.int32)
     qp_ok = qp_ok.astype(jnp.int32)
-    if not _use_pallas(backend) or C % 128 or ksub % 128:
-        if _use_pallas(backend):
-            _note_fallback("pq_scan_topk",
-                           f"C={C}, ksub={ksub} not 128-aligned")
+    if not _use_pallas(backend):
         return ref.pq_scan_topk(luts, codes, slot, valid, qp_ok, probe, k)
-    return _pqt_pallas(luts, codes, slot, valid, qp_ok,
-                       probe.astype(jnp.int32), k=k,
+    Cp, ksubp = _ceil(C, 128), _ceil(ksub, 128)
+    lp = jnp.pad(luts, ((0, 0), (0, 0), (0, 0), (0, ksubp - ksub)))
+    cdp = jnp.pad(codes, ((0, 0), (0, 0), (0, Cp - C)))
+    vp = jnp.pad(valid, ((0, 0), (0, Cp - C)))    # pad lanes False
+    return _pqt_pallas(lp, cdp, slot, vp, qp_ok,
+                       probe.astype(jnp.int32), k=k, c=C,
                        interpret=_interpret())
 
 
@@ -275,19 +341,21 @@ def posting_scan_gather(q: jax.Array, vectors: jax.Array,
                         probe: jax.Array, *, backend: str = "auto"):
     """Search phase 2 with in-kernel HBM gather (DESIGN.md §5).
 
-    Kernel path requires d % 128 == 0 and C % 128 == 0 (storage is laid
-    out that way on TPU deployments); otherwise falls back to ref.
+    Alignment-free: d and C zero-pad up to the TPU storage layout here
+    (zero-padding d is fp-exact; padded C lanes slice back off), so any
+    real-world dim serves the fused kernel.  Aligned storage makes the
+    pads no-ops; misaligned storage pays one pool-layout copy per call.
     """
     from .posting_scan import posting_scan_gather as _psg_pallas
     Q, d = q.shape
     M, C, _ = vectors.shape
-    if not _use_pallas(backend) or d % 128 or C % 128:
-        if _use_pallas(backend):
-            _note_fallback("posting_scan_gather",
-                           f"d={d}, C={C} not 128-aligned")
+    if not _use_pallas(backend):
         return ref.posting_scan_gather(q, vectors, slot_valid, vis, probe)
-    raw = _psg_pallas(q, vectors, probe.astype(jnp.int32),
-                      interpret=_interpret())
+    Cp, dp = _ceil(C, 128), _ceil(d, 128)
+    qp = jnp.pad(q, ((0, 0), (0, dp - d)))
+    vecp = jnp.pad(vectors, ((0, 0), (0, Cp - C), (0, dp - d)))
+    raw = _psg_pallas(qp, vecp, probe.astype(jnp.int32),
+                      interpret=_interpret())[:, :, :C]
     ok = slot_valid[probe] & vis[probe][..., None]
     return jnp.where(ok, raw, BIG)
 
@@ -302,9 +370,9 @@ def posting_scan_topk(q: jax.Array, vectors: jax.Array,
     Same inputs as :func:`posting_scan_gather` plus ``k`` and an
     optional per-(query, probe) mask; returns (scores (Q, k) ascending,
     cand (Q, k) int32 flat slot index) — no (Q, P, C) score tensor on
-    the pallas path.  Alignment gates as for ``posting_scan_gather``;
-    misaligned pallas requests fall back with a ``kernel_fallback``
-    obs signal."""
+    the pallas path.  Alignment-free (same padding as
+    ``posting_scan_gather``; padded lanes are masked to +inf in-kernel
+    so the BIG-tie order stays bit-identical to the ref twin)."""
     from .posting_scan import posting_scan_topk as _pst_pallas
     Q, d = q.shape
     M, C, _ = vectors.shape
@@ -314,11 +382,44 @@ def posting_scan_topk(q: jax.Array, vectors: jax.Array,
     if qp_ok is None:
         qp_ok = jnp.ones((Q, P), jnp.int32)
     qp_ok = qp_ok.astype(jnp.int32)
-    if not _use_pallas(backend) or d % 128 or C % 128:
-        if _use_pallas(backend):
-            _note_fallback("posting_scan_topk",
-                           f"d={d}, C={C} not 128-aligned")
+    if not _use_pallas(backend):
         return ref.posting_scan_topk(q, vectors, valid, qp_ok, probe, k)
-    return _pst_pallas(q, vectors, valid, qp_ok,
-                       probe.astype(jnp.int32), k=k,
+    Cp, dp = _ceil(C, 128), _ceil(d, 128)
+    qp = jnp.pad(q, ((0, 0), (0, dp - d)))
+    vecp = jnp.pad(vectors, ((0, 0), (0, Cp - C), (0, dp - d)))
+    vp = jnp.pad(valid, ((0, 0), (0, Cp - C)))    # pad lanes False
+    return _pst_pallas(qp, vecp, vp, qp_ok,
+                       probe.astype(jnp.int32), k=k, c=C,
                        interpret=_interpret())
+
+
+def rerank_topk(q: jax.Array, vectors: jax.Array, tier_spilled: jax.Array,
+                cand: jax.Array, adc: jax.Array, *, k: int,
+                backend: str = "auto"):
+    """Fused exact rerank of the quant plane's ADC survivors.
+
+    q: (Q, d); vectors: (M, C, d); tier_spilled: (M,) bool; cand:
+    (Q, R) int32 flat slot candidates from :func:`pq_scan_topk`; adc:
+    (Q, R) their ADC scores.  Exact-rescores each candidate
+    (``||v||^2 - 2 q.v``), keeps the ADC score for tier-spilled
+    postings (codes-only serving), carries BIG through empty ADC slots,
+    and returns the top-k (scores (Q, k) ascending, cand (Q, k) int32).
+    On the pallas path the candidate rows stream HBM->VMEM one at a
+    time — no (Q, R, d) gather is ever materialized.  Alignment-free
+    (d zero-pads, fp-exact); ties break lowest-ADC-rank-first on both
+    backends, so the pair is bit-identical."""
+    from .rerank import rerank_topk as _rr_pallas
+    Q, d = q.shape
+    M, C, _ = vectors.shape
+    R = cand.shape[1]
+    assert 0 < k <= R, (k, R)
+    cand = cand.astype(jnp.int32)
+    if not _use_pallas(backend):
+        return ref.rerank_topk(q, vectors, tier_spilled, cand, adc, k)
+    dp = _ceil(d, 128)
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, dp - d)))
+    vflat = jnp.pad(vectors.reshape(M * C, d).astype(jnp.float32),
+                    ((0, 0), (0, dp - d)))
+    spilled = tier_spilled[cand // C].astype(jnp.int32)
+    return _rr_pallas(qp, vflat, cand, adc.astype(jnp.float32), spilled,
+                      k=k, interpret=_interpret())

@@ -94,15 +94,18 @@ def _gather_kernel(probe_ref, q_ref, v_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def posting_scan_gather(q: jax.Array, vectors: jax.Array, probe: jax.Array,
                         *, interpret: bool = False) -> jax.Array:
-    """q: (Q, d); vectors: (M, C, d); probe: (Q, P) int32 posting ids.
+    """q: (Q, dp); vectors: (M, Cp, dp); probe: (Q, P) int32 posting ids.
 
-    Returns raw scores (Q, P, C); validity masking is applied by the
-    ops.py wrapper (slot/visibility masks never enter the kernel).
-    d % 128 == 0 and C % 128 == 0 are guaranteed by the wrapper.
+    Returns raw scores (Q, P, Cp); validity masking is applied by the
+    ops.py wrapper (slot/visibility masks never enter the kernel), which
+    also zero-pads d and C up to 128 multiples (zero-padding d is
+    fp-exact for both the norm and the dot) and slices the logical
+    (Q, P, C) block back out — the assertion below never fires.
     """
     Q, d = q.shape
     M, C, _ = vectors.shape
     P = probe.shape[1]
+    assert d % 128 == 0 and C % 128 == 0, (d, C)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(Q, P),
@@ -132,7 +135,7 @@ def posting_scan_gather(q: jax.Array, vectors: jax.Array, probe: jax.Array,
 
 
 def _gather_topk_kernel(probe_ref, ok_ref, q_ref, v_ref, valid_ref,
-                        s_ref, i_ref, *, k):
+                        s_ref, i_ref, *, k, c):
     from .centroid_topk import merge_topk
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -142,39 +145,51 @@ def _gather_topk_kernel(probe_ref, ok_ref, q_ref, v_ref, valid_ref,
         s_ref[...] = jnp.full_like(s_ref, jnp.inf)
         i_ref[...] = jnp.zeros_like(i_ref)
 
-    q = q_ref[...].astype(jnp.float32)            # (1, d)
-    v = v_ref[0].astype(jnp.float32)              # (C, d)
-    C = v.shape[0]
-    vn = jnp.sum(v * v, axis=-1)                  # (C,)
+    q = q_ref[...].astype(jnp.float32)            # (1, dp)
+    v = v_ref[0].astype(jnp.float32)              # (Cp, dp)
+    Cp = v.shape[0]
+    vn = jnp.sum(v * v, axis=-1)                  # (Cp,)
     dots = jax.lax.dot_general(
         v, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )                                             # (C, 1)
-    ok = valid_ref[...] & (ok_ref[i, j] != 0)     # (1, C)
-    score = jnp.where(ok, (vn - 2.0 * dots[:, 0])[None, :], BIG)
-    cand = (jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
-            + probe_ref[i, j] * C)
+    )                                             # (Cp, 1)
+    # slots beyond the LOGICAL capacity ``c`` are wrapper padding: +inf
+    # (never selectable — the wrapper guarantees k <= P*c real
+    # candidates, all <= BIG < inf) keeps the BIG-tie order of real
+    # masked slots intact, and the candidate index uses the logical
+    # stride so flat ids match the ref twin bit-for-bit.
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, Cp), 1)
+    in_lane = lane < c
+    ok = valid_ref[...] & (ok_ref[i, j] != 0) & in_lane   # (1, Cp)
+    score = jnp.where(ok, (vn - 2.0 * dots[:, 0])[None, :],
+                      jnp.where(in_lane, BIG, jnp.inf))
+    cand = lane + probe_ref[i, j] * c
     s, ids = merge_topk(s_ref[...], i_ref[...], score, cand, k)
     s_ref[...] = s
     i_ref[...] = ids
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "c", "interpret"))
 def posting_scan_topk(q: jax.Array, vectors: jax.Array, valid: jax.Array,
                       qp_ok: jax.Array, probe: jax.Array,
-                      *, k: int, interpret: bool = False):
+                      *, k: int, c: int, interpret: bool = False):
     """Fused probe scan + running top-k.
 
-    q: (Q, d); vectors: (M, C, d); valid: (M, C) bool (slot validity &
-    posting visibility, precombined); qp_ok: (Q, P) int32 per-(query,
-    probe) mask; probe: (Q, P) int32.  Returns (scores (Q, k) f32
-    ascending, cand (Q, k) int32 flat slot index ``probe*C + c``);
+    q: (Q, dp); vectors: (M, Cp, dp); valid: (M, Cp) bool (slot validity
+    & posting visibility, precombined; padding lanes False); qp_ok:
+    (Q, P) int32 per-(query, probe) mask; probe: (Q, P) int32.  ``c`` is
+    the LOGICAL posting capacity — lanes in [c, Cp) are wrapper padding,
+    masked in-kernel via an iota-vs-extent mask.  Returns (scores (Q, k)
+    f32 ascending, cand (Q, k) int32 flat slot index ``probe*c + lane``);
     masked candidates carry BIG.  Bit-identical to
-    ``ref.posting_scan_topk`` including tie order.  d % 128 == 0 and
-    C % 128 == 0 are guaranteed by the ops.py wrapper.
+    ``ref.posting_scan_topk`` including tie order.  Storage shapes
+    arrive 128-aligned from the ops.py wrapper (the assertions below
+    never fire).
     """
     Q, d = q.shape
     M, C, _ = vectors.shape
     P = probe.shape[1]
+    assert d % 128 == 0 and C % 128 == 0, (d, C)
+    assert 0 < c <= C, (c, C)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Q, P),
@@ -191,7 +206,7 @@ def posting_scan_topk(q: jax.Array, vectors: jax.Array, valid: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_gather_topk_kernel, k=k),
+        functools.partial(_gather_topk_kernel, k=k, c=c),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((Q, k), jnp.float32),

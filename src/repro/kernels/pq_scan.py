@@ -54,11 +54,14 @@ def _kernel(probe_ref, slot_ref, lut_ref, codes_ref, o_ref):
 def pq_scan_gather(luts: jax.Array, codes: jax.Array, slot: jax.Array,
                    probe: jax.Array, *, interpret: bool = False
                    ) -> jax.Array:
-    """Padded-shape Pallas entry.  C % 128 == 0 and ksub % 128 == 0 are
-    guaranteed by the ops.py wrapper (ref fallback otherwise)."""
+    """Padded-shape Pallas entry.  The ops.py wrapper zero-pads ``C``
+    and ``ksub`` up to 128 multiples (exactly neutral: codes < logical
+    ksub never hit padded lut columns) and slices the logical (Q, P, C)
+    block back out — so the assertions below never fire."""
     Q, V, m, ksub = luts.shape
     M, _, C = codes.shape
     P = probe.shape[1]
+    assert C % 128 == 0 and ksub % 128 == 0, (C, ksub)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Q, P),
@@ -99,7 +102,7 @@ def pq_scan_gather(luts: jax.Array, codes: jax.Array, slot: jax.Array,
 
 
 def _topk_kernel(probe_ref, slot_ref, ok_ref, lut_ref, codes_ref,
-                 valid_ref, s_ref, i_ref, *, k):
+                 valid_ref, s_ref, i_ref, *, k, c):
     from .centroid_topk import merge_topk
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -110,42 +113,54 @@ def _topk_kernel(probe_ref, slot_ref, ok_ref, lut_ref, codes_ref,
         i_ref[...] = jnp.zeros_like(i_ref)
 
     lut = lut_ref[0, 0].astype(jnp.float32)       # (m, ksub)
-    code = codes_ref[0].astype(jnp.int32)         # (m, C)
-    m, C = code.shape
+    code = codes_ref[0].astype(jnp.int32)         # (m, Cp)
+    m, Cp = code.shape
     ksub = lut.shape[1]
-    k_iota = jax.lax.broadcasted_iota(jnp.int32, (C, ksub), 1)
-    acc = jnp.zeros((C,), jnp.float32)
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (Cp, ksub), 1)
+    acc = jnp.zeros((Cp,), jnp.float32)
     for jj in range(m):                           # static unroll, m small
         onehot = (code[jj][:, None] == k_iota).astype(jnp.float32)
         acc = acc + jax.lax.dot_general(
             onehot, lut[jj], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-    ok = valid_ref[...] & (ok_ref[i, j] != 0)     # (1, C)
-    score = jnp.where(ok, acc[None, :], BIG)      # (1, C)
-    cand = (jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
-            + probe_ref[i, j] * C)
+    # lanes beyond the LOGICAL capacity ``c`` are wrapper padding: mask
+    # them to +inf (never selectable: the wrapper guarantees k <= P*c
+    # real candidates, all <= BIG < inf) so they cannot perturb the
+    # BIG-tie order of masked-but-real candidates, and index candidates
+    # with the logical stride so flat ids match the ref twin exactly.
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, Cp), 1)
+    in_lane = lane < c
+    ok = valid_ref[...] & (ok_ref[i, j] != 0) & in_lane   # (1, Cp)
+    score = jnp.where(ok, acc[None, :],
+                      jnp.where(in_lane, BIG, jnp.inf))   # (1, Cp)
+    cand = lane + probe_ref[i, j] * c
     s, ids = merge_topk(s_ref[...], i_ref[...], score, cand, k)
     s_ref[...] = s
     i_ref[...] = ids
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "c", "interpret"))
 def pq_scan_topk(luts: jax.Array, codes: jax.Array, slot: jax.Array,
                  valid: jax.Array, qp_ok: jax.Array, probe: jax.Array,
-                 *, k: int, interpret: bool = False):
+                 *, k: int, c: int, interpret: bool = False):
     """Fused ADC scan + running top-k.
 
-    luts: (Q, V, m, ksub) f32; codes: (M, m, C) uint8; slot: (M,) int32;
-    valid: (M, C) bool (slot_valid & posting visibility, precombined);
-    qp_ok: (Q, P) int32 per-(query, probe) mask; probe: (Q, P) int32.
-    Returns (scores (Q, k) f32 ascending, cand (Q, k) int32 flat slot
-    index ``probe*C + c``); masked candidates carry BIG.  Bit-identical
-    to ``ref.pq_scan_topk`` including tie order (probe-position-major).
-    C % 128 == 0 and ksub % 128 == 0 guaranteed by the ops.py wrapper.
+    luts: (Q, V, m, ksub) f32; codes: (M, m, Cp) uint8; slot: (M,) int32;
+    valid: (M, Cp) bool (slot_valid & posting visibility, precombined,
+    padding lanes False); qp_ok: (Q, P) int32 per-(query, probe) mask;
+    probe: (Q, P) int32.  ``c`` is the LOGICAL posting capacity; lanes
+    in [c, Cp) are wrapper padding, masked in-kernel via an
+    iota-vs-extent mask.  Returns (scores (Q, k) f32 ascending, cand
+    (Q, k) int32 flat slot index ``probe*c + lane``); masked candidates
+    carry BIG.  Bit-identical to ``ref.pq_scan_topk`` including tie
+    order (probe-position-major).  Storage shapes arrive 128-aligned
+    from the ops.py wrapper (assertions below never fire).
     """
     Q, V, m, ksub = luts.shape
     M, _, C = codes.shape
     P = probe.shape[1]
+    assert C % 128 == 0 and ksub % 128 == 0, (C, ksub)
+    assert 0 < c <= C, (c, C)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(Q, P),
@@ -165,7 +180,7 @@ def pq_scan_topk(luts: jax.Array, codes: jax.Array, slot: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_topk_kernel, k=k),
+        functools.partial(_topk_kernel, k=k, c=c),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((Q, k), jnp.float32),

@@ -174,6 +174,31 @@ def posting_scan_topk(queries: jax.Array, vectors: jax.Array,
     return -neg, cand.astype(jnp.int32)
 
 
+def rerank_topk(queries: jax.Array, vectors: jax.Array,
+                tier_spilled: jax.Array, cand: jax.Array,
+                adc: jax.Array, k: int):
+    """Fused exact-rerank oracle (quant plane stage 2).
+
+    queries: (Q, d); vectors: (M, C, d); tier_spilled: (M,) bool; cand:
+    (Q, R) int32 flat slot candidates from ``pq_scan_topk``; adc: (Q, R)
+    their ADC scores.  Exact-rescores each candidate's float row,
+    keeps the ADC score for tier-spilled postings (codes-only serving),
+    carries BIG through empty ADC slots, and returns the top-k
+    (scores (Q, k) ascending, cand (Q, k) int32).  Ties break
+    lowest-ADC-rank-first (``lax.top_k`` over the R row), matching the
+    arrival order of the Pallas twin bit-identically.
+    """
+    M, C, d = vectors.shape
+    q = queries.astype(jnp.float32)
+    cv = vectors.reshape(M * C, d)[cand].astype(jnp.float32)  # (Q, R, d)
+    exact = (jnp.sum(cv * cv, -1)
+             - 2.0 * jnp.einsum("qd,qrd->qr", q, cv))
+    exact = jnp.where(tier_spilled[cand // C], adc, exact)
+    exact = jnp.where(adc < BIG / 2, exact, BIG)
+    neg, pos = jax.lax.top_k(-exact, k)
+    return -neg, jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32)
+
+
 def posting_scan_gather(queries: jax.Array, vectors: jax.Array,
                         slot_valid: jax.Array, vis: jax.Array,
                         probe: jax.Array) -> jax.Array:

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused exact rerank of the quant plane's ADC
+survivors (the second stage of the two-stage PQ search).
+
+After ``pq_scan_topk`` picks the top-R candidates by ADC score, the
+float rerank used to be an XLA gather materialising (Q, R, d) candidate
+rows in HBM, an einsum, two ``where`` fixups and a ``top_k``.  This
+kernel fuses the whole tail: the candidate table is scalar-prefetched
+and each grid step (i, r) DMAs exactly ONE candidate's float row
+HBM->VMEM (Pallas double-buffers consecutive steps), computes
+``||v||^2 - 2 q.v`` on the VPU, substitutes the ADC score for
+tier-spilled candidates (cold-tier plane: their device float tile is
+zeroed, so the ADC score IS their serving score), masks empty ADC slots
+to BIG, and merges into a running per-query top-k carried in the output
+refs (``merge_topk``, the same online-reduction idiom as the other
+fused kernels).  No (Q, R, d) gather and no (Q, R) score row ever hit
+HBM: the kernel writes 2*Q*k words.
+
+    q       : (Q, dp) f32        queries (d zero-padded to 128)
+    vflat   : (M*C, dp) f32      posting pool viewed as flat slot rows
+    cand    : (Q, R) int32       flat slot candidates (prefetched)
+    adc     : (Q, R) f32         the candidates' ADC scores
+    spilled : (Q, R) int32       1 where the candidate's posting is
+                                 tier-spilled (serve the ADC score)
+Output:
+    scores  : (Q, k) f32 ascending;  cand_out : (Q, k) int32
+
+Tie discipline: candidates are visited in ADC-rank order r and the
+running list orders equal scores by arrival, so ties break
+lowest-r-first — exactly ``lax.top_k`` over the (Q, R) exact row, which
+makes the ref twin (``ref.rerank_topk``) bit-identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from .posting_scan import BIG
+
+
+def _kernel(cand_ref, q_ref, v_ref, adc_ref, sp_ref, s_ref, i_ref, *, k):
+    from .centroid_topk import merge_topk
+    i = pl.program_id(0)
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        s_ref[...] = jnp.full_like(s_ref, jnp.inf)
+        i_ref[...] = jnp.zeros_like(i_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (1, dp)
+    v = v_ref[...].astype(jnp.float32)            # (1, dp)
+    adc = adc_ref[0, 0]
+    exact = jnp.sum(v * v) - 2.0 * jnp.sum(q * v)
+    # cold-tier passthrough: spilled candidates keep their ADC score
+    # (their float row is zeroed); empty ADC slots stay BIG so the
+    # final merge's ``score < BIG/2`` id masking keeps working.
+    score = jnp.where(sp_ref[0, 0] != 0, adc, exact)
+    score = jnp.where(adc < BIG / 2, score, BIG)
+    tile_s = jnp.full((1, 1), score, jnp.float32)
+    tile_i = jnp.full((1, 1), cand_ref[i, r], jnp.int32)
+    s, ids = merge_topk(s_ref[...], i_ref[...], tile_s, tile_i, k)
+    s_ref[...] = s
+    i_ref[...] = ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def rerank_topk(q: jax.Array, vflat: jax.Array, cand: jax.Array,
+                adc: jax.Array, spilled: jax.Array,
+                *, k: int, interpret: bool = False):
+    """Padded-shape Pallas entry.  q: (Q, dp); vflat: (M*C, dp); cand:
+    (Q, R) int32 in [0, M*C); adc/spilled: (Q, R).  The ops.py wrapper
+    zero-pads d up to a 128 multiple (fp-exact) — the assertion below
+    never fires.  Returns (scores (Q, k) ascending, cand (Q, k))."""
+    Q, d = q.shape
+    R = cand.shape[1]
+    assert d % 128 == 0, d
+    assert 0 < k <= R, (k, R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, R),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, r, cand: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, r, cand: (cand[i, r], 0)),
+            pl.BlockSpec((1, 1), lambda i, r, cand: (i, r)),
+            pl.BlockSpec((1, 1), lambda i, r, cand: (i, r)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, r, cand: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, r, cand: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand.astype(jnp.int32), q, vflat, adc, spilled.astype(jnp.int32))

@@ -72,9 +72,9 @@ class EmbeddingServer:
         from repro.models.transformer import run_segments
         from repro.models.layers import rms_norm
         x = jnp.take(params["emb"], tokens, axis=0)
-        x, _ = run_segments(params, self.model.cfg, self.model.segments,
-                            x, jnp.arange(tokens.shape[1]),
-                            remat="none")
+        x = run_segments(params, self.model.cfg, self.model.segments,
+                         x, jnp.arange(tokens.shape[1]),
+                         remat="none")
         x = rms_norm(x, params["ln_f"], self.model.cfg.norm_eps)
         return jnp.mean(x, axis=1) @ self.proj
 

@@ -1,6 +1,5 @@
-"""Architecture zoo (pure JAX)."""
-from .config import ModelConfig, MoEConfig, ShapeCell, SHAPE_CELLS, cells_for
+"""Serving embed backbone (pure JAX, attention-only)."""
+from .config import ModelConfig
 from .registry import LM, ARCH_IDS, get_config, get_model
 
-__all__ = ["ModelConfig", "MoEConfig", "ShapeCell", "SHAPE_CELLS",
-           "cells_for", "LM", "ARCH_IDS", "get_config", "get_model"]
+__all__ = ["ModelConfig", "LM", "ARCH_IDS", "get_config", "get_model"]

@@ -1,62 +1,34 @@
-"""Model configuration schema + the assigned input-shape cells."""
+"""Model configuration schema (attention-only; the Mamba/MoE/RWKV
+training zoo this schema once covered is gone with the training stack)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
-
-
-@dataclasses.dataclass(frozen=True)
-class MoEConfig:
-    num_experts: int
-    top_k: int
-    d_ff_expert: int
-    every_k_layers: int = 1          # MoE replaces the FFN every k layers
-    capacity_factor: float = 1.25
-    # pad the expert dimension so EP divides the model axis (dead experts
-    # are masked out of the router); beyond-paper perf fix for expert
-    # counts like granite's 40 on a 16-way mesh (EXPERIMENTS.md §Perf)
-    padded_experts: int = 0
-    # GShard-style local dispatch: tokens compete for per-(group, expert)
-    # capacity and never leave their data shard for dispatch/combine
-    # (set to the data-parallel degree; 1 = global dispatch)
-    dispatch_groups: int = 1
-
-    @property
-    def e_pad(self) -> int:
-        return max(self.num_experts, self.padded_experts)
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
-    """One assigned architecture (exact numbers from the assignment)."""
+    """One architecture of the serving embed backbone."""
 
     name: str
-    family: str                       # dense | encdec | ssm | moe | vlm | hybrid
+    family: str                       # dense | encdec | vlm
     n_layers: int
     d_model: int
-    n_heads: int                      # query heads (0 for attention-free)
+    n_heads: int                      # query heads
     n_kv: int                         # kv heads (GQA)
     d_ff: int
     vocab: int
     head_dim: Optional[int] = None    # default d_model // n_heads
-    qk_norm: bool = False             # qwen3-style
+    qk_norm: bool = False
     rope_theta: float = 10000.0
-    # local/global interleave (gemma3): window size + pattern period;
-    # pattern "LLLLLG" means 5 local then 1 global
+    # local/global interleave: window size + pattern period; pattern
+    # "LLLLLG" means 5 local then 1 global
     sliding_window: Optional[int] = None
     local_global_pattern: Optional[str] = None
-    moe: Optional[MoEConfig] = None
-    # hybrid (jamba): attention every k layers, the rest Mamba
-    attn_every_k: Optional[int] = None
-    mamba_d_state: int = 16
-    mamba_expand: int = 2
-    mamba_conv: int = 4
-    # encoder-decoder (seamless): encoder layer count (decoder = n_layers)
+    # encoder-decoder: encoder layer count (decoder = n_layers)
     encoder_layers: int = 0
     # multimodal stubs: number of prefix embeddings supplied by frontend
     prefix_len: int = 0
-    # rwkv
-    rwkv_head_dim: int = 64
     norm_eps: float = 1e-6
     tie_embeddings: bool = False
 
@@ -76,8 +48,7 @@ class ModelConfig:
     def reduced(self, **overrides) -> "ModelConfig":
         """A tiny same-family config for CPU smoke tests."""
         kw: dict = dict(
-            n_layers=min(self.n_layers, 2 if self.attn_every_k is None
-                         else self.attn_every_k),
+            n_layers=min(self.n_layers, 2),
             d_model=128,
             n_heads=min(self.n_heads, 4) or 0,
             n_kv=min(self.n_kv, 2) or 0,
@@ -87,47 +58,9 @@ class ModelConfig:
             encoder_layers=min(self.encoder_layers, 2),
             prefix_len=min(self.prefix_len, 4),
             sliding_window=(64 if self.sliding_window else None),
-            rwkv_head_dim=32,
         )
-        if self.moe is not None:
-            kw["moe"] = MoEConfig(
-                num_experts=min(self.moe.num_experts, 4),
-                top_k=min(self.moe.top_k, 2),
-                d_ff_expert=64,
-                every_k_layers=self.moe.every_k_layers,
-            )
-        if self.attn_every_k is not None:
-            kw["n_layers"] = self.attn_every_k  # one full hybrid period
         if self.local_global_pattern is not None:
             kw["local_global_pattern"] = self.local_global_pattern
             kw["n_layers"] = len(self.local_global_pattern)
         kw.update(overrides)
         return dataclasses.replace(self, **kw)
-
-
-@dataclasses.dataclass(frozen=True)
-class ShapeCell:
-    """One assigned (input-shape) cell."""
-
-    name: str
-    seq_len: int
-    global_batch: int
-    kind: str                         # "train" | "prefill" | "decode"
-
-
-SHAPE_CELLS = {
-    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
-    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
-    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
-    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
-}
-
-# archs allowed to run long_500k (sub-quadratic decode state; DESIGN.md §6)
-LONG_CONTEXT_ARCHS = ("rwkv6-3b", "jamba-1.5-large-398b", "gemma3-4b")
-
-
-def cells_for(arch_name: str):
-    out = ["train_4k", "prefill_32k", "decode_32k"]
-    if arch_name in LONG_CONTEXT_ARCHS:
-        out.append("long_500k")
-    return out

@@ -140,14 +140,3 @@ def init_mlp(key, d_model, d_ff, n_layers_scale=1.0, dtype=jnp.float32):
 def apply_mlp(p, x):
     return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
 
-
-def softmax_cross_entropy(logits, targets, mask=None):
-    """logits (..., V) f32; targets (...,) int32.  Mean over masked tokens."""
-    logits = logits.astype(jnp.float32)
-    lse = jax.scipy.special.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
-    nll = lse - ll
-    if mask is None:
-        return jnp.mean(nll)
-    mask = mask.astype(jnp.float32)
-    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,22 +1,25 @@
 """Model registry: config -> LM object (init / train_loss / prefill /
-decode_step / input_specs), plus the architecture catalogue."""
+decode_step), plus the architecture catalogue.
+
+The catalogue is inlined here: the serving embed backbone
+(``launch/serve.py``) is the only consumer, and it only ever builds
+``tinyllama-1.1b`` (usually ``reduced=True``).  The old per-arch config
+modules under ``repro/configs/`` are gone with the training stack.
+"""
 from __future__ import annotations
 
 import dataclasses
-import importlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from .config import ModelConfig, ShapeCell, SHAPE_CELLS, cells_for
-from .layers import (Param, axes_of, param, rms_norm, shard,
-                     softmax_cross_entropy, values)
+from .config import ModelConfig
+from .layers import Param, axes_of, param, rms_norm, shard, values
 from .transformer import (SubLayer, init_layer_cache, init_segment,
-                          plan_segments, run_decode, run_segments,
-                          MOE_AUX_COEF)
+                          plan_segments, run_decode, run_segments)
 
-ENC_SRC_LEN = 1024  # audio-frontend stub length (seamless)
+ENC_SRC_LEN = 1024  # audio-frontend stub length (encdec)
 
 
 def chunked_lm_loss(x, head, targets, mask, chunk: int = 1024,
@@ -108,9 +111,9 @@ class LM:
     # -- forward paths (value trees) --------------------------------------
 
     def _encode(self, pv, src):
-        x, _ = run_segments(pv["enc"], self.cfg, self.enc_segments, src,
-                            jnp.arange(src.shape[1]), remat=self.remat,
-                            unroll=self.unroll)
+        x = run_segments(pv["enc"], self.cfg, self.enc_segments, src,
+                         jnp.arange(src.shape[1]), remat=self.remat,
+                         unroll=self.unroll)
         return rms_norm(x, pv["enc"]["ln_f"], self.cfg.norm_eps)
 
     def _inputs(self, pv, batch):
@@ -142,9 +145,9 @@ class LM:
         cfg = self.cfg
         x, enc_out, prefix_len = self._inputs(pv, batch)
         positions = jnp.arange(x.shape[1])
-        x, aux = run_segments(pv, cfg, self.segments, x, positions,
-                              enc_out=enc_out, remat=self.remat,
-                              unroll=self.unroll)
+        x = run_segments(pv, cfg, self.segments, x, positions,
+                         enc_out=enc_out, remat=self.remat,
+                         unroll=self.unroll)
         x = rms_norm(x, pv["ln_f"], cfg.norm_eps)
         if prefix_len:
             x = x[:, prefix_len:]
@@ -153,16 +156,15 @@ class LM:
         loss = chunked_lm_loss(x, self._head(pv),
                                jnp.maximum(targets, 0), mask,
                                vocab_real=cfg.vocab)
-        return loss + MOE_AUX_COEF * aux, {"lm_loss": loss, "moe_aux": aux}
+        return loss, {"lm_loss": loss}
 
     def prefill(self, pv, batch):
         cfg = self.cfg
         x, enc_out, _ = self._inputs(pv, batch)
         positions = jnp.arange(x.shape[1])
-        x, _aux, caches = run_segments(pv, cfg, self.segments, x, positions,
-                                       enc_out=enc_out, remat=self.remat,
-                                       collect_cache=True,
-                                       unroll=self.unroll)
+        x, caches = run_segments(pv, cfg, self.segments, x, positions,
+                                 enc_out=enc_out, remat=self.remat,
+                                 collect_cache=True, unroll=self.unroll)
         x = rms_norm(x, pv["ln_f"], cfg.norm_eps)
         logits = (x[:, -1] @ self._head(pv)).astype(jnp.float32)
         logits = self._mask_pad_vocab(logits)
@@ -204,56 +206,25 @@ class LM:
             lambda: self.init_cache(batch, seq_len, dtype))
         return values(tree), axes_of(tree)
 
-    # -- assigned input-shape cells ---------------------------------------
-
-    def input_specs(self, cell: ShapeCell, dtype=jnp.float32):
-        """(ShapeDtypeStruct tree, logical-axes tree) for one cell."""
-        cfg = self.cfg
-        B, L = cell.global_batch, cell.seq_len
-        i32 = jnp.int32
-        f32 = dtype
-        sds = jax.ShapeDtypeStruct
-        if cell.kind in ("train", "prefill"):
-            L_tok = L
-            batch: Dict[str, Any] = {}
-            ax: Dict[str, Any] = {}
-            if cfg.family == "vlm":
-                P = cfg.prefix_len
-                L_tok = L - P
-                batch["prefix"] = sds((B, P, cfg.d_model), f32)
-                ax["prefix"] = ("batch", None, None)
-            if cfg.family == "encdec":
-                batch["src"] = sds((B, ENC_SRC_LEN, cfg.d_model), f32)
-                ax["src"] = ("batch", None, None)
-            batch["tokens"] = sds((B, L_tok), i32)
-            ax["tokens"] = ("batch", None)
-            if cell.kind == "train":
-                batch["targets"] = sds((B, L_tok), i32)
-                ax["targets"] = ("batch", None)
-            return batch, ax
-        # decode: one token against a seq_len cache
-        cache_vals, cache_ax = self.cache_shapes(B, L, dtype)
-        batch = {"token": sds((B,), i32), "pos": sds((), i32),
-                 "cache": cache_vals}
-        ax = {"token": ("batch",), "pos": (), "cache": cache_ax}
-        return batch, ax
-
 
 # ---------------------------------------------------------------------------
-# catalogue
+# catalogue (inlined; the serving backbone's only arch)
 # ---------------------------------------------------------------------------
 
-ARCH_IDS = [
-    "seamless-m4t-medium", "tinyllama-1.1b", "qwen3-4b", "gemma3-4b",
-    "deepseek-67b", "rwkv6-3b", "granite-moe-3b-a800m",
-    "moonshot-v1-16b-a3b", "llava-next-34b", "jamba-1.5-large-398b",
-]
+_CONFIGS: Dict[str, ModelConfig] = {
+    "tinyllama-1.1b": ModelConfig(
+        name="tinyllama-1.1b", family="dense", n_layers=22, d_model=2048,
+        n_heads=32, n_kv=4, d_ff=5632, vocab=32000),
+}
+
+ARCH_IDS = list(_CONFIGS)
 
 
 def get_config(arch_id: str) -> ModelConfig:
-    mod = importlib.import_module(
-        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
-    return mod.CONFIG
+    if arch_id not in _CONFIGS:
+        raise ValueError(f"unknown arch {arch_id!r}; choose from "
+                         f"{ARCH_IDS}")
+    return _CONFIGS[arch_id]
 
 
 def get_model(arch_id: str, *, reduced: bool = False,

@@ -1,57 +1,42 @@
-"""Unified decoder stack covering the whole architecture zoo.
+"""Decoder stack for the serving embed backbone.
 
 A config is compiled into *segments*: ``(period_descriptors, repeat)``.
 Each period is a tuple of sub-layer descriptors (mixer + ffn kind);
 parameters for the period are stacked over ``repeat`` and the stack is
-driven by ``lax.scan`` (keeps HLO size O(period), not O(layers) — a
-95-layer deepseek lowers as one scanned block).  Heterogeneous patterns
-(gemma3 5 local : 1 global, jamba 1 attn : 7 mamba with MoE every 2)
-become periods with several descriptors.
+driven by ``lax.scan`` (keeps HLO size O(period), not O(layers)).
+Heterogeneous local/global interleaves (5 local : 1 global) become
+periods with several descriptors.
 
 Modes: train (causal LM loss), prefill (returns logits of last position
 + KV caches), decode (one token against caches).
+
+Historically this module also carried Mamba/MoE/RWKV mixers for a
+training architecture zoo; that stack is gone — only the attention
+paths the serving backbone (``launch/serve.py`` via
+``models/registry.py``) can reach remain.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import attention as attn_mod
-from . import mamba as mamba_mod
-from . import moe as moe_mod
-from . import rwkv6 as rwkv_mod
 from .config import ModelConfig
-from .layers import (Param, apply_mlp, init_mlp, param, rms_norm, rope,
-                     shard, softmax_cross_entropy, values, axes_of)
-
-MOE_AUX_COEF = 0.01
+from .layers import Param, apply_mlp, init_mlp, param, rms_norm, rope, shard
 
 
 @dataclasses.dataclass(frozen=True)
 class SubLayer:
-    mixer: str                   # attn | attn_local | mamba | rwkv
-    ffn: str                     # mlp | moe | rwkv_cm
+    mixer: str                   # attn | attn_local
+    ffn: str                     # mlp
     cross: bool = False          # cross-attention (enc-dec decoder)
     causal: bool = True
 
 
 def plan_segments(cfg: ModelConfig) -> List[Tuple[Tuple[SubLayer, ...], int]]:
-    if cfg.family == "ssm":
-        return [((SubLayer("rwkv", "rwkv_cm"),), cfg.n_layers)]
-    if cfg.family == "hybrid":
-        k = cfg.attn_every_k
-        descrs = []
-        for i in range(k):
-            mixer = "attn" if i == k // 2 else "mamba"
-            ffn = "moe" if (i % cfg.moe.every_k_layers
-                            == cfg.moe.every_k_layers - 1) else "mlp"
-            descrs.append(SubLayer(mixer, ffn))
-        assert cfg.n_layers % k == 0
-        return [(tuple(descrs), cfg.n_layers // k)]
     if cfg.local_global_pattern is not None:
         pat = cfg.local_global_pattern
         descrs = tuple(
@@ -63,9 +48,8 @@ def plan_segments(cfg: ModelConfig) -> List[Tuple[Tuple[SubLayer, ...], int]]:
         if tail:
             segs.append(((SubLayer("attn_local", "mlp"),), tail))
         return segs
-    ffn = "moe" if cfg.moe is not None else "mlp"
     cross = cfg.family == "encdec"
-    return [((SubLayer("attn", ffn, cross=cross),), cfg.n_layers)]
+    return [((SubLayer("attn", "mlp", cross=cross),), cfg.n_layers)]
 
 
 # ---------------------------------------------------------------------------
@@ -93,28 +77,12 @@ def _init_sublayer(key, cfg: ModelConfig, d: SubLayer, out_scale):
     ks = jax.random.split(key, 6)
     p: Dict[str, Any] = {"ln1": param(ks[0], (cfg.d_model,), ("embed",),
                                       init="zeros")}
-    if d.mixer in ("attn", "attn_local"):
-        p["attn"] = _init_attn(ks[1], cfg, out_scale)
-    elif d.mixer == "mamba":
-        p["mamba"] = mamba_mod.init_mamba(
-            ks[1], cfg.d_model, cfg.mamba_d_state, cfg.mamba_expand,
-            cfg.mamba_conv, out_scale=0.02 * out_scale)
-    elif d.mixer == "rwkv":
-        p["rwkv_tm"] = rwkv_mod.init_time_mix(
-            ks[1], cfg.d_model, cfg.rwkv_head_dim,
-            out_scale=0.02 * out_scale)
+    p["attn"] = _init_attn(ks[1], cfg, out_scale)
     if d.cross:
         p["ln_x"] = param(ks[2], (cfg.d_model,), ("embed",), init="zeros")
         p["cross"] = _init_attn(ks[3], cfg, out_scale, cross=True)
     p["ln2"] = param(ks[4], (cfg.d_model,), ("embed",), init="zeros")
-    if d.ffn == "mlp":
-        p["mlp"] = init_mlp(ks[5], cfg.d_model, cfg.d_ff, out_scale)
-    elif d.ffn == "moe":
-        p["moe"] = moe_mod.init_moe(ks[5], cfg.d_model, cfg.moe,
-                                    out_scale=0.02 * out_scale)
-    elif d.ffn == "rwkv_cm":
-        p["rwkv_cm"] = rwkv_mod.init_channel_mix(
-            ks[5], cfg.d_model, cfg.d_ff, out_scale=0.02 * out_scale)
+    p["mlp"] = init_mlp(ks[5], cfg.d_model, cfg.d_ff, out_scale)
     return p
 
 
@@ -189,13 +157,7 @@ def _apply_cross(p, cfg: ModelConfig, x, enc_out):
 def _apply_ffn(p, cfg: ModelConfig, x, d: SubLayer):
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     if d.ffn == "mlp":
-        return x + apply_mlp(p["mlp"], h), 0.0
-    if d.ffn == "moe":
-        o, aux = moe_mod.apply_moe(p["moe"], h, cfg.moe)
-        return x + o, aux
-    if d.ffn == "rwkv_cm":
-        o, _ = rwkv_mod.apply_channel_mix(p["rwkv_cm"], h)
-        return x + o, 0.0
+        return x + apply_mlp(p["mlp"], h)
     raise ValueError(d.ffn)
 
 
@@ -220,27 +182,11 @@ def _apply_attn_collect(p, cfg: ModelConfig, x, d: SubLayer, positions):
 
 def _apply_sublayer(p, cfg, x, d: SubLayer, positions, enc_out,
                     collect: bool = False):
-    aux = 0.0
     cache = {}
-    if d.mixer in ("attn", "attn_local"):
-        if collect:
-            x, cache = _apply_attn_collect(p, cfg, x, d, positions)
-        else:
-            x = _apply_attn(p, cfg, x, d, positions)
-    elif d.mixer == "mamba":
-        h = rms_norm(x, p["ln1"], cfg.norm_eps)
-        o, (conv, ssm) = mamba_mod.apply_mamba(p["mamba"], h,
-                                               cfg.mamba_d_state)
-        if collect:
-            cache = {"conv": conv, "ssm": ssm}
-        x = x + o
-    elif d.mixer == "rwkv":
-        h = rms_norm(x, p["ln1"], cfg.norm_eps)
-        o, (wkv, xl) = rwkv_mod.apply_time_mix(p["rwkv_tm"], h,
-                                               cfg.rwkv_head_dim)
-        if collect:
-            cache = {"wkv": wkv, "x_tm": xl}
-        x = x + o
+    if collect:
+        x, cache = _apply_attn_collect(p, cfg, x, d, positions)
+    else:
+        x = _apply_attn(p, cfg, x, d, positions)
     if d.cross and enc_out is not None:
         x = _apply_cross(p, cfg, x, enc_out)
         if collect:
@@ -251,11 +197,8 @@ def _apply_sublayer(p, cfg, x, d: SubLayer, positions, enc_out,
                 B, S, Hkv, hd).transpose(0, 2, 1, 3)
             cache["xv"] = (enc_out @ p["cross"]["wv"]).reshape(
                 B, S, Hkv, hd).transpose(0, 2, 1, 3)
-    if d.mixer == "rwkv" and collect:
-        # channel-mix shift state (x entering the ffn)
-        cache["x_cm"] = rms_norm(x, p["ln2"], cfg.norm_eps)[:, -1]
-    x, aux = _apply_ffn(p, cfg, x, d)
-    return x, aux, cache
+    x = _apply_ffn(p, cfg, x, d)
+    return x, cache
 
 
 def run_segments(params_v, cfg: ModelConfig, segments, x, positions,
@@ -263,22 +206,19 @@ def run_segments(params_v, cfg: ModelConfig, segments, x, positions,
                  collect_cache: bool = False, unroll: bool = False):
     """Forward through all segments.  With ``collect_cache`` the per-layer
     cache entries (stacked over the scan axis) are returned as well."""
-    total_aux = 0.0
     all_caches = []
     for si, (descrs, repeat) in enumerate(segments):
         seg_p = params_v[f"seg{si}"]
 
-        def body(carry, layer_p, descrs=descrs):
-            x, aux = carry
+        def body(x, layer_p, descrs=descrs):
             caches = {}
             for i, d in enumerate(descrs):
-                x, a, c = _apply_sublayer(layer_p[str(i)], cfg, x, d,
-                                          positions, enc_out,
-                                          collect=collect_cache)
-                aux = aux + a
+                x, c = _apply_sublayer(layer_p[str(i)], cfg, x, d,
+                                       positions, enc_out,
+                                       collect=collect_cache)
                 caches[str(i)] = c
             x = shard(x, "batch", None, None)
-            return (x, aux), (caches if collect_cache else None)
+            return x, (caches if collect_cache else None)
 
         if remat != "none" and not collect_cache:
             policy = (jax.checkpoint_policies.nothing_saveable
@@ -286,12 +226,12 @@ def run_segments(params_v, cfg: ModelConfig, segments, x, positions,
                       jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
             body = jax.checkpoint(body, policy=policy,
                                   prevent_cse=False)
-        (x, total_aux), ys = jax.lax.scan(body, (x, total_aux), seg_p,
-                                          unroll=repeat if unroll else 1)
+        x, ys = jax.lax.scan(body, x, seg_p,
+                             unroll=repeat if unroll else 1)
         all_caches.append(ys)
     if collect_cache:
-        return x, total_aux, all_caches
-    return x, total_aux
+        return x, all_caches
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -314,23 +254,6 @@ def init_layer_cache(cfg: ModelConfig, d: SubLayer, batch: int,
                        ("batch", None, None, None))
         c["v"] = Param(jnp.zeros((batch, Hkv, w, hd), dtype),
                        ("batch", None, None, None))
-    elif d.mixer == "mamba":
-        E = cfg.mamba_expand * cfg.d_model
-        c["conv"] = Param(jnp.zeros((batch, cfg.mamba_conv - 1, E), dtype),
-                          ("batch", None, "ffn"))
-        c["ssm"] = Param(jnp.zeros((batch, E, cfg.mamba_d_state),
-                                   jnp.float32), ("batch", "ffn", None))
-    elif d.mixer == "rwkv":
-        H = cfg.d_model // cfg.rwkv_head_dim
-        # head count (d_model/64) rarely divides the model axis; the
-        # state is tiny, so shard by batch only.
-        c["wkv"] = Param(jnp.zeros(
-            (batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
-            ("batch", None, None, None))
-        c["x_tm"] = Param(jnp.zeros((batch, cfg.d_model), dtype),
-                          ("batch", None))
-        c["x_cm"] = Param(jnp.zeros((batch, cfg.d_model), dtype),
-                          ("batch", None))
     if d.cross:
         S_src = max(1, cfg.prefix_len)
         c["xk"] = Param(jnp.zeros((batch, Hkv, S_src, hd), dtype),
@@ -344,41 +267,27 @@ def _decode_sublayer(p, cfg, c, x1, d: SubLayer, pos):
     """x1 (B, D) one token; c = this layer's cache (values)."""
     B, D = x1.shape
     hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
-    if d.mixer in ("attn", "attn_local"):
-        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
-        q = (h @ p["attn"]["wq"]).reshape(B, Hq, hd)
-        k1 = (h @ p["attn"]["wk"]).reshape(B, Hkv, hd)
-        v1 = (h @ p["attn"]["wv"]).reshape(B, Hkv, hd)
-        if cfg.qk_norm:
-            q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
-            k1 = rms_norm(k1, p["attn"]["k_norm"], cfg.norm_eps)
-        posv = jnp.full((1,), pos)
-        q = rope(q[:, :, None], posv[None, None], cfg.rope_theta)[:, :, 0]
-        k1 = rope(k1[:, :, None], posv[None, None], cfg.rope_theta)[:, :, 0]
-        if d.mixer == "attn_local":
-            w = cfg.sliding_window
-            slot = pos % w
-            kc, vc = attn_mod.cache_update(c["k"], c["v"], k1, v1, slot)
-            # ring: entries hold positions (pos-w, pos]; all valid once warm
-            kpos_age = pos - w  # entries with orig pos <= pos-w overwritten
-            o = attn_mod.decode_attention(q, kc, vc, pos, window=None)
-        else:
-            kc, vc = attn_mod.cache_update(c["k"], c["v"], k1, v1, pos)
-            o = attn_mod.decode_attention(q, kc, vc, pos)
-        c = dict(c, k=kc, v=vc)
-        x1 = x1 + o.reshape(B, Hq * hd) @ p["attn"]["wo"]
-    elif d.mixer == "mamba":
-        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
-        o, (conv, ssm) = mamba_mod.decode_mamba(
-            p["mamba"], h, c["conv"], c["ssm"], cfg.mamba_d_state)
-        c = dict(c, conv=conv, ssm=ssm)
-        x1 = x1 + o
-    elif d.mixer == "rwkv":
-        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
-        o, (wkv, xl) = rwkv_mod.decode_time_mix(
-            p["rwkv_tm"], h, c["wkv"], c["x_tm"], cfg.rwkv_head_dim)
-        c = dict(c, wkv=wkv, x_tm=xl)
-        x1 = x1 + o
+    h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(B, Hq, hd)
+    k1 = (h @ p["attn"]["wk"]).reshape(B, Hkv, hd)
+    v1 = (h @ p["attn"]["wv"]).reshape(B, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+        k1 = rms_norm(k1, p["attn"]["k_norm"], cfg.norm_eps)
+    posv = jnp.full((1,), pos)
+    q = rope(q[:, :, None], posv[None, None], cfg.rope_theta)[:, :, 0]
+    k1 = rope(k1[:, :, None], posv[None, None], cfg.rope_theta)[:, :, 0]
+    if d.mixer == "attn_local":
+        w = cfg.sliding_window
+        slot = pos % w
+        kc, vc = attn_mod.cache_update(c["k"], c["v"], k1, v1, slot)
+        # ring: entries hold positions (pos-w, pos]; all valid once warm
+        o = attn_mod.decode_attention(q, kc, vc, pos, window=None)
+    else:
+        kc, vc = attn_mod.cache_update(c["k"], c["v"], k1, v1, pos)
+        o = attn_mod.decode_attention(q, kc, vc, pos)
+    c = dict(c, k=kc, v=vc)
+    x1 = x1 + o.reshape(B, Hq * hd) @ p["attn"]["wo"]
     if d.cross:
         h = rms_norm(x1, p["ln_x"], cfg.norm_eps)
         q = (h @ p["cross"]["wq"]).reshape(B, Hq, hd)
@@ -388,15 +297,7 @@ def _decode_sublayer(p, cfg, c, x1, d: SubLayer, pos):
         x1 = x1 + o.reshape(B, Hq * hd) @ p["cross"]["wo"]
     # ffn
     h = rms_norm(x1, p["ln2"], cfg.norm_eps)
-    if d.ffn == "mlp":
-        x1 = x1 + apply_mlp(p["mlp"], h)
-    elif d.ffn == "moe":
-        o, _ = moe_mod.apply_moe(p["moe"], h[:, None], cfg.moe)
-        x1 = x1 + o[:, 0]
-    elif d.ffn == "rwkv_cm":
-        o, xl = rwkv_mod.decode_channel_mix(p["rwkv_cm"], h, c["x_cm"])
-        c = dict(c, x_cm=xl)
-        x1 = x1 + o
+    x1 = x1 + apply_mlp(p["mlp"], h)
     return x1, c
 
 

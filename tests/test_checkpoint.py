@@ -102,20 +102,3 @@ def test_tiered_snapshot_roundtrips_through_checkpoint(tmp_path):
     np.testing.assert_array_equal(np.asarray(e0.ids), np.asarray(e1.ids))
     assert drv2.memory_tiers() == drv.memory_tiers()
     assert drv2.live_count() == drv.live_count() == 1200
-
-
-@pytest.mark.slow
-def test_train_resume_continuity(tmp_path):
-    """train.py resumes from checkpoint: run 6 steps, kill, resume to 10;
-    the loss trajectory continues (data cursor restored)."""
-    from repro.launch import train as train_mod
-    ck = str(tmp_path / "run")
-    train_mod.main(["--arch", "tinyllama-1.1b", "--reduced", "--steps",
-                    "6", "--batch", "4", "--seq", "32", "--ckpt", ck,
-                    "--ckpt-every", "3", "--log-every", "100"])
-    mgr = CheckpointManager(ck)
-    assert mgr.latest_step() == 6
-    train_mod.main(["--arch", "tinyllama-1.1b", "--reduced", "--steps",
-                    "10", "--batch", "4", "--seq", "32", "--ckpt", ck,
-                    "--ckpt-every", "100", "--log-every", "100"])
-    assert CheckpointManager(ck).latest_step() == 10

@@ -251,6 +251,125 @@ def test_pq_scan_topk_all_invalid(rng):
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
 
 
+# -- alignment-free sweeps: real-world dims (96/100/300), odd posting
+# capacities and non-power-of-two ksub must serve the SAME fused pallas
+# path bit-identically — no silent slow-path, no fallback (PR 10).
+
+
+@pytest.mark.parametrize("Q,M,C,P,d,k", [(1, 7, 33, 3, 96, 5),
+                                         (4, 9, 100, 4, 100, 40),
+                                         (3, 6, 133, 5, 300, 17)])
+def test_posting_scan_topk_misaligned_parity(Q, M, C, P, d, k, rng):
+    q = _int_normal(rng, (Q, d))
+    vectors = _int_normal(rng, (M, C, d), lo=-2, hi=3)
+    slot_valid = jnp.asarray(rng.random((M, C)) > 0.3)
+    vis = jnp.asarray(rng.random(M) > 0.2)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    s1, i1 = ops.posting_scan_topk(q, vectors, slot_valid, vis, probe,
+                                   k=k, backend="ref")
+    s2, i2 = ops.posting_scan_topk(q, vectors, slot_valid, vis, probe,
+                                   k=k, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    # candidate encoding uses the LOGICAL capacity C, not the padded one
+    assert np.all((np.asarray(i2) >= 0) & (np.asarray(i2) < M * C))
+
+
+@pytest.mark.parametrize("Q,M,C,P,d", [(1, 5, 33, 2, 96),
+                                       (6, 12, 100, 4, 100),
+                                       (2, 8, 130, 3, 300)])
+def test_posting_scan_gather_misaligned_parity(Q, M, C, P, d, rng):
+    q = _int_normal(rng, (Q, d))
+    vectors = _int_normal(rng, (M, C, d), lo=-2, hi=3)
+    slot_valid = jnp.asarray(rng.random((M, C)) > 0.3)
+    vis = jnp.asarray(rng.random(M) > 0.2)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    a = ops.posting_scan_gather(q, vectors, slot_valid, vis, probe,
+                                backend="ref")
+    b = ops.posting_scan_gather(q, vectors, slot_valid, vis, probe,
+                                backend="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("Q,V,m,ksub,M,C,P,k",
+                         [(1, 2, 4, 16, 8, 33, 2, 3),
+                          (5, 2, 4, 100, 10, 100, 4, 25),
+                          (3, 3, 8, 200, 7, 133, 3, 64)])
+def test_pq_scan_topk_misaligned_parity(Q, V, m, ksub, M, C, P, k, rng):
+    luts = _int_normal(rng, (Q, V, m, ksub), lo=0, hi=8)
+    codes = jnp.asarray(rng.integers(0, ksub, (M, m, C)).astype(np.uint8))
+    slot = jnp.asarray(rng.integers(0, V, (M,)).astype(np.int32))
+    slot_valid = jnp.asarray(rng.random((M, C)) > 0.3)
+    vis = jnp.asarray(rng.random(M) > 0.2)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    s1, i1 = ops.pq_scan_topk(luts, codes, slot, slot_valid, vis, probe,
+                              k=k, backend="ref")
+    s2, i2 = ops.pq_scan_topk(luts, codes, slot, slot_valid, vis, probe,
+                              k=k, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert np.all((np.asarray(i2) >= 0) & (np.asarray(i2) < M * C))
+
+
+@pytest.mark.parametrize("Q,V,m,ksub,M,C,P", [(1, 2, 4, 16, 6, 33, 2),
+                                              (4, 2, 4, 100, 9, 100, 4),
+                                              (2, 3, 8, 200, 7, 133, 3)])
+def test_pq_scan_gather_misaligned_parity(Q, V, m, ksub, M, C, P, rng):
+    luts = _int_normal(rng, (Q, V, m, ksub), lo=0, hi=8)
+    codes = jnp.asarray(rng.integers(0, ksub, (M, m, C)).astype(np.uint8))
+    slot = jnp.asarray(rng.integers(0, V, (M,)).astype(np.int32))
+    slot_valid = jnp.asarray(rng.random((M, C)) > 0.3)
+    vis = jnp.asarray(rng.random(M) > 0.2)
+    probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
+    a = ops.pq_scan_gather(luts, codes, slot, slot_valid, vis, probe,
+                           backend="ref")
+    b = ops.pq_scan_gather(luts, codes, slot, slot_valid, vis, probe,
+                           backend="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("Q,M,C,d,R,k", [(1, 5, 100, 96, 7, 3),
+                                         (4, 8, 33, 100, 24, 10),
+                                         (3, 6, 128, 128, 64, 64)])
+def test_rerank_topk_parity(Q, M, C, d, R, k, rng):
+    """Fused exact rerank: candidate gather + ||v||^2 - 2 q.v +
+    tier-spill ADC passthrough + top-k, bit-identical to the ref twin —
+    including BIG carry for dead ADC slots and spilled-tile rows."""
+    q = _int_normal(rng, (Q, d))
+    vectors = _int_normal(rng, (M, C, d), lo=-2, hi=3)
+    tier_spilled = jnp.asarray(rng.random(M) > 0.7)
+    cand = jnp.asarray(rng.integers(0, M * C, (Q, R)).astype(np.int32))
+    adc = np.array(_int_normal(rng, (Q, R), lo=0, hi=9))
+    adc[rng.random((Q, R)) > 0.8] = ref.BIG  # dead candidate slots
+    adc = jnp.asarray(adc)
+    s1, i1 = ops.rerank_topk(q, vectors, tier_spilled, cand, adc, k=k,
+                             backend="ref")
+    s2, i2 = ops.rerank_topk(q, vectors, tier_spilled, cand, adc, k=k,
+                             backend="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    # selected indices address the flattened (M*C) vector store
+    assert np.all((np.asarray(i2) >= 0) & (np.asarray(i2) < M * C))
+
+
+def test_rerank_topk_all_dead(rng):
+    """Every ADC slot dead: the fused kernel carries BIG through and
+    both backends agree on the degenerate order."""
+    Q, M, C, d, R, k = 2, 4, 33, 100, 9, 5
+    q = _int_normal(rng, (Q, d))
+    vectors = _int_normal(rng, (M, C, d), lo=-2, hi=3)
+    tier_spilled = jnp.zeros((M,), bool)
+    cand = jnp.asarray(rng.integers(0, M * C, (Q, R)).astype(np.int32))
+    adc = jnp.full((Q, R), ref.BIG, jnp.float32)
+    s1, i1 = ops.rerank_topk(q, vectors, tier_spilled, cand, adc, k=k,
+                             backend="ref")
+    s2, i2 = ops.rerank_topk(q, vectors, tier_spilled, cand, adc, k=k,
+                             backend="pallas")
+    assert np.all(np.asarray(s1) >= ref.BIG / 2)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
 def test_kmeans_assign_large_nonmultiple_k(rng):
     """K > 128 and not a multiple of the 128-lane tile, mask=None: the
     sentinel-row padding must never win an assignment."""
@@ -265,10 +384,11 @@ def test_kmeans_assign_large_nonmultiple_k(rng):
     assert same.mean() > 0.99
 
 
-def test_kernel_fallback_observability(rng):
-    """A pallas-backend request with misaligned storage shapes serves
-    the ref path AND reports it: counter bump per dispatch, one trace
-    event per (kernel, reason)."""
+def test_no_fallback_on_misaligned_shapes(rng):
+    """The kernels are alignment-free: a pallas-backend request with
+    misaligned storage shapes serves the Pallas path and reports NO
+    fallback (the PR-10 contract — this test pinned the opposite
+    behaviour before the wrappers learned to pad)."""
     from repro.obs import Obs
     obs = Obs()
     ops.observe_fallbacks(obs)
@@ -279,33 +399,103 @@ def test_kernel_fallback_observability(rng):
     slot_valid = jnp.ones((M, C), bool)
     vis = jnp.ones((M,), bool)
     probe = jnp.asarray(rng.integers(0, M, (Q, P)).astype(np.int32))
-    ops.pq_scan_gather(luts, codes, slot, slot_valid, vis, probe,
-                       backend="pallas")
-    assert obs.counter("kernel_fallback").value == 1.0
+    sig = ("test-misaligned",)
+    with ops.count_fallback_dispatches(obs, sig):
+        ops.pq_scan_gather(luts, codes, slot, slot_valid, vis, probe,
+                           backend="pallas")
+        q = jnp.asarray(rng.normal(size=(Q, 24)).astype(np.float32))
+        vecs = jnp.asarray(rng.normal(size=(M, C, 24)).astype(np.float32))
+        ops.posting_scan_topk(q, vecs, slot_valid, vis, probe, k=3,
+                              backend="pallas")
+    assert obs.counter("kernel_fallback").value == 0.0
+    assert obs.counter("kernel_fallback_traces").value == 0.0
+    assert obs.events("kernel_fallback") == []
+
+
+def test_fallback_dispatch_counting():
+    """The two-clock fallback plane: ``kernel_fallback_traces`` bumps at
+    note (trace) time, ``kernel_fallback`` bumps per wrapped dispatch by
+    the signature's memoized fallback count — including cache-warm
+    dispatches where the note itself never re-runs."""
+    from repro.obs import Obs
+    obs = Obs()
+    ops.observe_fallbacks(obs)
+    sig = ("plane", "pallas", 100)
+    # first dispatch of this signature: the program "traces" and notes
+    with ops.count_fallback_dispatches(obs, sig):
+        ops._note_fallback("some_kernel", "no pallas lowering")
+        ops._note_fallback("some_kernel", "no pallas lowering")  # same key
+        ops._note_fallback("other_kernel", "int8 unsupported")
+    assert obs.counter("kernel_fallback_traces").value == 3.0
+    assert obs.counter("kernel_fallback").value == 2.0  # distinct keys
     evs = obs.events("kernel_fallback")
-    assert len(evs) == 1 and evs[0]["kernel"] == "pq_scan_gather"
-    # repeat dispatch: counter counts every fallback, the trace event
-    # stays one-per-(kernel, reason)
-    ops.pq_scan_gather(luts, codes, slot, slot_valid, vis, probe,
-                       backend="pallas")
-    assert obs.counter("kernel_fallback").value == 2.0
-    assert len(obs.events("kernel_fallback")) == 1
-    # a different kernel falling back emits its own event
-    q = jnp.asarray(rng.normal(size=(Q, 24)).astype(np.float32))
-    vecs = jnp.asarray(rng.normal(size=(M, C, 24)).astype(np.float32))
-    ops.posting_scan_topk(q, vecs, slot_valid, vis, probe, k=3,
-                          backend="pallas")
-    assert obs.counter("kernel_fallback").value == 3.0
-    assert len(obs.events("kernel_fallback")) == 2
-    # aligned pallas dispatch does NOT report a fallback
-    before = obs.counter("kernel_fallback").value
-    qa = jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32))
-    va = jnp.asarray(rng.normal(size=(4, 128, 128)).astype(np.float32))
-    ops.posting_scan_topk(qa, va, jnp.ones((4, 128), bool),
-                          jnp.ones((4,), bool),
-                          jnp.zeros((2, 2), jnp.int32), k=3,
-                          backend="pallas")
-    assert obs.counter("kernel_fallback").value == before
+    assert {e["kernel"] for e in evs} == {"some_kernel", "other_kernel"}
+    # cache-warm dispatch: no notes run, the memo still counts 2
+    with ops.count_fallback_dispatches(obs, sig):
+        pass
+    assert obs.counter("kernel_fallback").value == 4.0
+    assert obs.counter("kernel_fallback_traces").value == 3.0
+    assert len(obs.events("kernel_fallback")) == 2  # one-shot per key
+    # a different signature captures independently
+    with ops.count_fallback_dispatches(obs, ("plane", "pallas", 128)):
+        pass
+    assert obs.counter("kernel_fallback").value == 4.0
+    # reset clears the memo, the sinks and the one-shot dedup
+    ops.reset_fallback_state()
+    obs2 = Obs()
+    ops.observe_fallbacks(obs2)
+    with ops.count_fallback_dispatches(obs2, sig):
+        ops._note_fallback("some_kernel", "no pallas lowering")
+    assert obs2.counter("kernel_fallback").value == 1.0
+    assert len(obs2.events("kernel_fallback")) == 1
+
+
+def test_driver_close_detaches_fallback_sink():
+    """UBISDriver.close() unregisters its Obs bundle so later notes no
+    longer reach it."""
+    from repro.core import UBISConfig, UBISDriver
+    cfg = UBISConfig(dim=16, max_postings=8, capacity=16, l_min=2,
+                     l_max=12, cache_capacity=16, max_ids=1 << 8,
+                     nprobe=2, use_pallas="ref")
+    rng = np.random.default_rng(0)
+    drv = UBISDriver(cfg, rng.normal(size=(20, 16)).astype(np.float32))
+    drv.close()
+    ops._note_fallback("k", "r")
+    assert drv.obs.counter("kernel_fallback_traces").value == 0.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("use_pq", [False, True])
+def test_e2e_d100_pallas_bit_identical_zero_fallback(use_pq):
+    """End-to-end PR-10 acceptance: a pallas-backend index at d=100
+    (odd capacity, non-power-of-two ksub) answers bit-identically to
+    the ref backend through inserts/deletes/splits, and the fallback
+    counters stay at ZERO — the alignment slow-path hole is closed."""
+    from repro.core import UBISConfig, UBISDriver
+
+    def build(backend):
+        cfg = UBISConfig(dim=100, max_postings=24, capacity=33, l_min=4,
+                         l_max=28, cache_capacity=64, max_ids=1 << 11,
+                         nprobe=6, use_pallas=backend, use_pq=use_pq,
+                         pq_m=4, pq_ksub=100, rerank_k=40)
+        r = np.random.default_rng(7)
+        seed = r.integers(-3, 4, (80, 100)).astype(np.float32)
+        data = r.integers(-3, 4, (300, 100)).astype(np.float32)
+        drv = UBISDriver(cfg, seed)
+        drv.insert(data, np.arange(300))
+        drv.delete(np.arange(0, 300, 7))
+        drv.flush(max_ticks=6)
+        q = r.integers(-3, 4, (5, 100)).astype(np.float32)
+        return drv, drv.search(q, 10)
+
+    drv_p, res_p = build("pallas")
+    _, res_r = build("ref")
+    np.testing.assert_array_equal(np.asarray(res_p.ids),
+                                  np.asarray(res_r.ids))
+    np.testing.assert_array_equal(np.asarray(res_p.scores),
+                                  np.asarray(res_r.scores))
+    assert drv_p.obs.counter("kernel_fallback").value == 0.0
+    assert drv_p.obs.counter("kernel_fallback_traces").value == 0.0
 
 
 def test_flash_attention_matches_chunked(rng):
